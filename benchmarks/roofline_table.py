@@ -1,0 +1,50 @@
+"""Render the §Roofline table from the dry-run result JSONs."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).parent / "results" / "dryrun_final"
+
+
+def load(mesh="pod"):
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def render(mesh="pod") -> str:
+    rows = ["| arch | shape | t_comp | t_mem | t_coll | bottleneck |"
+            " useful | frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skip: {r['reason'][:40]} | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"ERROR | — | — |")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.3f} |"
+            f" {rf['t_memory_s']:.3f} | {rf['t_collective_s']:.3f} |"
+            f" {rf['bottleneck']} | {rf['useful_flops_ratio']:.2f} |"
+            f" {rf['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def main():
+    print("# single-pod (16x16)")
+    print(render("pod"))
+    mp = load("multipod")
+    if mp:
+        print()
+        print("# multi-pod (2x16x16)")
+        print(render("multipod"))
+
+
+if __name__ == "__main__":
+    main()

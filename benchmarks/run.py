@@ -1,0 +1,38 @@
+"""Benchmark runner: one section per paper table/figure.
+
+  fig3      — paper Fig. 3 (axpy/gemv/axpydot, DF vs no-DF, PL vs
+              on-chip, CPU baseline)           [the paper's only figure]
+  kernels   — per-kernel microbenchmarks
+  roofline  — the (arch x shape) roofline table from the dry-run
+              artifacts (run `python -m repro.launch.dryrun --all`
+              first; skipped gracefully if absent)
+
+Prints ``name,n,us_per_call`` CSV per row.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+
+from benchmarks import fig3_routines, kernel_bench, roofline_table
+
+
+def main() -> None:
+    print("== fig3: routine benchmarks (paper Fig. 3) ==")
+    fig3_routines.main(sizes=(2 ** 12, 2 ** 14, 2 ** 16))
+    print()
+    print("== kernel microbenchmarks ==")
+    kernel_bench.main()
+    print()
+    print("== roofline table (from dry-run artifacts) ==")
+    if roofline_table.RESULTS.exists():
+        roofline_table.main()
+    else:
+        print("(no dry-run results yet — run "
+              "`python -m repro.launch.dryrun --all`)")
+
+
+if __name__ == "__main__":
+    main()

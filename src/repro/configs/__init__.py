@@ -1,0 +1,3 @@
+from .base import (ArchConfig, InputShape, MLAConfig, MoEConfig,  # noqa
+                   SHAPES, SSMConfig, shape_cells)
+from .registry import ARCH_NAMES, all_configs, get_config  # noqa

@@ -1,0 +1,167 @@
+"""Distributed ("multi-AIE") BLAS routines via shard_map + collectives.
+
+The paper lists multi-AIE routine implementations — spreading one
+routine across many tiles and AXI ports — as the key future direction
+for performance. On a TPU pod the same idea is: shard the operand
+windows over the device mesh, run the single-core Pallas kernel on each
+shard, and stitch results with ICI collectives (the NoC analogue).
+
+  paxpy   — row-sharded element-wise, zero communication
+  pdot    — row-sharded partial dots + psum           (all-reduce)
+  pgemv   — 2-D sharded A, psum over the column axis  (all-reduce)
+  pgemm   — row×col sharded A@B, no comm ("row_col") or contraction-
+            sharded with psum ("contract")
+  distribute_program — data-parallel execution of a whole level-1
+            dataflow Program (the multi-AXI-port axpydot)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops
+
+
+def _flat_axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def paxpy(mesh: Mesh, alpha, x, y, *, axis="data", interpret=None):
+    """Element-wise: each shard runs the Pallas axpy on its rows."""
+    def local(alpha, xs, ys):
+        return ops.axpy(alpha, xs, ys, interpret=interpret)
+    fn = jax.shard_map(local, mesh=mesh, check_vma=False,
+                       in_specs=(P(), P(axis), P(axis)),
+                       out_specs=P(axis))
+    return fn(jnp.asarray(alpha, x.dtype), x, y)
+
+
+def pdot(mesh: Mesh, x, y, *, axis="data", interpret=None):
+    """Partial dot per shard, then one all-reduce over the axis."""
+    def local(xs, ys):
+        part = ops.dot(xs, ys, interpret=interpret)
+        return jax.lax.psum(part, axis)
+    fn = jax.shard_map(local, mesh=mesh, check_vma=False, in_specs=(P(axis), P(axis)),
+                       out_specs=P())
+    return fn(x, y)
+
+
+def paxpydot(mesh: Mesh, alpha, w, v, u, *, axis="data", interpret=None):
+    """Distributed fused axpydot: the paper's composed routine, spread
+    over the mesh. Each shard runs the FUSED kernel (z never leaves
+    VMEM), followed by a single scalar all-reduce."""
+    def local(alpha, ws, vs, us):
+        part = ops.axpydot(alpha, ws, vs, us, interpret=interpret)
+        return jax.lax.psum(part, axis)
+    fn = jax.shard_map(local, mesh=mesh, check_vma=False,
+                       in_specs=(P(), P(axis), P(axis), P(axis)),
+                       out_specs=P())
+    return fn(jnp.asarray(alpha, jnp.float32), w, v, u)
+
+
+def pgemv(mesh: Mesh, alpha, a, x, beta, y, *, row_axis="data",
+          col_axis="model", interpret=None):
+    """A sharded (rows, cols) over the mesh; x sharded over cols;
+    partial gemv per shard; psum over the column axis; y row-sharded."""
+    def local(alpha, a_s, x_s, beta, y_s):
+        part = ops.gemv(alpha, a_s, x_s, 0.0, jnp.zeros_like(y_s),
+                        interpret=interpret)
+        part = jax.lax.psum(part, col_axis)
+        return part + beta * y_s
+    fn = jax.shard_map(
+        local, mesh=mesh, check_vma=False,
+        in_specs=(P(), P(row_axis, col_axis), P(col_axis), P(),
+                  P(row_axis)),
+        out_specs=P(row_axis))
+    return fn(jnp.asarray(alpha, jnp.float32), a, x,
+              jnp.asarray(beta, jnp.float32), y)
+
+
+def pgemm(mesh: Mesh, a, b, *, strategy="row_col", row_axis="data",
+          col_axis="model", interpret=None, block=256):
+    """Distributed C = A @ B.
+
+    row_col:  A row-sharded, B col-sharded, C (row, col)-sharded; no
+              communication (the systolic-friendly layout).
+    contract: A (row, col)-sharded on (M, K), B K-sharded; psum over the
+              contraction axis; C row-sharded.
+    """
+    kw = dict(block_m=block, block_n=block, block_k=block,
+              interpret=interpret)
+
+    if strategy == "row_col":
+        def local(a_s, b_s):
+            return ops.matmul(a_s, b_s, **kw)
+        fn = jax.shard_map(local, mesh=mesh, check_vma=False,
+                           in_specs=(P(row_axis, None), P(None, col_axis)),
+                           out_specs=P(row_axis, col_axis))
+        return fn(a, b)
+    if strategy == "contract":
+        def local(a_s, b_s):
+            part = ops.matmul(a_s, b_s, **kw)
+            return jax.lax.psum(part, col_axis)
+        fn = jax.shard_map(local, mesh=mesh, check_vma=False,
+                           in_specs=(P(row_axis, col_axis),
+                                     P(col_axis, None)),
+                           out_specs=P(row_axis, None))
+        return fn(a, b)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Whole-program data parallelism (multi-AXI-port programs)
+# ---------------------------------------------------------------------------
+
+
+def distribute_program(prog, mesh: Mesh, *, axis="data"):
+    """Run a level-1 dataflow Program data-parallel over `axis`.
+
+    Vector inputs are row-sharded (each shard is one AIE column's worth
+    of windows), element-wise outputs stay sharded, reduction outputs
+    are psum'd. Only valid for programs whose routines are all level-1
+    (vector) — the paper's multi-AIE scope.
+    """
+    for r in prog.spec.routines:
+        if r.rdef.level != 1:
+            raise ValueError(
+                f"distribute_program supports level-1 programs only; "
+                f"{r.name} is level {r.rdef.level}")
+
+    scalar_names = {pi.name for pi in prog.graph.inputs
+                    if pi.kind == "scalar"}
+    in_names = prog.input_names
+    out_infos = list(prog.graph.outputs)
+
+    def local(*vals):
+        inputs = dict(zip(in_names, vals))
+        outs = prog(**inputs)
+        result = []
+        for o in out_infos:
+            v = outs[o.name]
+            if o.kind == "scalar":
+                v = jax.lax.psum(v, axis)
+            result.append(v)
+        return tuple(result)
+
+    in_specs = tuple(P() if n in scalar_names else P(axis)
+                     for n in in_names)
+    out_specs = tuple(P() if o.kind == "scalar" else P(axis)
+                      for o in out_infos)
+    fn = jax.shard_map(local, mesh=mesh, check_vma=False, in_specs=in_specs,
+                       out_specs=out_specs)
+
+    def run(**inputs):
+        vals = [inputs[n] for n in in_names]
+        outs = fn(*vals)
+        return {o.name: v for o, v in zip(out_infos, outs)}
+
+    return run

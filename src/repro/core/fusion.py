@@ -1,0 +1,98 @@
+"""Fusion planner: partition the dataflow graph into on-chip groups.
+
+A *fusion group* is the TPU realization of the paper's "connected
+routines exchange data on-chip": every routine in a group executes in
+ONE generated Pallas kernel and its intermediate windows live in
+VMEM/VREGs only. Groupable routines are the level-1 element-wise
+producers and reductions (the level-2/3 routines are already single
+fused kernels of their own — their cross-routine edges go through HBM,
+like a NoC hop to a distant column on the AIE array).
+
+Groups must be *convex* in the DAG (no path that leaves the group and
+re-enters), otherwise the fused kernel would deadlock its own input.
+We merge greedily over fusable edges in topological order, rejecting
+merges that would break convexity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from .graph import DataflowGraph
+
+
+@dataclasses.dataclass
+class FusionGroup:
+    nodes: List[str]          # topo-ordered routine names
+    fused: bool               # True if >1 routine runs in one kernel
+
+    def __contains__(self, name):
+        return name in self.nodes
+
+
+def _reachability(graph: DataflowGraph):
+    """descendants[n] = set of nodes reachable from n (excl. n)."""
+    desc = {n: set() for n in graph.nodes}
+    for n in reversed(graph.order):
+        for (src, _), edges in graph.out_edges.items():
+            if src != n:
+                continue
+            for e in edges:
+                desc[n].add(e.dst)
+                desc[n] |= desc[e.dst]
+    return desc
+
+
+def _convex(members: set, desc, graph: DataflowGraph) -> bool:
+    """No outside node lies on a path between two members."""
+    for outside in graph.nodes:
+        if outside in members:
+            continue
+        reaches_member = bool(desc[outside] & members)
+        reached_by_member = any(outside in desc[m] for m in members)
+        if reaches_member and reached_by_member:
+            return False
+    return True
+
+
+def plan(graph: DataflowGraph, *, enable: bool = True) -> List[FusionGroup]:
+    """Partition nodes into topo-ordered fusion groups.
+
+    enable=False produces one group per routine — the paper's
+    "no-dataflow" configuration where every intermediate round-trips
+    through off-chip memory.
+    """
+    parent = {n: n for n in graph.nodes}
+
+    def find(n):
+        while parent[n] != n:
+            parent[n] = parent[parent[n]]
+            n = parent[n]
+        return n
+
+    if enable:
+        desc = _reachability(graph)
+        for e in graph.edges:
+            src_def = graph.nodes[e.src].rdef
+            dst_def = graph.nodes[e.dst].rdef
+            if not (src_def.fusable and dst_def.fusable):
+                continue
+            if not src_def.eltwise:
+                continue  # reductions are sinks: nothing fuses after them
+            ra, rb = find(e.src), find(e.dst)
+            if ra == rb:
+                continue
+            members = {n for n in graph.nodes
+                       if find(n) in (ra, rb)}
+            if not _convex(members, desc, graph):
+                continue
+            parent[rb] = ra
+
+    groups: dict[str, list] = {}
+    for n in graph.order:  # topo order within groups for free
+        groups.setdefault(find(n), []).append(n)
+
+    # order groups topologically: by first member's topo index
+    topo_index = {n: i for i, n in enumerate(graph.order)}
+    ordered = sorted(groups.values(), key=lambda ns: topo_index[ns[0]])
+    return [FusionGroup(nodes=ns, fused=len(ns) > 1) for ns in ordered]

@@ -1,0 +1,160 @@
+"""Dataflow-graph IR: routines are nodes, window/stream handoffs edges.
+
+This is the in-memory analogue of the ADF graph AIEBLAS generates: a
+DAG whose nodes are routine instances and whose edges say "this output
+window feeds that input port on-chip". Program inputs/outputs are the
+unconnected ports (they become PL movers in the paper; HBM-resident
+jit arguments here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+from . import routines as R
+from .spec import ProgramSpec, RoutineSpec, SpecError
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    src: str        # routine name
+    src_port: str
+    dst: str
+    dst_port: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramInput:
+    name: str       # public name
+    routine: str
+    port: str
+    kind: str       # "vector" | "matrix" | "scalar"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramOutput:
+    name: str
+    routine: str
+    port: str
+    kind: str       # "vector" | "matrix" | "scalar"
+
+
+class DataflowGraph:
+    def __init__(self, spec: ProgramSpec):
+        self.spec = spec
+        self.nodes: Mapping[str, RoutineSpec] = {
+            r.name: r for r in spec.routines}
+        self.edges: list[Edge] = []
+        self.in_edges: dict[tuple, Edge] = {}   # (dst, dst_port) -> edge
+        self.out_edges: dict[tuple, list] = {}  # (src, src_port) -> [edges]
+
+        for r in spec.routines:
+            for out_port, target in r.connections.items():
+                tname, tport = target.rsplit(".", 1)
+                e = Edge(r.name, out_port, tname, tport)
+                key = (tname, tport)
+                if key in self.in_edges:
+                    raise SpecError(
+                        f"input port {tname}.{tport} driven twice")
+                self.in_edges[key] = e
+                self.out_edges.setdefault((r.name, out_port), []).append(e)
+                self.edges.append(e)
+
+        self._check_port_kinds()
+        self.order = self._topo_sort()
+        self.inputs = self._collect_inputs()
+        self.outputs = self._collect_outputs()
+
+    # -- validation ---------------------------------------------------
+
+    def _check_port_kinds(self):
+        for e in self.edges:
+            src_def = self.nodes[e.src].rdef
+            dst_def = self.nodes[e.dst].rdef
+            out_kind = src_def.outputs[e.src_port]
+            in_kind = dst_def.inputs[e.dst_port]
+            ok = (out_kind == R.OUT_VEC and in_kind == R.VEC) or \
+                 (out_kind == R.OUT_MAT and in_kind == R.MAT)
+            if not ok:
+                raise SpecError(
+                    f"type mismatch on edge {e.src}.{e.src_port} "
+                    f"({out_kind}) -> {e.dst}.{e.dst_port} ({in_kind}); "
+                    f"scalar outputs cannot feed window ports")
+
+    def _topo_sort(self):
+        indeg = {n: 0 for n in self.nodes}
+        for e in self.edges:
+            indeg[e.dst] += 1
+        ready = sorted(n for n, d in indeg.items() if d == 0)
+        order = []
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for (src, _), edges in sorted(self.out_edges.items()):
+                if src != n:
+                    continue
+                for e in edges:
+                    indeg[e.dst] -= 1
+                    if indeg[e.dst] == 0:
+                        ready.append(e.dst)
+        if len(order) != len(self.nodes):
+            cyclic = sorted(set(self.nodes) - set(order))
+            raise SpecError(f"dataflow graph has a cycle through {cyclic}")
+        return order
+
+    # -- program boundary ---------------------------------------------
+
+    def _collect_inputs(self):
+        inputs = []
+        for name in self.order:
+            r = self.nodes[name]
+            for port, kind in r.rdef.inputs.items():
+                if (name, port) in self.in_edges:
+                    continue  # driven on-chip
+                public = r.input_aliases.get(port, f"{name}.{port}")
+                inputs.append(ProgramInput(public, name, port, kind))
+            for sname, binding in r.scalars.items():
+                if binding.kind == "input":
+                    inputs.append(ProgramInput(
+                        binding.input_name, name, sname, "scalar"))
+        # aliased inputs may be shared (same public name feeding two
+        # routines) — dedupe by public name, keep all (routine, port)
+        # bindings.
+        return inputs
+
+    def _collect_outputs(self):
+        outs = []
+        for name in self.order:
+            r = self.nodes[name]
+            for port, kind in r.rdef.outputs.items():
+                consumed = (name, port) in self.out_edges
+                public = r.output_aliases.get(port)
+                if consumed and public is None:
+                    continue  # internal edge only
+                public = public or f"{name}.{port}"
+                kind_map = {R.OUT_VEC: "vector", R.OUT_MAT: "matrix",
+                            R.OUT_SCALAR: "scalar"}
+                outs.append(ProgramOutput(public, name, port,
+                                          kind_map[kind]))
+        if not outs:
+            raise SpecError("program has no outputs")
+        return outs
+
+    # -- queries used by the fusion planner -----------------------------
+
+    def producer_of(self, node: str, port: str) -> Optional[Edge]:
+        return self.in_edges.get((node, port))
+
+    def consumers_of(self, node: str, port: str):
+        return self.out_edges.get((node, port), [])
+
+    def input_names(self):
+        seen, out = set(), []
+        for i in self.inputs:
+            if i.name not in seen:
+                seen.add(i.name)
+                out.append(i.name)
+        return out
+
+    def output_names(self):
+        return [o.name for o in self.outputs]

@@ -1,0 +1,54 @@
+"""Placement hints: JSON placement constraints -> JAX shardings.
+
+The paper lets users pin kernels to AIE-array regions when the
+compiler's automatic floorplan is slow or bad. The TPU analogue: the
+JSON `placement` field names mesh axes per operand; we turn those into
+NamedShardings that override GSPMD's automatic propagation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .graph import DataflowGraph
+
+
+def placement_shardings(graph: DataflowGraph, mesh: Mesh
+                        ) -> Dict[str, NamedSharding]:
+    """Public-input name -> NamedSharding from routine placement hints.
+
+    An operand with no hint is replicated (GSPMD may still re-shard it;
+    the hint is a constraint, automatic placement is the default —
+    exactly the paper's contract).
+    """
+    out: Dict[str, NamedSharding] = {}
+    for pi in graph.inputs:
+        rspec = graph.nodes[pi.routine]
+        hint = rspec.placement.get(pi.port)
+        if hint is None:
+            continue
+        axes = tuple(a if a in mesh.axis_names else None for a in hint)
+        spec = P(*axes)
+        prev = out.get(pi.name)
+        ns = NamedSharding(mesh, spec)
+        if prev is not None and prev.spec != ns.spec:
+            raise ValueError(
+                f"conflicting placement hints for program input "
+                f"{pi.name!r}: {prev.spec} vs {ns.spec}")
+        out[pi.name] = ns
+    return out
+
+
+def apply_placement(graph: DataflowGraph, mesh: Mesh, inputs: dict,
+                    ) -> dict:
+    """Device-put program inputs according to their placement hints."""
+    shardings = placement_shardings(graph, mesh)
+    placed = {}
+    for name, val in inputs.items():
+        if name in shardings:
+            placed[name] = jax.device_put(val, shardings[name])
+        else:
+            placed[name] = val
+    return placed

@@ -1,0 +1,205 @@
+"""Routine registry — the library's catalogue of BLAS routines.
+
+Mirrors the paper's §III: each routine has a signature (scalar 'stream'
+args + vector/matrix 'window' args), a BLAS level, an element-wise /
+reduction classification that drives the fusion planner, a FLOP/byte
+cost model used by the roofline tool, a pure-jnp reference, a Pallas
+kernel, and — for fusable level-1 routines — an *emitter*: the trace
+function the fused-kernel code generator splices into a generated
+Pallas kernel body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+# port roles
+VEC = "vector"
+MAT = "matrix"
+OUT_VEC = "out_vector"
+OUT_MAT = "out_matrix"
+OUT_SCALAR = "out_scalar"
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutineDef:
+    """Static description of one BLAS routine."""
+    name: str
+    level: int
+    scalars: tuple  # scalar ('stream') parameter names, in order
+    inputs: Mapping[str, str]   # port name -> VEC | MAT
+    outputs: Mapping[str, str]  # port name -> OUT_*
+    # classification for the fusion planner
+    eltwise: bool = False       # pointwise producer (axpy/scal/waxpby)
+    reduction: bool = False     # vector -> scalar sink (dot/asum/nrm2)
+    # codegen hooks
+    emitter: Optional[Callable] = None      # f32 block expr for fusion
+    post: Optional[Callable] = None         # applied after full reduction
+    kernel: Optional[Callable] = None       # standalone Pallas impl
+    reference: Optional[Callable] = None    # pure-jnp oracle
+    # cost model: fn(shapes: dict port->shape) -> (flops, bytes)
+    cost: Optional[Callable] = None
+
+    @property
+    def fusable(self) -> bool:
+        return self.eltwise or self.reduction
+
+
+def _vbytes(*shapes, dtype_bytes=4):
+    n = 0
+    for s in shapes:
+        t = 1
+        for d in s:
+            t *= d
+        n += t
+    return n * dtype_bytes
+
+
+_REGISTRY: dict[str, RoutineDef] = {}
+
+
+def register(rdef: RoutineDef) -> RoutineDef:
+    if rdef.name in _REGISTRY:
+        raise ValueError(f"duplicate routine {rdef.name!r}")
+    _REGISTRY[rdef.name] = rdef
+    return rdef
+
+
+def get(name: str) -> RoutineDef:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown BLAS routine {name!r}; available: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def names() -> Sequence[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Level 1 — element-wise producers
+# ---------------------------------------------------------------------------
+
+register(RoutineDef(
+    name="axpy", level=1, scalars=("alpha",),
+    inputs={"x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    eltwise=True,
+    emitter=lambda s, x, y: s["alpha"] * x + y,
+    kernel=ops.axpy,
+    reference=lambda s, x, y: ref.axpy(s["alpha"], x, y),
+    cost=lambda sh: (2 * sh["x"][0], _vbytes(sh["x"], sh["y"], sh["x"])),
+))
+
+register(RoutineDef(
+    name="scal", level=1, scalars=("alpha",),
+    inputs={"x": VEC}, outputs={"out": OUT_VEC},
+    eltwise=True,
+    emitter=lambda s, x: s["alpha"] * x,
+    kernel=ops.scal,
+    reference=lambda s, x: ref.scal(s["alpha"], x),
+    cost=lambda sh: (sh["x"][0], _vbytes(sh["x"], sh["x"])),
+))
+
+register(RoutineDef(
+    name="waxpby", level=1, scalars=("alpha", "beta"),
+    inputs={"x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    eltwise=True,
+    emitter=lambda s, x, y: s["alpha"] * x + s["beta"] * y,
+    kernel=ops.waxpby,
+    reference=lambda s, x, y: ref.waxpby(s["alpha"], x, s["beta"], y),
+    cost=lambda sh: (3 * sh["x"][0], _vbytes(sh["x"], sh["y"], sh["x"])),
+))
+
+register(RoutineDef(
+    name="vsub", level=1, scalars=(),
+    inputs={"x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    eltwise=True,
+    emitter=lambda s, x, y: x - y,
+    kernel=lambda x, y, **kw: ops.axpy(-1.0, y, x, **kw),
+    reference=lambda s, x, y: x - y,
+    cost=lambda sh: (sh["x"][0], _vbytes(sh["x"], sh["y"], sh["x"])),
+))
+
+register(RoutineDef(
+    name="vmul", level=1, scalars=(),
+    inputs={"x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    eltwise=True,
+    emitter=lambda s, x, y: x * y,
+    kernel=None,  # fused-only helper (Hadamard); ref path when standalone
+    reference=lambda s, x, y: x * y,
+    cost=lambda sh: (sh["x"][0], _vbytes(sh["x"], sh["y"], sh["x"])),
+))
+
+# ---------------------------------------------------------------------------
+# Level 1 — reductions
+# ---------------------------------------------------------------------------
+
+register(RoutineDef(
+    name="dot", level=1, scalars=(),
+    inputs={"x": VEC, "y": VEC}, outputs={"out": OUT_SCALAR},
+    reduction=True,
+    emitter=lambda s, x, y: jnp.sum(x * y),
+    kernel=ops.dot,
+    reference=lambda s, x, y: ref.dot(x, y),
+    cost=lambda sh: (2 * sh["x"][0], _vbytes(sh["x"], sh["y"])),
+))
+
+register(RoutineDef(
+    name="asum", level=1, scalars=(),
+    inputs={"x": VEC}, outputs={"out": OUT_SCALAR},
+    reduction=True,
+    emitter=lambda s, x: jnp.sum(jnp.abs(x)),
+    kernel=ops.asum,
+    reference=lambda s, x: ref.asum(x),
+    cost=lambda sh: (sh["x"][0], _vbytes(sh["x"])),
+))
+
+register(RoutineDef(
+    name="nrm2", level=1, scalars=(),
+    inputs={"x": VEC}, outputs={"out": OUT_SCALAR},
+    reduction=True,
+    emitter=lambda s, x: jnp.sum(x * x),
+    post=jnp.sqrt,
+    kernel=ops.nrm2,
+    reference=lambda s, x: ref.nrm2(x),
+    cost=lambda sh: (2 * sh["x"][0], _vbytes(sh["x"])),
+))
+
+# ---------------------------------------------------------------------------
+# Level 2 / 3 — standalone Pallas kernels (their own fusion groups)
+# ---------------------------------------------------------------------------
+
+register(RoutineDef(
+    name="gemv", level=2, scalars=("alpha", "beta"),
+    inputs={"A": MAT, "x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    kernel=lambda alpha, A, x, beta, y, **kw: ops.gemv(
+        alpha, A, x, beta, y, **kw),
+    reference=lambda s, A, x, y: ref.gemv(s["alpha"], A, x, s["beta"], y),
+    cost=lambda sh: (2 * sh["A"][0] * sh["A"][1],
+                     _vbytes(sh["A"], sh["x"], sh["y"], (sh["A"][0],))),
+))
+
+register(RoutineDef(
+    name="ger", level=2, scalars=("alpha",),
+    inputs={"x": VEC, "y": VEC, "A": MAT}, outputs={"out": OUT_MAT},
+    kernel=lambda alpha, x, y, A, **kw: ops.ger(alpha, x, y, A),
+    reference=lambda s, x, y, A: ref.ger(s["alpha"], x, y, A),
+    cost=lambda sh: (2 * sh["A"][0] * sh["A"][1],
+                     _vbytes(sh["A"], sh["A"], sh["x"], sh["y"])),
+))
+
+register(RoutineDef(
+    name="gemm", level=3, scalars=("alpha", "beta"),
+    inputs={"A": MAT, "B": MAT, "C": MAT}, outputs={"out": OUT_MAT},
+    kernel=lambda alpha, A, B, beta, C, **kw: ops.gemm(
+        alpha, A, B, beta, C, **kw),
+    reference=lambda s, A, B, C: ref.gemm(s["alpha"], A, B, s["beta"], C),
+    cost=lambda sh: (2 * sh["A"][0] * sh["A"][1] * sh["B"][1],
+                     _vbytes(sh["A"], sh["B"], sh["C"], sh["C"])),
+))

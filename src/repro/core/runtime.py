@@ -1,0 +1,180 @@
+"""Runtime façade: JSON spec in, executable jitted program out.
+
+    prog = Program.from_spec(spec_dict_or_json_or_path)
+    beta = prog(alpha=0.5, w=w, v=v, u=u)["my_dot.out"]
+
+Modes (paper Fig. 3 matrix):
+    mode="dataflow" | "nodataflow" | "reference"
+    onchip_data=True  — operands are generated inside the program
+                        (the paper's "no PL" variant: no off-chip reads)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import pathlib
+from typing import Dict, Mapping, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import codegen, fusion, spec as spec_mod
+from .graph import DataflowGraph
+
+
+def _synth_vector(n, dtype, seed):
+    """Deterministic on-chip operand generation (iota-based, cheap)."""
+    i = jnp.arange(n, dtype=jnp.float32)
+    x = jnp.sin(i * 0.001 + seed) + 0.5
+    return x.astype(dtype)
+
+
+def _synth_matrix(m, n, dtype, seed):
+    i = jnp.arange(m * n, dtype=jnp.float32).reshape(m, n)
+    return (jnp.sin(i * 1e-4 + seed) * 0.1).astype(dtype)
+
+
+@dataclasses.dataclass
+class Program:
+    """A compiled AIEBLAS-TPU program."""
+    spec: spec_mod.ProgramSpec
+    graph: DataflowGraph
+    mode: str
+    interpret: Optional[bool]
+    _fn: object = None
+
+    # -- construction ---------------------------------------------------
+
+    @classmethod
+    def from_spec(cls, raw: Union[str, Mapping, pathlib.Path], *,
+                  mode: str = "dataflow", fuse: Optional[bool] = None,
+                  interpret: Optional[bool] = None) -> "Program":
+        pspec = spec_mod.parse(raw)
+        graph = DataflowGraph(pspec)
+        if fuse is None:
+            fuse = mode == "dataflow"
+        groups = fusion.plan(graph, enable=fuse)
+        fn = codegen.emit_program(graph, groups, mode,
+                                  interpret=interpret)
+        prog = cls(spec=pspec, graph=graph, mode=mode,
+                   interpret=interpret, _fn=fn)
+        prog.groups = groups
+        return prog
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def input_names(self):
+        return self.graph.input_names()
+
+    @property
+    def output_names(self):
+        return self.graph.output_names()
+
+    def describe(self) -> str:
+        lines = [f"program {self.spec.name!r} mode={self.mode}"]
+        for gi, g in enumerate(self.groups):
+            kind = "FUSED on-chip group" if g.fused else "kernel"
+            lines.append(f"  group {gi} [{kind}]: {' -> '.join(g.nodes)}")
+        lines.append(f"  inputs:  {self.input_names}")
+        lines.append(f"  outputs: {self.output_names}")
+        return "\n".join(lines)
+
+    # -- execution --------------------------------------------------------
+
+    def __call__(self, **inputs) -> Dict[str, jax.Array]:
+        return self._fn(inputs)
+
+    def jitted(self):
+        fn = self._fn
+
+        @jax.jit
+        def run(inputs):
+            return fn(inputs)
+        return lambda **inputs: run(inputs)
+
+    def synthetic_inputs(self, sizes: Mapping[str, tuple],
+                         seed: float = 0.0) -> Dict[str, jax.Array]:
+        """Generate operands for the 'onchip data' benchmark variant.
+
+        sizes maps public input name -> shape tuple (() for scalars).
+        Returns traced values when called under jit, so generation fuses
+        into the program — no HBM reads for these operands.
+        """
+        out = {}
+        k = 0.0
+        for pi in self.graph.inputs:
+            if pi.name in out:
+                continue
+            shape = sizes[pi.name]
+            if pi.kind == "scalar" or shape == ():
+                out[pi.name] = jnp.float32(1.0 + 0.25 * k + seed)
+            elif len(shape) == 1:
+                out[pi.name] = _synth_vector(shape[0], self.spec.dtype,
+                                             seed + k)
+            else:
+                out[pi.name] = _synth_matrix(shape[0], shape[1],
+                                             self.spec.dtype, seed + k)
+            k += 1.0
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Canned specs (the paper's evaluated programs)
+# ---------------------------------------------------------------------------
+
+AXPYDOT_SPEC = {
+    "name": "axpydot",
+    "dtype": "float32",
+    "routines": [
+        {
+            "blas": "axpy", "name": "zcalc",
+            # z = w - alpha*v == axpy(neg_alpha, v, w) with
+            # neg_alpha = -alpha supplied on the scalar stream.
+            "scalars": {"alpha": {"input": "neg_alpha"}},
+            "inputs": {"x": "v", "y": "w"},
+            "connections": {"out": "zdot.x"},
+        },
+        {
+            "blas": "dot", "name": "zdot",
+            "inputs": {"y": "u"},
+            "outputs": {"out": "beta"},
+        },
+    ],
+}
+
+AXPY_SPEC = {
+    "name": "axpy",
+    "dtype": "float32",
+    "routines": [
+        {"blas": "axpy", "name": "axpy0",
+         "scalars": {"alpha": {"input": "alpha"}},
+         "inputs": {"x": "x", "y": "y"},
+         "outputs": {"out": "out"}},
+    ],
+}
+
+GEMV_SPEC = {
+    "name": "gemv",
+    "dtype": "float32",
+    "routines": [
+        {"blas": "gemv", "name": "gemv0",
+         "scalars": {"alpha": {"input": "alpha"},
+                     "beta": {"input": "beta"}},
+         "inputs": {"A": "A", "x": "x", "y": "y"},
+         "outputs": {"out": "out"}},
+    ],
+}
+
+
+def axpydot_program(**kw) -> Program:
+    return Program.from_spec(AXPYDOT_SPEC, **kw)
+
+
+def axpy_program(**kw) -> Program:
+    return Program.from_spec(AXPY_SPEC, **kw)
+
+
+def gemv_program(**kw) -> Program:
+    return Program.from_spec(GEMV_SPEC, **kw)

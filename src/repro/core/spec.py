@@ -1,0 +1,201 @@
+"""The JSON routine specification — the paper's user-facing interface.
+
+A spec describes WHAT routines the user wants and HOW they connect;
+the generator produces the design (Fig. 1). Faithful superset of the
+AIEBLAS JSON schema:
+
+```json
+{
+  "name": "axpydot",
+  "dtype": "float32",
+  "window_size": 256,            // default block rows (non-functional)
+  "vector_width": 128,           // lane count (non-functional)
+  "routines": [
+    {
+      "blas": "axpy",
+      "name": "my_axpy",
+      "scalars": {"alpha": {"input": "alpha"}},   // or {"value": -1.0}
+      "connections": {"out": "my_dot.x"},         // on-chip edge
+      "window_size": 512,                         // per-routine override
+      "placement": {"x": ["data"], "y": ["data"]} // optional hint
+    },
+    {"blas": "dot", "name": "my_dot"}
+  ]
+}
+```
+
+Unconnected routine inputs become *program inputs* named
+"<routine>.<port>" (aliasable via `"inputs": {"x": "w"}`); unconnected
+outputs become program outputs. Scalars default to program inputs named
+"<routine>.<scalar>".
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Mapping, Optional, Union
+
+import jax.numpy as jnp
+
+from . import routines as R
+
+_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+}
+
+DEFAULT_WINDOW = 256      # block rows — the AIE window-size knob
+DEFAULT_VECTOR_WIDTH = 128  # lanes — the AIE 512-bit vector-width knob
+
+
+class SpecError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarBinding:
+    """A routine scalar is either a literal or a program input stream."""
+    kind: str                 # "value" | "input"
+    value: Optional[float] = None
+    input_name: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutineSpec:
+    blas: str
+    name: str
+    scalars: Mapping[str, ScalarBinding]
+    connections: Mapping[str, str]     # out port -> "routine.port"
+    input_aliases: Mapping[str, str]   # in port  -> program input name
+    output_aliases: Mapping[str, str]  # out port -> program output name
+    window_size: int
+    vector_width: int
+    placement: Mapping[str, tuple]
+
+    @property
+    def rdef(self) -> R.RoutineDef:
+        return R.get(self.blas)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    name: str
+    dtype: "jnp.dtype"
+    routines: tuple
+    window_size: int
+    vector_width: int
+
+    def routine(self, name: str) -> RoutineSpec:
+        for r in self.routines:
+            if r.name == name:
+                return r
+        raise KeyError(name)
+
+
+def _parse_scalar(name, raw) -> ScalarBinding:
+    if isinstance(raw, (int, float)):
+        return ScalarBinding("value", value=float(raw))
+    if isinstance(raw, Mapping):
+        if "value" in raw:
+            return ScalarBinding("value", value=float(raw["value"]))
+        if "input" in raw:
+            return ScalarBinding("input", input_name=str(raw["input"]))
+    raise SpecError(f"bad scalar binding for {name!r}: {raw!r}")
+
+
+def parse(spec: Union[str, Mapping, pathlib.Path]) -> ProgramSpec:
+    """Parse and validate a JSON spec (dict, JSON string, or path)."""
+    if isinstance(spec, pathlib.Path):
+        spec = json.loads(spec.read_text())
+    elif isinstance(spec, str):
+        spec = json.loads(spec)
+    if not isinstance(spec, Mapping):
+        raise SpecError(f"spec must be a mapping, got {type(spec)}")
+
+    name = spec.get("name", "program")
+    dtype_name = spec.get("dtype", "float32")
+    if dtype_name not in _DTYPES:
+        raise SpecError(f"unsupported dtype {dtype_name!r}")
+    g_window = int(spec.get("window_size", DEFAULT_WINDOW))
+    g_vw = int(spec.get("vector_width", DEFAULT_VECTOR_WIDTH))
+    if g_vw % 128 != 0:
+        raise SpecError(
+            f"vector_width must be a multiple of 128 lanes (TPU VPU), "
+            f"got {g_vw}")
+
+    raw_routines = spec.get("routines")
+    if not raw_routines:
+        raise SpecError("spec has no routines")
+
+    seen = set()
+    parsed = []
+    for raw in raw_routines:
+        blas = raw.get("blas")
+        rdef = R.get(blas)  # raises on unknown routine
+        rname = raw.get("name", blas)
+        if rname in seen:
+            raise SpecError(f"duplicate routine name {rname!r}")
+        seen.add(rname)
+
+        scalars = {}
+        raw_scalars = raw.get("scalars", {})
+        for s in rdef.scalars:
+            if s in raw_scalars:
+                scalars[s] = _parse_scalar(s, raw_scalars[s])
+            else:
+                scalars[s] = ScalarBinding("input",
+                                           input_name=f"{rname}.{s}")
+        for s in raw_scalars:
+            if s not in rdef.scalars:
+                raise SpecError(
+                    f"{rname}: routine {blas!r} has no scalar {s!r}")
+
+        conns = dict(raw.get("connections", {}))
+        for port in conns:
+            if port not in rdef.outputs:
+                raise SpecError(
+                    f"{rname}: no output port {port!r} on {blas!r}")
+        in_aliases = dict(raw.get("inputs", {}))
+        for port in in_aliases:
+            if port not in rdef.inputs:
+                raise SpecError(
+                    f"{rname}: no input port {port!r} on {blas!r}")
+        out_aliases = dict(raw.get("outputs", {}))
+        for port in out_aliases:
+            if port not in rdef.outputs:
+                raise SpecError(
+                    f"{rname}: no output port {port!r} on {blas!r}")
+
+        placement = {k: tuple(v) for k, v in raw.get("placement",
+                                                     {}).items()}
+        parsed.append(RoutineSpec(
+            blas=blas, name=rname, scalars=scalars, connections=conns,
+            input_aliases=in_aliases, output_aliases=out_aliases,
+            window_size=int(raw.get("window_size", g_window)),
+            vector_width=int(raw.get("vector_width", g_vw)),
+            placement=placement,
+        ))
+
+    # validate connection targets
+    by_name = {r.name: r for r in parsed}
+    for r in parsed:
+        for out_port, target in r.connections.items():
+            if "." not in target:
+                raise SpecError(
+                    f"{r.name}.{out_port}: connection target must be "
+                    f"'routine.port', got {target!r}")
+            tname, tport = target.rsplit(".", 1)
+            if tname not in by_name:
+                raise SpecError(
+                    f"{r.name}.{out_port}: unknown target routine "
+                    f"{tname!r}")
+            if tport not in by_name[tname].rdef.inputs:
+                raise SpecError(
+                    f"{r.name}.{out_port}: target {tname!r} has no input "
+                    f"port {tport!r}")
+
+    return ProgramSpec(
+        name=name, dtype=_DTYPES[dtype_name], routines=tuple(parsed),
+        window_size=g_window, vector_width=g_vw)

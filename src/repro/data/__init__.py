@@ -1,0 +1,2 @@
+from .pipeline import (EmbeddingStream, SyntheticLM,  # noqa: F401
+                       TokenFileDataset, make_stream)

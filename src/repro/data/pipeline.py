@@ -1,0 +1,108 @@
+"""Data pipeline: deterministic synthetic LM streams + binary token
+files, sequence packing, shard-aware batching.
+
+The synthetic stream is an order-2 Markov chain over the vocab so a
+training run has real signal (loss drops measurably within a few
+hundred steps at 100M scale) while being fully reproducible with no
+external data."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Order-2 Markov chain token stream."""
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    branching: int = 4   # successors per state — lower = easier
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v = self.vocab_size
+        # successor table: state (a,b) hashed -> `branching` candidates
+        self._succ = rng.integers(0, v, size=(4096, self.branching),
+                                  dtype=np.int32)
+
+    def _hash(self, a, b):
+        return (a * 1000003 + b * 10007) % 4096
+
+    def batches(self, start_step: int = 0) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+    def batch_at(self, step: int) -> dict:
+        """Deterministic batch for a global step (restart-safe)."""
+        rng = np.random.default_rng((self.seed, step))
+        b, s, v = self.batch_size, self.seq_len, self.vocab_size
+        toks = np.empty((b, s + 1), np.int32)
+        toks[:, 0] = rng.integers(0, v, size=b)
+        toks[:, 1] = rng.integers(0, v, size=b)
+        choice = rng.integers(0, self.branching, size=(b, s + 1))
+        for t in range(2, s + 1):
+            h = self._hash(toks[:, t - 2], toks[:, t - 1])
+            toks[:, t] = self._succ[h, choice[:, t]]
+        return {"inputs": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+
+@dataclasses.dataclass
+class EmbeddingStream:
+    """Synthetic modality-frontend stub stream (musicgen / llava):
+    precomputed frame/patch embeddings + next-token labels."""
+    d_model: int
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2 = jax.random.split(key)
+        emb = jax.random.normal(
+            k1, (self.batch_size, self.seq_len, self.d_model),
+            dtype=jnp.float32)
+        labels = jax.random.randint(
+            k2, (self.batch_size, self.seq_len), 0, self.vocab_size)
+        return {"inputs": emb, "labels": labels}
+
+
+class TokenFileDataset:
+    """np.memmap-backed binary token file (uint16/uint32), packed into
+    (batch, seq+1) windows; deterministic order with epoch shuffling."""
+
+    def __init__(self, path, seq_len, batch_size, dtype=np.uint16,
+                 seed=0):
+        self.tokens = np.memmap(path, dtype=dtype, mode="r")
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self.seed = seed
+        self.n_windows = (len(self.tokens) - 1) // seq_len
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        idx = rng.integers(0, self.n_windows, size=self.batch_size)
+        s = self.seq_len
+        rows = np.stack([np.asarray(self.tokens[i * s:i * s + s + 1])
+                         for i in idx]).astype(np.int32)
+        return {"inputs": jnp.asarray(rows[:, :-1]),
+                "labels": jnp.asarray(rows[:, 1:])}
+
+
+def make_stream(cfg, *, seq_len: int, batch_size: int, seed: int = 0):
+    """Pick the right stream for an ArchConfig."""
+    if cfg.input_mode == "tokens":
+        return SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                           batch_size=batch_size, seed=seed)
+    return EmbeddingStream(d_model=cfg.d_model,
+                           vocab_size=cfg.vocab_size, seq_len=seq_len,
+                           batch_size=batch_size, seed=seed)

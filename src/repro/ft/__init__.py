@@ -1,0 +1,1 @@
+from .watchdog import HeartbeatMonitor, StragglerWatchdog  # noqa: F401

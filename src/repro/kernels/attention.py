@@ -1,0 +1,112 @@
+"""Fused flash-attention forward as a Pallas TPU kernel.
+
+Attention is the LM instantiation of the paper's dataflow argument: a
+gemm (QKᵀ) → softmax → gemm (PV) chain whose intermediate (the S×S
+score matrix) must never reach HBM. The kernel keeps the running
+max/denominator/accumulator in VMEM scratch across KV windows — the
+on-chip "stream" edge between the composed routines.
+
+Supports causal masking, sliding windows (SWA) and GQA (Hq > Hkv) via
+the K/V BlockSpec index map (no materialized head repetition).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import cdiv, default_interpret, pad_to, pl, pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+_NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  sq, skv, bq, bk, causal, window, scale):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = (qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            + (skv - sq))
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < skv  # zero-padded KV tail
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # fully-masked-so-far rows keep a finite base so exp() stays 0, not nan
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)
+    alpha = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev, _NEG_INF)
+                    - m_safe)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+        p, v_ref[0, 0].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def mha(q, k, v, *, causal=True, window=None, block_q=DEFAULT_BLOCK_Q,
+        block_k=DEFAULT_BLOCK_K, interpret=None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    interpret = default_interpret() if interpret is None else interpret
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = d ** -0.5
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(128, skv))
+    qp = pad_to(q, bq, axis=2)
+    kp = pad_to(k, bk, axis=2)
+    vp = pad_to(v, bk, axis=2)
+    grid = (b, hq, cdiv(qp.shape[2], bq), cdiv(kp.shape[2], bk))
+    kernel = functools.partial(
+        _flash_kernel, sq=sq, skv=skv, bq=bq, bk=bk, causal=causal,
+        window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, qi, ki: (bb, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, qi, ki: (bb, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :sq]

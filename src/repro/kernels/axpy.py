@@ -1,0 +1,72 @@
+"""BLAS level-1 `axpy` (y' = alpha x + y) as a Pallas TPU kernel.
+
+The vector is staged through VMEM in (block_rows, 128) windows — the
+TPU analogue of the paper's AIE window interface — while the scalar
+alpha rides in SMEM (the paper's stream interface for scalars).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import (LANES, as_2d, cdiv, default_interpret, pl,
+                     smem_scalar_spec)
+
+DEFAULT_BLOCK_ROWS = 256  # 256x128 f32 = 128 KiB window per operand
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def _scal_kernel(alpha_ref, x_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...]
+
+
+def _waxpby_kernel(alpha_ref, beta_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + beta_ref[0] * y_ref[...]
+
+
+def _eltwise_call(kernel, scalars, vectors, *, block_rows, interpret):
+    """Shared driver for level-1 element-wise routines on 1-D operands."""
+    x2ds, n = [], None
+    for v in vectors:
+        v2d, n = as_2d(v)
+        x2ds.append(v2d)
+    rows = x2ds[0].shape[0]
+    block_rows = min(block_rows, rows)
+    grid = (cdiv(rows, block_rows),)
+    vec_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[smem_scalar_spec()] * len(scalars) + [vec_spec] * len(x2ds),
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct(x2ds[0].shape, x2ds[0].dtype),
+        interpret=interpret,
+    )(*[jnp.reshape(s, (1,)).astype(x2ds[0].dtype) for s in scalars], *x2ds)
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def axpy(alpha, x, y, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _eltwise_call(_axpy_kernel, [alpha], [x, y],
+                         block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def scal(alpha, x, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _eltwise_call(_scal_kernel, [alpha], [x],
+                         block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def waxpby(alpha, x, beta, y, *, block_rows=DEFAULT_BLOCK_ROWS,
+           interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _eltwise_call(_waxpby_kernel, [alpha, beta], [x, y],
+                         block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,69 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU in interpret mode. `default_interpret()` picks the mode
+from the backend so the same call sites work in both worlds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "pl", "pltpu", "default_interpret", "pad_to", "cdiv",
+    "as_2d", "LANES", "SUBLANES", "smem_scalar_spec",
+]
+
+# TPU vector-register geometry: the VPU operates on (8, 128) f32 tiles,
+# the MXU on 128x128 systolic tiles. These play the role of the AIE's
+# 512-bit vector width in the paper: block shapes must be multiples.
+LANES = 128
+SUBLANES = 8
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def default_interpret() -> bool:
+    """Interpret on anything that is not a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jax.Array, multiple: int, axis: int = 0, value=0):
+    """Zero-pad `axis` of x up to the next multiple."""
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def as_2d(x: jax.Array, lanes: int = LANES):
+    """View a 1-D vector as a zero-padded (rows, lanes) window matrix.
+
+    This is the TPU equivalent of staging an AIE *window*: the lane dim
+    matches the vector unit, the row dim is what the grid strides over.
+    Returns (x2d, original_length).
+    """
+    n = x.shape[0]
+    xp = pad_to(x, lanes, axis=0)
+    return xp.reshape(-1, lanes), n
+
+
+def smem_scalar_spec():
+    """BlockSpec placing a small scalar operand in SMEM (an AIE 'stream')."""
+    return pl.BlockSpec(memory_space=pltpu.SMEM)
+
+
+def jit_kernel(fn=None, **static):
+    """functools.partial(jax.jit, static_argnames=...) convenience."""
+    if fn is None:
+        return functools.partial(jit_kernel, **static)
+    return jax.jit(fn, **static)

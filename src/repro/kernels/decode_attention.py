@@ -1,0 +1,104 @@
+"""Single-token (decode) attention over a KV cache as a Pallas kernel.
+
+Serve-side hot spot: one new query token per sequence attends a long
+KV cache. The kernel walks the cache in (block_k, D) VMEM windows and
+keeps the online-softmax state for all G=Hq/Hkv query heads of a KV
+head in scratch, so the per-step working set is O(block_k·D) regardless
+of context length — this is what makes 32k/500k decode fit.
+
+cache_len rides in SMEM (a scalar 'stream' in the paper's vocabulary)
+and masks the tail + applies the sliding window if any.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import cdiv, default_interpret, pad_to, pl, pltpu
+
+DEFAULT_BLOCK_K = 512
+_NEG_INF = float("-inf")
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, bk, window, scale):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_valid = len_ref[b]
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    mask = kpos < n_valid
+    if window is not None:
+        mask &= kpos >= (n_valid - window)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, _NEG_INF)                 # (G, bk)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)
+    alpha = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev, _NEG_INF)
+                    - m_safe)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+        p, v_ref[0, 0].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     block_k=DEFAULT_BLOCK_K, interpret=None):
+    """q: (B, Hq, D); caches: (B, Hkv, Smax, D); cache_len: (B,) int32."""
+    interpret = default_interpret() if interpret is None else interpret
+    b, hq, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = d ** -0.5
+    bk = min(block_k, max(128, smax))
+    kp = pad_to(k_cache, bk, axis=2)
+    vp = pad_to(v_cache, bk, axis=2)
+    q4 = q.reshape(b, hkv, group, d)
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    kernel = functools.partial(_decode_kernel, bk=bk, window=window,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, cdiv(kp.shape[2], bk)),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, group, d), lambda bb, h, ki: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, ki: (bb, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, ki: (bb, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda bb, h, ki: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len, q4, kp, vp)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,98 @@
+"""BLAS level-1 reductions (dot, asum, nrm2) as Pallas TPU kernels.
+
+Reductions accumulate across sequential grid steps into a single VMEM
+output block — the TPU grid is guaranteed sequential, which is what an
+AIE kernel iterating over incoming windows does on the paper's device.
+Accumulation is always f32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import LANES, as_2d, cdiv, default_interpret, pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    o_ref[0, 0] += jnp.sum(x * y)
+
+
+def _asum_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0, 0] += jnp.sum(jnp.abs(x_ref[...].astype(jnp.float32)))
+
+
+def _sumsq_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[0, 0] += jnp.sum(x * x)
+
+
+def _reduce_call(kernel, vectors, *, block_rows, interpret):
+    from .common import pad_to
+    x2ds = []
+    for v in vectors:
+        v2d, _ = as_2d(v)
+        x2ds.append(v2d)
+    rows = x2ds[0].shape[0]
+    block_rows = min(block_rows, rows)
+    # pad rows to a full block multiple: OOB blocks read NaN in interpret
+    # mode and garbage on HW, which a reduction would sum.
+    x2ds = [pad_to(v, block_rows, axis=0) for v in x2ds]
+    rows = x2ds[0].shape[0]
+    grid = (cdiv(rows, block_rows),)
+    vec_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec_spec] * len(x2ds),
+        # every grid step maps to the same (1,1) block => accumulate
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(*x2ds)
+    return out[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def dot(x, y, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _reduce_call(_dot_kernel, [x, y], block_rows=block_rows,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def asum(x, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _reduce_call(_asum_kernel, [x], block_rows=block_rows,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def nrm2(x, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    ss = _reduce_call(_sumsq_kernel, [x], block_rows=block_rows,
+                      interpret=interpret)
+    return jnp.sqrt(ss)

@@ -1,0 +1,61 @@
+"""BLAS level-2 `gemv` (y' = alpha A x + beta y) as a Pallas TPU kernel.
+
+A is streamed through VMEM in (block_m, block_n) windows; x is staged
+as (block_n, 1) column windows so the inner product runs on the MXU.
+The grid is (M/bm, N/bn) with the N axis innermost: each output block
+accumulates across its row of A windows — the same
+window-at-a-time schedule an AIE gemv kernel uses in the paper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import cdiv, default_interpret, pad_to, pl, smem_scalar_spec
+
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 512
+
+
+def _gemv_kernel(alpha_ref, beta_ref, a_ref, x_ref, y_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = beta_ref[0] * y_ref[...].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += alpha_ref[0] * jnp.dot(
+        a, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def gemv(alpha, a, x, beta, y, *, block_m=DEFAULT_BLOCK_M,
+         block_n=DEFAULT_BLOCK_N, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = a.shape
+    ap = pad_to(pad_to(a, block_m, axis=0), block_n, axis=1)
+    xp = pad_to(x, block_n, axis=0).reshape(-1, 1)
+    yp = pad_to(y, block_m, axis=0).reshape(-1, 1)
+    mp, np_ = ap.shape
+    grid = (cdiv(mp, block_m), cdiv(np_, block_n))
+    out = pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[
+            smem_scalar_spec(),
+            smem_scalar_spec(),
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+        interpret=interpret,
+    )(jnp.reshape(alpha, (1,)).astype(jnp.float32),
+      jnp.reshape(beta, (1,)).astype(jnp.float32), ap, xp, yp)
+    return out[:m, 0].astype(a.dtype)

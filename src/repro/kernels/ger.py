@@ -1,0 +1,51 @@
+"""BLAS level-2 `ger` (A' = alpha x yᵀ + A) as a Pallas TPU kernel.
+
+Rank-1 update: pure bandwidth (read A, write A'); the kernel streams A
+through VMEM in (block_m, block_n) windows while x/y row/column
+windows ride along — the same schedule the paper's AIE gemv generator
+uses, with the write-back path of the PL movers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import cdiv, default_interpret, pad_to, pl, smem_scalar_spec
+
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 256
+
+
+def _ger_kernel(alpha_ref, x_ref, y_ref, a_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)        # (bm, 1)
+    y = y_ref[...].astype(jnp.float32)        # (1, bn)
+    a = a_ref[...].astype(jnp.float32)
+    o_ref[...] = (alpha_ref[0] * x * y + a).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def ger(alpha, x, y, a, *, block_m=DEFAULT_BLOCK_M,
+        block_n=DEFAULT_BLOCK_N, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = a.shape
+    ap = pad_to(pad_to(a, block_m, 0), block_n, 1)
+    xp = pad_to(x, block_m, 0).reshape(-1, 1)
+    yp = pad_to(y, block_n, 0).reshape(1, -1)
+    mp, np_ = ap.shape
+    out = pl.pallas_call(
+        _ger_kernel,
+        grid=(cdiv(mp, block_m), cdiv(np_, block_n)),
+        in_specs=[
+            smem_scalar_spec(),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=interpret,
+    )(jnp.reshape(alpha, (1,)).astype(jnp.float32), xp, yp, ap)
+    return out[:m, :n]

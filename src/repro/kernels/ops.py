@@ -1,0 +1,63 @@
+"""Public jit'd entry points for every kernel in this package.
+
+This module is the library surface the rest of the system (core codegen,
+models, benchmarks) imports. Each op has:
+  - a Pallas implementation (TPU target, interpret-mode on CPU),
+  - a pure-jnp oracle in ref.py with identical semantics.
+
+`axpydot_nodf` is the deliberately *non*-dataflow variant (two separate
+pallas_calls, z round-trips through HBM) used to reproduce the paper's
+w/DF vs w/o-DF comparison.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref  # noqa: F401  (re-exported for convenience)
+from .attention import mha
+from .axpy import axpy, scal, waxpby
+from .axpydot import axpydot
+from .decode_attention import decode_attention
+from .dot import asum, dot, nrm2
+from .ger import ger
+from .gemm import gemm, matmul
+from .gemv import gemv
+
+__all__ = [
+    "axpy", "scal", "waxpby", "dot", "asum", "nrm2", "gemv", "gemm",
+    "matmul", "axpydot", "axpydot_nodf", "gesummv", "atax", "bicgk",
+    "ger",
+    "mha", "decode_attention", "ref",
+]
+
+
+def axpydot_nodf(alpha, w, v, u, **kw):
+    """Non-dataflow axpydot: z is materialized in HBM between the two
+    routine kernels (the paper's 'w/o DF' bar)."""
+    z = axpy(-alpha, v, w, **kw)   # z = w - alpha*v
+    return dot(z, u, **kw)
+
+
+def gesummv(alpha, a, beta, b, x, **kw):
+    """y = alpha A x + beta B x, composed from two gemv windows plus an
+    on-chip accumulation (second gemv accumulates into the first's y)."""
+    y0 = jnp.zeros((a.shape[0],), dtype=a.dtype)
+    y1 = gemv(alpha, a, x, 0.0, y0, **kw)
+    return gemv(beta, b, x, 1.0, y1, **kw)
+
+
+def atax(a, x, **kw):
+    """y = Aᵀ(Ax) composed from two gemv routines."""
+    zeros_m = jnp.zeros((a.shape[0],), dtype=a.dtype)
+    ax = gemv(1.0, a, x, 0.0, zeros_m, **kw)
+    zeros_n = jnp.zeros((a.shape[1],), dtype=a.dtype)
+    return gemv(1.0, a.T, ax, 0.0, zeros_n, **kw)
+
+
+def bicgk(a, p, r, **kw):
+    """q = A p ; s = Aᵀ r."""
+    zeros_m = jnp.zeros((a.shape[0],), dtype=a.dtype)
+    zeros_n = jnp.zeros((a.shape[1],), dtype=a.dtype)
+    q = gemv(1.0, a, p, 0.0, zeros_m, **kw)
+    s = gemv(1.0, a.T, r, 0.0, zeros_n, **kw)
+    return q, s

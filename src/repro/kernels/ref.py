@@ -1,0 +1,172 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated
+against (tests/test_kernels_*.py sweep shapes & dtypes with
+assert_allclose). They are also the "reference" execution path used by
+the model stack on CPU and in the multi-pod dry-run, so they are written
+to be XLA-friendly (no python loops over data).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# BLAS level 1
+# ---------------------------------------------------------------------------
+
+
+def axpy(alpha, x, y):
+    """y' = alpha * x + y  (BLAS saxpy/daxpy)."""
+    return alpha * x + y
+
+
+def scal(alpha, x):
+    """x' = alpha * x."""
+    return alpha * x
+
+
+def dot(x, y):
+    """xᵀ y with f32 accumulation."""
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+
+def asum(x):
+    """Σ|x_i| with f32 accumulation."""
+    return jnp.sum(jnp.abs(x.astype(jnp.float32)))
+
+
+def nrm2(x):
+    """‖x‖₂ with f32 accumulation."""
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def waxpby(alpha, x, beta, y):
+    """w = alpha*x + beta*y (updated-BLAS composite)."""
+    return alpha * x + beta * y
+
+
+# ---------------------------------------------------------------------------
+# BLAS level 2
+# ---------------------------------------------------------------------------
+
+
+def gemv(alpha, a, x, beta, y):
+    """y' = alpha * A @ x + beta * y."""
+    acc = jnp.dot(a.astype(jnp.float32), x.astype(jnp.float32))
+    return (alpha * acc + beta * y.astype(jnp.float32)).astype(a.dtype)
+
+
+def ger(alpha, x, y, a):
+    """A' = alpha * x yᵀ + A (rank-1 update)."""
+    return (alpha * jnp.outer(x, y) + a).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# BLAS level 3
+# ---------------------------------------------------------------------------
+
+
+def gemm(alpha, a, b, beta, c):
+    """C' = alpha * A @ B + beta * C with f32 accumulation."""
+    acc = jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return (alpha * acc + beta * c.astype(jnp.float32)).astype(c.dtype)
+
+
+def matmul(a, b):
+    """Plain C = A @ B, f32 accumulation, output in a.dtype."""
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Composed routines (the paper's dataflow compositions)
+# ---------------------------------------------------------------------------
+
+
+def axpydot(alpha, w, v, u):
+    """Paper Fig. 1: z = w - alpha*v ; beta = zᵀ u."""
+    z = w - alpha * v
+    return jnp.sum(z.astype(jnp.float32) * u.astype(jnp.float32))
+
+
+def gesummv(alpha, a, beta, b, x):
+    """y = alpha*A@x + beta*B@x (updated-BLAS composite)."""
+    af = jnp.dot(a.astype(jnp.float32), x.astype(jnp.float32))
+    bf = jnp.dot(b.astype(jnp.float32), x.astype(jnp.float32))
+    return (alpha * af + beta * bf).astype(a.dtype)
+
+
+def atax(a, x):
+    """y = Aᵀ (A x) (updated-BLAS composite)."""
+    ax = jnp.dot(a.astype(jnp.float32), x.astype(jnp.float32))
+    return jnp.dot(a.astype(jnp.float32).T, ax).astype(a.dtype)
+
+
+def bicgk(a, p, r):
+    """q = A p ; s = Aᵀ r (BiCG kernel, updated-BLAS composite)."""
+    q = jnp.dot(a.astype(jnp.float32), p.astype(jnp.float32))
+    s = jnp.dot(a.astype(jnp.float32).T, r.astype(jnp.float32))
+    return q.astype(a.dtype), s.astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (the LM hot spot: a gemm→softmax→gemm dataflow group)
+# ---------------------------------------------------------------------------
+
+
+def mha(q, k, v, *, causal=True, window=None, scale=None):
+    """Multi-head attention oracle.
+
+    q: (B, Hq, Sq, D), k/v: (B, Hkv, Skv, D). GQA when Hq > Hkv.
+    window: sliding-window size (None = full). Positions are aligned at
+    the end: query i attends keys j with (Skv - Sq + i) >= j when causal.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    scale = (d ** -0.5) if scale is None else scale
+    group = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     scale=None):
+    """Single-new-token attention over a KV cache.
+
+    q: (B, Hq, D); caches: (B, Hkv, Smax, D); cache_len: () or (B,)
+    number of valid cache entries (the new token's K/V already written).
+    """
+    b, hq, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    scale = (d ** -0.5) if scale is None else scale
+    group = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, d)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32))
+    logits = logits * scale
+    kpos = jnp.arange(smax)[None]
+    valid = kpos < jnp.reshape(cache_len, (-1, 1))
+    if window is not None:
+        valid &= kpos >= (jnp.reshape(cache_len, (-1, 1)) - window)
+    logits = jnp.where(valid[:, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

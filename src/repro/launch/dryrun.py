@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input
+shape) cell on the production meshes, record memory/cost analysis and
+roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k [--multipod] [--out benchmarks/results]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod]
+
+The 16x16 single-pod pass feeds the roofline table; the 2x16x16 pass
+proves the "pod" axis shards. Results land in one JSON per cell.
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import pathlib    # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_config, ARCH_NAMES  # noqa: E402
+from repro.configs.base import shape_cells  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.optim import AdamW  # noqa: E402
+from repro.train import (make_prefill_step, make_serve_step,  # noqa: E402
+                         make_train_step, make_train_state)  # noqa: E402
+
+
+def _tree_bytes(tree) -> float:
+    import numpy as np
+    total = 0.0
+    for leaf in jax.tree.leaves(tree):
+        total += float(np.prod(leaf.shape)) * jax.numpy.dtype(
+            leaf.dtype).itemsize
+    return total
+
+
+def lower_cell(cfg, shape, mesh, *, remat=True, style="2d"):
+    """Returns (lowered, model_flops, min_bytes_per_device)."""
+    from repro.models.partition import parallelism_style
+    chips = mesh.size
+    if shape.kind == "train":
+        optim = AdamW()
+        state, sspecs = SP.train_state_struct(cfg, mesh, optim,
+                                              style=style)
+        step = make_train_step(cfg, optim, remat=remat,
+                               grad_specs=sspecs["params"])
+        batch, _ = SP.train_batch_struct(cfg, mesh, shape, style=style)
+        # unavoidable traffic: read+write params & moments, read batch
+        min_bytes = (2.0 * _tree_bytes(state) + _tree_bytes(batch)) \
+            / chips
+        with jax.set_mesh(mesh), parallelism_style(style):
+            lowered = jax.jit(step, donate_argnums=0).lower(state, batch)
+    elif shape.kind == "prefill":
+        pf = make_prefill_step(cfg, max_len=shape.seq_len)
+        params, _ = SP.params_struct(cfg, mesh)
+        inputs, _ = SP.prefill_input_struct(cfg, mesh, shape)
+        min_bytes = (_tree_bytes(params) + _tree_bytes(inputs)) / chips
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(pf).lower(params, inputs)
+    else:  # decode
+        sv = make_serve_step(cfg)
+        params, _ = SP.params_struct(cfg, mesh)
+        caches, _ = SP.cache_struct(cfg, mesh, shape)
+        inp, _ = SP.decode_input_struct(cfg, mesh, shape)
+        pos = jax.ShapeDtypeStruct((), jax.numpy.int32,
+                                   sharding=NamedSharding(mesh, P()))
+        min_bytes = (_tree_bytes(params) + _tree_bytes(caches)) / chips
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(sv, donate_argnums=1).lower(
+                params, caches, inp, pos)
+    return lowered, RL.model_flops_for(cfg, shape), min_bytes
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: pathlib.Path, skip_existing: bool = True,
+             style: str = "2d"):
+    mesh_tag = "multipod" if multi_pod else "pod"
+    if style != "2d":
+        mesh_tag = f"{mesh_tag}-{style}"
+    out = out_dir / f"{arch}__{shape_name}__{mesh_tag}.json"
+    if skip_existing and out.exists():
+        print(f"[skip] {out.name}")
+        return json.loads(out.read_text())
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": "skipped",
+               "reason": "full attention at 500k (DESIGN.md "
+                         "§Arch-applicability)"}
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(rec, indent=1))
+        print(f"[skipped-by-design] {arch} x {shape_name}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+           "chips": chips, "status": "error"}
+    try:
+        lowered, model_flops, min_bytes = lower_cell(
+            cfg, shape, mesh, style=style)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        hlo = compiled.as_text()
+        roof = RL.analyze(compiled, model_flops=model_flops,
+                          chips=chips, min_bytes=min_bytes,
+                          hlo_text=hlo)
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for attr in ("argument_size_in_bytes",
+                         "output_size_in_bytes",
+                         "temp_size_in_bytes",
+                         "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                if hasattr(ma, attr):
+                    mem[attr] = int(getattr(ma, attr))
+        except Exception as e:  # noqa: BLE001
+            mem["error"] = str(e)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": mem,
+            "roofline": roof.as_dict(),
+        })
+        print(f"[ok] {arch} x {shape_name} x {mesh_tag}: "
+              f"bottleneck={roof.bottleneck} "
+              f"frac={roof.roofline_fraction:.3f} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch} x {shape_name} x {mesh_tag}: {rec['error']}")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--style", default="2d", choices=["2d", "fsdp"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    meshes = [args.multipod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            cfg = get_config(arch)
+            for sh in shape_cells(cfg):
+                cells.append((arch, sh.name))
+            if not cfg.supports_long_context:
+                cells.append((arch, "long_500k"))  # records the skip
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_fail = 0
+    for mp in meshes:
+        for arch, sh in cells:
+            rec = run_cell(arch, sh, multi_pod=mp, out_dir=out_dir,
+                           skip_existing=not args.force,
+                           style=args.style)
+            if rec.get("status") in ("ok", "skipped"):
+                n_ok += 1
+            else:
+                n_fail += 1
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,434 @@
+"""Loop-aware HLO cost analyzer.
+
+XLA's module-level cost_analysis() counts a while-loop body ONCE, so a
+scan-over-layers model under-reports FLOPs/bytes/collectives by the
+trip count. This walker parses the SPMD-partitioned optimized HLO text
+(`compiled.as_text()`, per-device shapes), recurses through fusions /
+calls / whiles / conditionals, multiplies loop bodies by their trip
+counts (read from the loop-condition computation's bound constant) and
+accumulates:
+
+  flops       — dot/convolution MACs x2 (the MXU term)
+  hbm_bytes   — operand+result bytes of top-level (fusion-boundary)
+                ops: data that crosses the memory system
+  coll_bytes  — per-device wire bytes of collectives (all-reduce
+                counted 2x for the ring round-trip)
+
+Approximations documented in EXPERIMENTS.md §Roofline: fused interior
+element-wise FLOPs are ignored (bandwidth-dominated), trip counts use
+the max integer constant in the loop condition (exact for lax.scan).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e4m3": 1,
+    "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+    "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16, "tuple": 0, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8e4m3fn|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|"
+    r"s8|u8|s4|u4|pred|c64|c128)\[([0-9,]*)\]")
+
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute",
+                "all-reduce-start", "all-gather-start",
+                "collective-permute-start", "reduce-scatter-start",
+                "all-to-all-start"}
+
+_FREE_OPS = {"parameter", "get-tuple-element", "bitcast", "tuple",
+             "constant", "iota", "after-all", "partition-id",
+             "replica-id", "all-reduce-done", "all-gather-done",
+             "collective-permute-done", "custom-call", "rng",
+             "rng-bit-generator", "get-dimension-size", "domain",
+             "opt-barrier"}
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_bytes_of(m) for m in _SHAPE_RE.finditer(type_str))
+
+
+def _bytes_of(m) -> int:
+    n = 1
+    dims = m.group(2)
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[m.group(1)]
+
+
+def _numel(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_detail: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def __iadd__(self, other):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.coll_bytes += other.coll_bytes
+        for k, v in other.coll_detail.items():
+            self.coll_detail[k] = self.coll_detail.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.hbm_bytes * k,
+                    self.coll_bytes * k,
+                    {kk: v * k for kk, v in self.coll_detail.items()})
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str       # text after the opening paren (operands + attrs)
+    is_root: bool = False
+
+    @property
+    def scope(self) -> str:
+        m = re.search(r'op_name="([^"]*)"', self.rest)
+        return m.group(1) if m else ""
+
+
+class HloModuleCost:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[_Op]] = {}
+        self._parse(hlo_text)
+        self._shape_tables: Dict[str, Dict[str, str]] = {}
+        for cname, ops in self.computations.items():
+            self._shape_tables[cname] = {op.name: op.type_str
+                                         for op in ops}
+        self._memo: Dict[str, Cost] = {}
+        self.entry = self._entry_name
+
+    # -- parsing -----------------------------------------------------------
+
+    def _parse(self, text: str):
+        self._entry_name = None
+        current = None
+        header_re = re.compile(
+            r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*"
+            r"(?:\(.*\))?\s*->.*\{\s*$")
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if current is None:
+                m = header_re.match(stripped)
+                if m and "->" in stripped:
+                    current = m.group(2)
+                    self.computations[current] = []
+                    if m.group(1):
+                        self._entry_name = current
+                continue
+            if stripped == "}":
+                current = None
+                continue
+            m = _OP_RE.match(stripped)
+            if m:
+                self.computations[current].append(
+                    _Op(name=m.group(2), type_str=m.group(3),
+                        opcode=m.group(4), rest=m.group(5),
+                        is_root=bool(m.group(1))))
+
+    _TRANSPARENT = {"bitcast", "reshape", "copy", "transpose",
+                    "convert", "broadcast"}
+
+    def _consumers(self, callee: str) -> Dict[str, List]:
+        table: Dict[str, List] = {}
+        for op in self.computations.get(callee, []):
+            argpart = op.rest.split("),")[0]
+            for operand in _OPERAND_RE.findall(argpart):
+                table.setdefault(operand, []).append(op)
+        return table
+
+    def _slice_bytes_for(self, name: str, consumers, *, depth=0
+                         ) -> Optional[int]:
+        """If `name` is consumed only through (transparent-op chains
+        ending in) dynamic-slice / gather / dus-as-buffer, return the
+        total sliced bytes; else None."""
+        if depth > 8:
+            return None
+        users = consumers.get(name, [])
+        if not users:
+            return 0
+        total = 0
+        for u in users:
+            if u.opcode in ("dynamic-slice", "gather"):
+                total += _type_bytes(u.type_str)
+            elif u.opcode == "dynamic-update-slice":
+                args = _OPERAND_RE.findall(u.rest.split("),")[0])
+                if args and args[0] == name and len(args) > 1:
+                    # buffer operand: traffic = the update region
+                    continue  # update-operand bytes counted separately
+                return None
+            elif u.opcode in self._TRANSPARENT:
+                sub = self._slice_bytes_for(u.name, consumers,
+                                            depth=depth + 1)
+                if sub is None:
+                    return None
+                total += sub
+            else:
+                return None
+        return total
+
+    def _sliced_param_bytes(self, callee: str) -> Dict[int, int]:
+        """Parameter indices consumed ONLY slice-wise in `callee`,
+        mapped to the bytes actually touched."""
+        if not hasattr(self, "_sliced_memo"):
+            self._sliced_memo = {}
+        if callee in self._sliced_memo:
+            return self._sliced_memo[callee]
+        ops = self.computations.get(callee, [])
+        param_names = {}
+        for op in ops:
+            if op.opcode == "parameter":
+                m = re.match(r"(\d+)", op.rest)
+                if m:
+                    param_names[op.name] = int(m.group(1))
+        consumers = self._consumers(callee)
+        out: Dict[int, int] = {}
+        for name, idx in param_names.items():
+            b = self._slice_bytes_for(name, consumers)
+            if b is not None and name in consumers:
+                out[idx] = b
+        self._sliced_memo[callee] = out
+        return out
+
+    def _root_dus_update_bytes(self, callee: str) -> Optional[int]:
+        """If the callee's ROOT is a dynamic-update-slice (the scan
+        stash-write pattern), the fusion result aliases the buffer and
+        only the update region is written."""
+        ops = self.computations.get(callee, [])
+        if not ops:
+            return None
+        roots = [o for o in ops if o.is_root]
+        root = roots[0] if roots else ops[-1]
+        seen = 0
+        while root.opcode in self._TRANSPARENT and seen < 8:
+            args = _OPERAND_RE.findall(root.rest.split("),")[0])
+            prod = {o.name: o for o in ops}
+            if not args or args[0] not in prod:
+                break
+            root = prod[args[0]]
+            seen += 1
+        if root.opcode != "dynamic-update-slice":
+            return None
+        table = {o.name: o.type_str for o in ops}
+        args = _OPERAND_RE.findall(root.rest.split("),")[0])
+        if len(args) > 1 and args[1] in table:
+            return _type_bytes(table[args[1]])
+        return None
+
+    # -- trip counts -------------------------------------------------------
+
+    def _trip_count(self, cond_name: str) -> int:
+        ops = self.computations.get(cond_name, [])
+        best = 1
+        for op in ops:
+            for m in _CONST_INT_RE.finditer(
+                    f"{op.opcode}({op.rest}"):
+                best = max(best, int(m.group(1)))
+        return best
+
+    # -- cost --------------------------------------------------------------
+
+    def cost_of(self, cname: str) -> Cost:
+        if cname in self._memo:
+            return self._memo[cname]
+        total = Cost()
+        self._memo[cname] = total      # cycle guard (shouldn't happen)
+        table = self._shape_tables.get(cname, {})
+        for op in self.computations.get(cname, []):
+            total += self._op_cost(op, table)
+        self._memo[cname] = total
+        return total
+
+    def _operand_types(self, op: _Op, table) -> List[str]:
+        # operand names appear before attrs; attrs contain '=' — cut at
+        # first attr
+        argpart = op.rest.split("),")[0]
+        names = _OPERAND_RE.findall(argpart)
+        return [table[n] for n in names if n in table]
+
+    def _op_cost(self, op: _Op, table) -> Cost:
+        kind = op.opcode
+        c = Cost()
+        if kind in _FREE_OPS:
+            if kind == "custom-call" and "topk" not in op.rest:
+                c.hbm_bytes = _type_bytes(op.type_str)
+            return c
+        if kind == "while":
+            cond = _COND_RE.search(op.rest)
+            body = _BODY_RE.search(op.rest)
+            trip = self._trip_count(cond.group(1)) if cond else 1
+            inner = Cost()
+            if body:
+                inner += self.cost_of(body.group(1))
+            if cond:
+                inner += self.cost_of(cond.group(1))
+            return inner.scaled(trip)
+        if kind == "conditional":
+            m = _BRANCHES_RE.search(op.rest)
+            if m:
+                branches = [b.strip().lstrip("%")
+                            for b in m.group(1).split(",")]
+                costs = [self.cost_of(b) for b in branches if
+                         b in self.computations]
+                if costs:
+                    # worst case branch
+                    best = max(costs, key=lambda x: x.flops
+                               + x.hbm_bytes)
+                    return best
+            return c
+        if kind in ("fusion", "call", "async-start"):
+            m = _CALLS_RE.search(op.rest)
+            callee = m.group(1) if m and m.group(1) in \
+                self.computations else None
+            if callee:
+                inner = self.cost_of(callee)
+                if kind == "fusion":
+                    # fused interior: values live in registers — only
+                    # dot FLOPs and collectives count, not byte traffic
+                    inner = Cost(inner.flops, 0.0, inner.coll_bytes,
+                                 dict(inner.coll_detail))
+                c += inner
+            # fusion boundary traffic: result + operands, but an operand
+            # consumed ONLY through dynamic-slice/gather inside the
+            # callee is read slice-wise, not wholesale (this is how a
+            # scan body reads one layer of stacked weights), and a
+            # root dynamic-update-slice writes only the update region
+            # (the scan stash-write pattern).
+            dus = self._root_dus_update_bytes(callee) if callee else None
+            if dus is not None:
+                c.hbm_bytes += dus
+            else:
+                c.hbm_bytes += _type_bytes(op.type_str)
+            sliced = self._sliced_param_bytes(callee) if callee else {}
+            for i, t in enumerate(self._operand_types(op, table)):
+                if i in sliced:
+                    c.hbm_bytes += min(sliced[i], _type_bytes(t))
+                else:
+                    c.hbm_bytes += _type_bytes(t)
+            return c
+        if kind in _COLLECTIVES:
+            base = kind.replace("-start", "")
+            out_b = _type_bytes(op.type_str)
+            in_b = sum(_type_bytes(t)
+                       for t in self._operand_types(op, table))
+            wire = max(out_b, in_b)
+            if base == "all-reduce":
+                wire *= 2
+            c.coll_bytes = wire
+            c.coll_detail = {base: float(wire)}
+            c.hbm_bytes = out_b + in_b
+            return c
+        if kind == "dot":
+            types = self._operand_types(op, table)
+            out_numel = _numel(op.type_str)
+            k_prod = 1
+            m = _CONTRACT_RE.search(op.rest)
+            if m and types:
+                lhs_m = _SHAPE_RE.search(types[0])
+                if lhs_m and lhs_m.group(2):
+                    lhs_dims = [int(d) for d in
+                                lhs_m.group(2).split(",")]
+                    idxs = [int(i) for i in m.group(1).split(",")
+                            if i != ""]
+                    for i in idxs:
+                        if i < len(lhs_dims):
+                            k_prod *= lhs_dims[i]
+            c.flops = 2.0 * out_numel * k_prod
+            c.hbm_bytes = _type_bytes(op.type_str) + sum(
+                _type_bytes(t) for t in types)
+            return c
+        if kind == "convolution":
+            out_numel = _numel(op.type_str)
+            types = self._operand_types(op, table)
+            k_numel = _numel(types[1]) if len(types) > 1 else 1
+            c.flops = 2.0 * out_numel * k_numel  # upper bound
+            c.hbm_bytes = _type_bytes(op.type_str) + sum(
+                _type_bytes(t) for t in types)
+            return c
+        if kind in ("dynamic-slice", "gather"):
+            # reads only the sliced region (~= output size)
+            c.hbm_bytes = 2.0 * _type_bytes(op.type_str)
+            return c
+        if kind in ("dynamic-update-slice", "scatter"):
+            # writes only the update region; result aliases the buffer
+            types = self._operand_types(op, table)
+            upd = _type_bytes(types[1]) if len(types) > 1 else 0
+            c.hbm_bytes = 2.0 * upd
+            return c
+        # generic top-level op: move operands + result
+        c.hbm_bytes = _type_bytes(op.type_str) + sum(
+            _type_bytes(t) for t in self._operand_types(op, table))
+        if kind in ("exponential", "tanh", "log", "rsqrt", "sqrt",
+                    "divide", "power", "logistic", "add", "multiply",
+                    "subtract", "maximum", "minimum", "compare",
+                    "select", "reduce", "negate", "convert", "and",
+                    "or", "abs", "floor"):
+            c.flops = float(_numel(op.type_str))
+        return c
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            # fall back: biggest computation
+            self.entry = max(self.computations,
+                             key=lambda c: len(self.computations[c]))
+        return self.cost_of(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloModuleCost(hlo_text).total()
+
+
+def scope_hbm_bytes(mod: "HloModuleCost", needle: str) -> float:
+    """Loop-trip-scaled HBM bytes of ops whose op_name metadata
+    contains `needle` (jax.named_scope tag). Used to quantify what a
+    fused Pallas kernel would remove from the memory term."""
+    total = [0.0]
+
+    def walk(cname, mult):
+        table = mod._shape_tables.get(cname, {})
+        for op in mod.computations.get(cname, []):
+            if op.opcode == "while":
+                cond = _COND_RE.search(op.rest)
+                body = _BODY_RE.search(op.rest)
+                trip = mod._trip_count(cond.group(1)) if cond else 1
+                if body:
+                    walk(body.group(1), mult * trip)
+            elif needle in op.scope:
+                total[0] += mod._op_cost(op, table).hbm_bytes * mult
+
+    walk(mod.entry or "", 1.0)
+    return total[0]

@@ -1,0 +1,94 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation. The dry-run lowers
+train_step / serve_step / prefill against exactly these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model as M
+from repro.models import sharding as S
+from repro.optim import AdamW
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _shard_tree(mesh, tree, specs):
+    return jax.tree.map(
+        lambda leaf, spec: _sds(leaf.shape, leaf.dtype,
+                                NamedSharding(mesh, spec)),
+        tree, specs)
+
+
+def params_struct(cfg: ArchConfig, mesh: Mesh, *, style: str = "2d"):
+    """ShapeDtypeStruct pytree for model params, with shardings."""
+    shapes = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = S.param_specs(cfg, mesh, shapes, style=style)
+    return _shard_tree(mesh, shapes, specs), specs
+
+
+def train_state_struct(cfg: ArchConfig, mesh: Mesh, optim: AdamW, *,
+                       style: str = "2d"):
+    p_struct, p_specs = params_struct(cfg, mesh, style=style)
+    opt_struct = jax.eval_shape(optim.init, p_struct)
+    opt_specs = {"m": p_specs, "v": p_specs}
+    opt_struct = _shard_tree(mesh, opt_struct, opt_specs)
+    step = _sds((), jnp.int32, NamedSharding(mesh, P()))
+    state = {"params": p_struct, "opt": opt_struct, "step": step}
+    specs = {"params": p_specs, "opt": opt_specs, "step": P()}
+    return state, specs
+
+
+def train_batch_struct(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+                       *, style: str = "2d"):
+    b, s = shape.global_batch, shape.seq_len
+    specs = S.batch_specs(cfg, mesh, style=style)
+    if cfg.input_mode == "tokens":
+        inputs = _sds((b, s), jnp.int32,
+                      NamedSharding(mesh, specs["inputs"]))
+    else:
+        inputs = _sds((b, s, cfg.d_model), jnp.bfloat16,
+                      NamedSharding(mesh, specs["inputs"]))
+    labels = _sds((b, s), jnp.int32,
+                  NamedSharding(mesh, specs["labels"]))
+    return {"inputs": inputs, "labels": labels}, specs
+
+
+def cache_struct(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    specs = S.cache_specs(cfg, mesh, shapes, batch=b)
+    return _shard_tree(mesh, shapes, specs), specs
+
+
+def decode_input_struct(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+    b = shape.global_batch
+    spec = S.decode_input_specs(cfg, mesh, batch=b)
+    if cfg.input_mode == "tokens":
+        return _sds((b,), jnp.int32, NamedSharding(mesh, spec)), spec
+    return _sds((b, cfg.d_model), jnp.bfloat16,
+                NamedSharding(mesh, spec)), spec
+
+
+def prefill_input_struct(cfg: ArchConfig, mesh: Mesh,
+                         shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    specs = S.batch_specs(cfg, mesh,
+                          batch_divisible=_dp_divides(mesh, b))
+    if cfg.input_mode == "tokens":
+        return _sds((b, s), jnp.int32,
+                    NamedSharding(mesh, specs["inputs"])), specs
+    return _sds((b, s, cfg.d_model), jnp.bfloat16,
+                NamedSharding(mesh, specs["inputs"])), specs
+
+
+def _dp_divides(mesh, batch):
+    n = 1
+    for a in S.dp_axes(mesh):
+        n *= mesh.shape[a]
+    return batch % n == 0

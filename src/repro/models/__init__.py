@@ -1,0 +1,3 @@
+from . import attention, layers, model, moe, ssm  # noqa: F401
+from .model import (decode_step, forward_hidden, forward_logits,  # noqa
+                    init_cache, init_params, prefill, train_loss)

@@ -1,0 +1,110 @@
+"""Shared model layers on top of the BLAS substrate.
+
+Every dense projection in the model stack goes through `dense()` — the
+BLAS gemm routine of the core library. On CPU (tests, dry-run) it is
+the jnp reference path (differentiable, XLA-fusable); with
+`use_pallas(True)` inference paths run the hand-tiled Pallas gemm.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+_state = threading.local()
+
+
+def use_pallas_now() -> bool:
+    return getattr(_state, "pallas", False)
+
+
+@contextlib.contextmanager
+def use_pallas(on: bool = True):
+    """Route dense() through the Pallas gemm kernel (inference only)."""
+    prev = use_pallas_now()
+    _state.pallas = on
+    try:
+        yield
+    finally:
+        _state.pallas = prev
+
+
+def dense(x, w):
+    """x @ w — the BLAS level-3 substrate for every model projection.
+
+    x: (..., K), w: (K, N). f32 accumulation, output in x.dtype.
+    """
+    if use_pallas_now():
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        out = kops.matmul(x2, w.astype(x.dtype))
+        return out.reshape(*lead, w.shape[-1])
+    return jnp.einsum(
+        "...k,kn->...n", x, w,
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _act(x, kind):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def glu_ffn(params, x, act="silu"):
+    """Gated FFN (SwiGLU/GeGLU): down( act(gate(x)) * up(x) )."""
+    g = dense(x, params["w_gate"])
+    u = dense(x, params["w_up"])
+    return dense(_act(g, act) * u, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32)
+                            / dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., S, D) or (..., D) with matching positions (..., S)/(...).
+
+    Rotates pairs (x[2i], x[2i+1]) — interleaved convention.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xf = x.astype(jnp.float32)
+    x1 = xf[..., 0::2]
+    x2 = xf[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def embed_lookup(table, ids):
+    """Token embedding: onehot-free gather (ids: (..., ) int32)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def init_dense(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32)
+            * scale).astype(dtype)

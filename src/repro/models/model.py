@@ -1,0 +1,780 @@
+"""The generic multi-family decoder model.
+
+One model definition covers all ten assigned architectures via
+ArchConfig: segments of (attn | attn_moe | mlstm | slstm | hybrid)
+blocks, GQA/MLA/SWA attention, dense/MoE FFNs, token or embedding
+inputs. Layers inside a segment are homogeneous and stacked, so the
+forward pass is a lax.scan over layer parameters (fast compiles at 62
+layers, remat-friendly).
+
+Entry points:
+  init_params(cfg, key)                      parameter pytree
+  forward_logits(params, cfg, batch)         (B,S,V) train/eval logits
+  train_loss(params, cfg, batch)             scalar CE loss
+  init_cache(cfg, batch, max_len)            decode cache pytree
+  prefill(params, cfg, inputs)               logits, cache, pos
+  decode_step(params, cfg, inp_t, cache, pos)  logits, cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from . import ssm
+from .attention import (chunked_attention, decode_attention_full,
+                        decode_attention_mla, decode_attention_ring)
+from .layers import (apply_rope, dense, embed_lookup, glu_ffn,
+                     init_dense, rmsnorm)
+from .moe import moe_ffn
+from .partition import (constrain_heads, constrain_param_tree,
+                        constrain_tokens)
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _ffd_slstm(d):
+    return -(-(4 * d // 3) // 64) * 64
+
+
+def _init_attn_block(cfg: ArchConfig, key, moe_layer: bool, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = iter(jax.random.split(key, 24))
+    p = {"attn_norm": jnp.ones((d,), dtype),
+         "mlp_norm": jnp.ones((d,), dtype)}
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        p["wq_a"] = init_dense(next(ks), (d, m.q_lora_rank), dtype=dtype)
+        p["q_norm"] = jnp.ones((m.q_lora_rank,), dtype)
+        p["wq_b"] = init_dense(
+            next(ks), (m.q_lora_rank, cfg.n_heads * m.qk_head_dim),
+            dtype=dtype)
+        p["wkv_a"] = init_dense(
+            next(ks), (d, m.kv_lora_rank + m.qk_rope_dim), dtype=dtype)
+        p["kv_norm"] = jnp.ones((m.kv_lora_rank,), dtype)
+        p["wkv_b"] = init_dense(
+            next(ks),
+            (m.kv_lora_rank, cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)),
+            dtype=dtype)
+        p["wo"] = init_dense(next(ks),
+                             (cfg.n_heads * m.v_head_dim, d), dtype=dtype)
+    else:
+        p["wq"] = init_dense(next(ks), (d, cfg.n_heads * hd), dtype=dtype)
+        p["wk"] = init_dense(next(ks), (d, cfg.n_kv_heads * hd),
+                             dtype=dtype)
+        p["wv"] = init_dense(next(ks), (d, cfg.n_kv_heads * hd),
+                             dtype=dtype)
+        p["wo"] = init_dense(next(ks), (cfg.n_heads * hd, d), dtype=dtype)
+    if moe_layer:
+        mo = cfg.moe
+        p["router"] = init_dense(next(ks), (d, mo.n_experts),
+                                 dtype=jnp.float32)
+        p["we_gate"] = init_dense(next(ks),
+                                  (mo.n_experts, d, mo.d_expert),
+                                  scale=d ** -0.5, dtype=dtype)
+        p["we_up"] = init_dense(next(ks),
+                                (mo.n_experts, d, mo.d_expert),
+                                scale=d ** -0.5, dtype=dtype)
+        p["we_down"] = init_dense(next(ks),
+                                  (mo.n_experts, mo.d_expert, d),
+                                  scale=mo.d_expert ** -0.5, dtype=dtype)
+        if mo.n_shared_experts:
+            p["ws_gate"] = init_dense(next(ks), (d, mo.d_shared),
+                                      dtype=dtype)
+            p["ws_up"] = init_dense(next(ks), (d, mo.d_shared),
+                                    dtype=dtype)
+            p["ws_down"] = init_dense(next(ks), (mo.d_shared, d),
+                                      dtype=dtype)
+    else:
+        p["w_gate"] = init_dense(next(ks), (d, cfg.d_ff), dtype=dtype)
+        p["w_up"] = init_dense(next(ks), (d, cfg.d_ff), dtype=dtype)
+        p["w_down"] = init_dense(next(ks), (cfg.d_ff, d), dtype=dtype)
+    return p
+
+
+def _init_mlstm_block(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    dm = 2 * d
+    nh = (cfg.ssm.n_ssm_heads or 4)
+    ks = iter(jax.random.split(key, 12))
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "w_up": init_dense(next(ks), (d, 2 * dm), dtype=dtype),
+        "conv_w": init_dense(next(ks), (cfg.ssm.d_conv, dm),
+                             scale=0.3, dtype=dtype),
+        "wq": init_dense(next(ks), (dm, dm), dtype=dtype),
+        "wk": init_dense(next(ks), (dm, dm), dtype=dtype),
+        "wv": init_dense(next(ks), (dm, dm), dtype=dtype),
+        "w_i": init_dense(next(ks), (dm, nh), dtype=jnp.float32),
+        "w_f": init_dense(next(ks), (dm, nh), dtype=jnp.float32),
+        "b_f": jnp.full((nh,), 3.0, jnp.float32),
+        "gnorm": jnp.ones((dm,), dtype),
+        "w_down": init_dense(next(ks), (dm, d), dtype=dtype),
+    }
+
+
+def _init_slstm_block(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    nh = (cfg.ssm.n_ssm_heads or 4)
+    hd = d // nh
+    ffd = _ffd_slstm(d)
+    ks = iter(jax.random.split(key, 12))
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "conv_w": init_dense(next(ks), (cfg.ssm.d_conv, d),
+                             scale=0.3, dtype=dtype),
+        "w_i": init_dense(next(ks), (d, d), dtype=jnp.float32),
+        "w_f": init_dense(next(ks), (d, d), dtype=jnp.float32),
+        "w_z": init_dense(next(ks), (d, d), dtype=dtype),
+        "w_o": init_dense(next(ks), (d, d), dtype=dtype),
+        "r_gates": init_dense(next(ks), (4, nh, hd, hd),
+                              scale=hd ** -0.5, dtype=jnp.float32),
+        "gnorm": jnp.ones((d,), dtype),
+        "w_up": init_dense(next(ks), (d, 2 * ffd), dtype=dtype),
+        "w_down": init_dense(next(ks), (ffd, d), dtype=dtype),
+    }
+
+
+def _init_hybrid_block(cfg: ArchConfig, key, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    s = cfg.ssm
+    dss = s.expand * d
+    nh = s.n_ssm_heads or 8
+    ks = iter(jax.random.split(key, 16))
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "mlp_norm": jnp.ones((d,), dtype),
+        # attention branch
+        "wq": init_dense(next(ks), (d, cfg.n_heads * hd), dtype=dtype),
+        "wk": init_dense(next(ks), (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": init_dense(next(ks), (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "attn_out_norm": jnp.ones((cfg.n_heads * hd,), dtype),
+        "wo_attn": init_dense(next(ks), (cfg.n_heads * hd, d),
+                              dtype=dtype),
+        # ssm branch
+        "w_ssm_in": init_dense(next(ks), (d, 2 * dss), dtype=dtype),
+        "conv_w": init_dense(next(ks), (s.d_conv, dss), scale=0.3,
+                             dtype=dtype),
+        "w_bc": init_dense(next(ks), (dss, 2 * s.d_state), dtype=dtype),
+        "w_dt": init_dense(next(ks), (dss, nh), dtype=jnp.float32),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "ssm_out_norm": jnp.ones((dss,), dtype),
+        "wo_ssm": init_dense(next(ks), (dss, d), dtype=dtype),
+        # ffn
+        "w_gate": init_dense(next(ks), (d, cfg.d_ff), dtype=dtype),
+        "w_up": init_dense(next(ks), (d, cfg.d_ff), dtype=dtype),
+        "w_down": init_dense(next(ks), (cfg.d_ff, d), dtype=dtype),
+    }
+
+
+_BLOCK_INIT = {
+    "attn": lambda cfg, k, dt: _init_attn_block(cfg, k, False, dt),
+    "attn_moe": lambda cfg, k, dt: _init_attn_block(cfg, k, True, dt),
+    "mlstm": _init_mlstm_block,
+    "slstm": _init_slstm_block,
+    "hybrid": _init_hybrid_block,
+}
+
+
+def init_params(cfg: ArchConfig, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, len(cfg.segments) + 3)
+    params = {}
+    d = cfg.d_model
+    if cfg.input_mode == "tokens":
+        params["embed"] = init_dense(keys[0], (cfg.vocab_size, d),
+                                     scale=0.02, dtype=dtype)
+    segs = []
+    for (kind, count), k in zip(cfg.segments, keys[1:-2]):
+        lkeys = jax.random.split(k, count)
+        segs.append(jax.vmap(
+            lambda kk: _BLOCK_INIT[kind](cfg, kk, dtype))(lkeys))
+    params["segments"] = segs
+    params["final_norm"] = jnp.ones((d,), dtype)
+    if not (cfg.tie_embeddings and cfg.input_mode == "tokens"):
+        params["lm_head"] = init_dense(keys[-1], (d, cfg.vocab_size),
+                                       dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block forward (sequence) — returns (x_out, cache_entry | None)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_qkv(p, h, cfg, positions):
+    b, s, _ = h.shape
+    hd = cfg.head_dim
+    q = dense(h, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = dense(h, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(h, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions[None, None],
+                   cfg.rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions[None, None],
+                   cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    return constrain_heads(q), constrain_heads(k), constrain_heads(v)
+
+
+def _attn_block_fwd(p, x, cfg: ArchConfig, *, moe_layer: bool,
+                    want_cache: bool):
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    cache = None
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        qa = rmsnorm(dense(h, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+        q = dense(qa, p["wq_b"]).reshape(b, s, cfg.n_heads, m.qk_head_dim)
+        kv_a = dense(h, p["wkv_a"])
+        ckv = rmsnorm(kv_a[..., :m.kv_lora_rank], p["kv_norm"],
+                      cfg.norm_eps)
+        k_rope_raw = kv_a[..., m.kv_lora_rank:]
+        kv = dense(ckv, p["wkv_b"]).reshape(
+            b, s, cfg.n_heads, m.qk_nope_dim + m.v_head_dim)
+        k_nope = kv[..., :m.qk_nope_dim]
+        v = kv[..., m.qk_nope_dim:]
+        q_nope = q[..., :m.qk_nope_dim]
+        q_rope = apply_rope(
+            q[..., m.qk_nope_dim:].transpose(0, 2, 1, 3),
+            positions[None, None], cfg.rope_theta)
+        k_rope = apply_rope(k_rope_raw[:, None], positions[None, None],
+                            cfg.rope_theta)     # (B,1,S,Dr)
+        qq = jnp.concatenate(
+            [q_nope.transpose(0, 2, 1, 3), q_rope], axis=-1)
+        kk = jnp.concatenate(
+            [k_nope.transpose(0, 2, 1, 3),
+             jnp.broadcast_to(k_rope,
+                              (b, cfg.n_heads, s, m.qk_rope_dim))],
+            axis=-1)
+        attn = chunked_attention(qq, kk, v.transpose(0, 2, 1, 3),
+                                 causal=True, window=cfg.window)
+        attn = attn.transpose(0, 2, 1, 3).reshape(
+            b, s, cfg.n_heads * m.v_head_dim)
+        if want_cache:
+            cache = {"ckv": ckv, "krope": k_rope[:, 0]}
+    else:
+        q, k, v = _gqa_qkv(p, h, cfg, positions)
+        attn = chunked_attention(q, k, v, causal=True, window=cfg.window)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        if want_cache:
+            cache = {"k": k.transpose(0, 2, 1, 3),
+                     "v": v.transpose(0, 2, 1, 3)}  # (B,S,Hkv,D)
+    x = x + dense(attn, p["wo"])
+    h2 = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if moe_layer:
+        from .partition import current_style, dp_total_in_mesh
+        mo = cfg.moe
+        mesh = jax.sharding.get_abstract_mesh()
+        use_sm = (mesh is not None and not mesh.empty
+                  and "model" in mesh.axis_names
+                  and "data" in mesh.axis_names
+                  and current_style() == "2d")
+        if use_sm and mo.n_experts % mesh.shape["model"] == 0:
+            from .moe import moe_ffn_ep_shard_map
+            y = moe_ffn_ep_shard_map(
+                p, h2, n_experts=mo.n_experts, top_k=mo.top_k,
+                capacity_factor=mo.capacity_factor, act=cfg.act,
+                mesh=mesh)
+        elif use_sm:
+            from .moe import moe_ffn_tp_shard_map
+            y = moe_ffn_tp_shard_map(
+                p, h2, n_experts=mo.n_experts, top_k=mo.top_k,
+                capacity_factor=mo.capacity_factor, act=cfg.act,
+                mesh=mesh)
+        else:
+            y = moe_ffn(p, h2.reshape(b * s, d),
+                        n_experts=mo.n_experts, top_k=mo.top_k,
+                        capacity_factor=mo.capacity_factor,
+                        act=cfg.act,
+                        groups=dp_total_in_mesh()).reshape(b, s, d)
+    else:
+        y = glu_ffn(p, h2, act=cfg.act)
+    return x + y, cache
+
+
+def _mlstm_block_fwd(p, x, cfg: ArchConfig, *, want_cache: bool):
+    b, s, d = x.shape
+    dm = 2 * d
+    nh = cfg.ssm.n_ssm_heads or 4
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = dense(h, p["w_up"])
+    xm, z = up[..., :dm], up[..., dm:]
+    xc = jax.nn.silu(ssm.causal_conv1d(xm, p["conv_w"]))
+    q = dense(xc, p["wq"]).reshape(b, s, nh, dm // nh)
+    k = dense(xc, p["wk"]).reshape(b, s, nh, dm // nh)
+    v = dense(xm, p["wv"]).reshape(b, s, nh, dm // nh)
+    ig = dense(xc, p["w_i"])
+    fg = dense(xc, p["w_f"]) + p["b_f"]
+    y, state = ssm.mlstm_chunked(q, k, v, ig, fg)
+    y = y.reshape(b, s, dm)
+    y = rmsnorm(y, p["gnorm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = x + dense(y, p["w_down"])
+    cache = None
+    if want_cache:
+        cache = {"C": state[0], "n": state[1], "m": state[2],
+                 "conv": xm[:, -(cfg.ssm.d_conv - 1):]}
+    return out, cache
+
+
+def _slstm_block_fwd(p, x, cfg: ArchConfig, *, want_cache: bool):
+    b, s, d = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xc = jax.nn.silu(ssm.causal_conv1d(h, p["conv_w"]))
+    gates = jnp.stack([
+        dense(xc, p["w_i"]), dense(xc, p["w_f"]),
+        dense(h, p["w_z"]), dense(h, p["w_o"])], axis=2)  # (B,S,4,d)
+    hseq, state = ssm.slstm_scan(gates, p["r_gates"])
+    y = rmsnorm(hseq.astype(x.dtype), p["gnorm"], cfg.norm_eps)
+    up = dense(y, p["w_up"])
+    ffd = up.shape[-1] // 2
+    y2 = jax.nn.silu(up[..., :ffd]) * up[..., ffd:]
+    out = x + dense(y2, p["w_down"]) + y
+    cache = None
+    if want_cache:
+        cache = {"h": state[0], "c": state[1], "n": state[2],
+                 "m": state[3],
+                 "conv": h[:, -(cfg.ssm.d_conv - 1):]}
+    return out, cache
+
+
+def _hybrid_block_fwd(p, x, cfg: ArchConfig, *, want_cache: bool):
+    b, s, d = x.shape
+    sc = cfg.ssm
+    dss = sc.expand * d
+    nh = sc.n_ssm_heads or 8
+    positions = jnp.arange(s)
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    # attention branch (SWA)
+    q, k, v = _gqa_qkv(p, h, cfg, positions)
+    attn = chunked_attention(q, k, v, causal=True, window=cfg.window)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    ao = dense(rmsnorm(attn, p["attn_out_norm"], cfg.norm_eps),
+               p["wo_attn"])
+    # ssm branch
+    inp = dense(h, p["w_ssm_in"])
+    xs, z = inp[..., :dss], inp[..., dss:]
+    xcv = jax.nn.silu(ssm.causal_conv1d(xs, p["conv_w"]))
+    bc = dense(xcv, p["w_bc"])
+    bmat, cmat = bc[..., :sc.d_state], bc[..., sc.d_state:]
+    dt = dense(xcv, p["w_dt"])
+    xheads = xcv.reshape(b, s, nh, dss // nh)
+    y, state = ssm.ssd_chunked(xheads, dt, p["a_log"], bmat, cmat,
+                               p["d_skip"])
+    y = y.reshape(b, s, dss)
+    y = rmsnorm(y, p["ssm_out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    so = dense(y, p["wo_ssm"])
+    x = x + 0.5 * (ao + so)
+    # ffn
+    h2 = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    out = x + glu_ffn(p, h2, act=cfg.act)
+    cache = None
+    if want_cache:
+        cache = {"k": k.transpose(0, 2, 1, 3),
+                 "v": v.transpose(0, 2, 1, 3),
+                 "ssm_state": state,
+                 "conv": xs[:, -(sc.d_conv - 1):]}
+    return out, cache
+
+
+def _block_fwd(kind, p, x, cfg, want_cache):
+    if kind == "attn":
+        return _attn_block_fwd(p, x, cfg, moe_layer=False,
+                               want_cache=want_cache)
+    if kind == "attn_moe":
+        return _attn_block_fwd(p, x, cfg, moe_layer=True,
+                               want_cache=want_cache)
+    if kind == "mlstm":
+        return _mlstm_block_fwd(p, x, cfg, want_cache=want_cache)
+    if kind == "slstm":
+        return _slstm_block_fwd(p, x, cfg, want_cache=want_cache)
+    if kind == "hybrid":
+        return _hybrid_block_fwd(p, x, cfg, want_cache=want_cache)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Sequence forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg, inputs):
+    if cfg.input_mode == "tokens":
+        return embed_lookup(params["embed"], inputs)
+    return inputs  # precomputed modality embeddings (B,S,d)
+
+
+def _unembed(params, cfg, h):
+    if "lm_head" in params:
+        return dense(h, params["lm_head"])
+    return dense(h, params["embed"].T)
+
+
+def forward_hidden(params, cfg: ArchConfig, inputs, *, remat=True,
+                   want_cache=False):
+    x = constrain_tokens(_embed_inputs(params, cfg, inputs))
+    caches = []
+    for seg_params, (kind, count) in zip(params["segments"],
+                                         cfg.segments):
+        def body(h, layer_p, _kind=kind):
+            layer_p = constrain_param_tree(layer_p)
+            h2, c = _block_fwd(_kind, layer_p, h, cfg, want_cache)
+            return constrain_tokens(h2), c
+        if remat:
+            body = jax.checkpoint(body)
+        x, seg_cache = jax.lax.scan(body, x, seg_params)
+        caches.append(seg_cache)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return (x, caches) if want_cache else x
+
+
+def forward_logits(params, cfg: ArchConfig, inputs, *, remat=True):
+    h = forward_hidden(params, cfg, inputs, remat=remat)
+    return _unembed(params, cfg, h)
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, remat=True):
+    """Causal-LM cross entropy. batch: {"inputs": tokens (B,S) int32 or
+    embeddings (B,S,d), "labels": (B,S) int32, "mask": optional}."""
+    logits = forward_logits(params, cfg, batch["inputs"], remat=remat)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("mask")
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve) path
+# ---------------------------------------------------------------------------
+
+
+def _swa_cache_len(cfg: ArchConfig, max_len: int) -> int:
+    return min(max_len, cfg.window) if cfg.window else max_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    """Preallocated decode cache pytree (zeros)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.head_dim
+    s_att = _swa_cache_len(cfg, max_len)
+    caches = []
+    for kind, count in cfg.segments:
+        if kind in ("attn", "attn_moe"):
+            if cfg.attn_kind == "mla":
+                m = cfg.mla
+                c = {"ckv": jnp.zeros((count, batch, max_len,
+                                       m.kv_lora_rank), dtype),
+                     "krope": jnp.zeros((count, batch, max_len,
+                                         m.qk_rope_dim), dtype)}
+            else:
+                c = {"k": jnp.zeros((count, batch, s_att,
+                                     cfg.n_kv_heads, hd), dtype),
+                     "v": jnp.zeros((count, batch, s_att,
+                                     cfg.n_kv_heads, hd), dtype)}
+        elif kind == "mlstm":
+            dm = 2 * cfg.d_model
+            nh = cfg.ssm.n_ssm_heads or 4
+            c = {"C": jnp.zeros((count, batch, nh, dm // nh, dm // nh),
+                                jnp.float32),
+                 "n": jnp.zeros((count, batch, nh, dm // nh),
+                                jnp.float32),
+                 "m": jnp.zeros((count, batch, nh), jnp.float32),
+                 "conv": jnp.zeros((count, batch, cfg.ssm.d_conv - 1,
+                                    dm), dtype)}
+        elif kind == "slstm":
+            d = cfg.d_model
+            c = {"h": jnp.zeros((count, batch, d), jnp.float32),
+                 "c": jnp.zeros((count, batch, d), jnp.float32),
+                 "n": jnp.zeros((count, batch, d), jnp.float32),
+                 "m": jnp.full((count, batch, d), -1e30, jnp.float32),
+                 "conv": jnp.zeros((count, batch, cfg.ssm.d_conv - 1,
+                                    d), dtype)}
+        elif kind == "hybrid":
+            dss = cfg.ssm.expand * cfg.d_model
+            nh = cfg.ssm.n_ssm_heads or 8
+            c = {"k": jnp.zeros((count, batch, s_att, cfg.n_kv_heads,
+                                 hd), dtype),
+                 "v": jnp.zeros((count, batch, s_att, cfg.n_kv_heads,
+                                 hd), dtype),
+                 "ssm_state": jnp.zeros((count, batch, nh,
+                                         cfg.ssm.d_state, dss // nh),
+                                        jnp.float32),
+                 "conv": jnp.zeros((count, batch, cfg.ssm.d_conv - 1,
+                                    dss), dtype)}
+        else:
+            raise ValueError(kind)
+        caches.append(c)
+    return caches
+
+
+def _write_at(cache_arr, val, idx):
+    """cache_arr: (B, S, ...); val: (B, ...) -> write at [:, idx]."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_arr, val[:, None].astype(cache_arr.dtype), idx, axis=1)
+
+
+def _attn_block_step(p, x, cache, pos, cfg: ArchConfig, *,
+                     moe_layer: bool):
+    b, d = x.shape
+    hd = cfg.head_dim
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    posf = jnp.asarray(pos, jnp.int32)
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        qa = rmsnorm(dense(h, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+        q = dense(qa, p["wq_b"]).reshape(b, cfg.n_heads, m.qk_head_dim)
+        q_nope = q[..., :m.qk_nope_dim]
+        q_rope = apply_rope(q[..., m.qk_nope_dim:], 
+                            jnp.broadcast_to(posf, (b, cfg.n_heads)),
+                            cfg.rope_theta)
+        kv_a = dense(h, p["wkv_a"])
+        ckv_t = rmsnorm(kv_a[..., :m.kv_lora_rank], p["kv_norm"],
+                        cfg.norm_eps)
+        krope_t = apply_rope(kv_a[..., m.kv_lora_rank:],
+                             jnp.broadcast_to(posf, (b,)),
+                             cfg.rope_theta)
+        cache = dict(cache)
+        cache["ckv"] = _write_at(cache["ckv"], ckv_t, pos)
+        cache["krope"] = _write_at(cache["krope"], krope_t, pos)
+        w_uk = p["wkv_b"][:, :].reshape(
+            m.kv_lora_rank, cfg.n_heads, m.qk_nope_dim + m.v_head_dim)
+        w_uk_k = w_uk[..., :m.qk_nope_dim]
+        w_uv = w_uk[..., m.qk_nope_dim:]
+        q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                           w_uk_k.astype(jnp.float32))
+        ctx = decode_attention_mla(
+            q_lat, q_rope, cache["ckv"], cache["krope"], pos,
+            scale=m.qk_head_dim ** -0.5)
+        attn = jnp.einsum("bhr,rhv->bhv", ctx,
+                          w_uv.astype(jnp.float32)).astype(x.dtype)
+        attn = attn.reshape(b, cfg.n_heads * m.v_head_dim)
+    else:
+        q = dense(h, p["wq"]).reshape(b, cfg.n_heads, hd)
+        k_t = dense(h, p["wk"]).reshape(b, cfg.n_kv_heads, hd)
+        v_t = dense(h, p["wv"]).reshape(b, cfg.n_kv_heads, hd)
+        posb = jnp.broadcast_to(posf, (b, cfg.n_heads))
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k_t = apply_rope(k_t, posb[:, :cfg.n_kv_heads], cfg.rope_theta)
+        cache = dict(cache)
+        if cfg.window:
+            w = cache["k"].shape[1]
+            slot = jnp.mod(pos, w)
+            cache["k"] = _write_at(cache["k"], k_t, slot)
+            cache["v"] = _write_at(cache["v"], v_t, slot)
+            attn = decode_attention_ring(q, cache["k"], cache["v"],
+                                         pos, window=cfg.window)
+        else:
+            cache["k"] = _write_at(cache["k"], k_t, pos)
+            cache["v"] = _write_at(cache["v"], v_t, pos)
+            attn = decode_attention_full(q, cache["k"], cache["v"], pos)
+        attn = attn.reshape(b, cfg.n_heads * hd)
+    x = x + dense(attn, p["wo"])
+    h2 = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if moe_layer:
+        mo = cfg.moe
+        y = moe_ffn(p, h2, n_experts=mo.n_experts, top_k=mo.top_k,
+                    capacity_factor=max(4.0, mo.capacity_factor),
+                    act=cfg.act)
+    else:
+        y = glu_ffn(p, h2, act=cfg.act)
+    return x + y, cache
+
+
+def _mlstm_block_step(p, x, cache, pos, cfg: ArchConfig):
+    b, d = x.shape
+    dm = 2 * d
+    nh = cfg.ssm.n_ssm_heads or 4
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = dense(h, p["w_up"])
+    xm, z = up[..., :dm], up[..., dm:]
+    cache = dict(cache)
+    xc, cache["conv"] = ssm.causal_conv1d_step(xm, cache["conv"],
+                                               p["conv_w"])
+    xc = jax.nn.silu(xc)
+    q = dense(xc, p["wq"]).reshape(b, nh, dm // nh)
+    k = dense(xc, p["wk"]).reshape(b, nh, dm // nh)
+    v = dense(xm, p["wv"]).reshape(b, nh, dm // nh)
+    ig = dense(xc, p["w_i"])
+    fg = dense(xc, p["w_f"]) + p["b_f"]
+    y, (cache["C"], cache["n"], cache["m"]) = ssm.mlstm_step(
+        q, k, v, ig, fg, (cache["C"], cache["n"], cache["m"]))
+    y = y.reshape(b, dm)
+    y = rmsnorm(y, p["gnorm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + dense(y, p["w_down"]), cache
+
+
+def _slstm_block_step(p, x, cache, pos, cfg: ArchConfig):
+    b, d = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    cache = dict(cache)
+    xc, cache["conv"] = ssm.causal_conv1d_step(h, cache["conv"],
+                                               p["conv_w"])
+    xc = jax.nn.silu(xc)
+    gates = jnp.stack([
+        dense(xc, p["w_i"]), dense(xc, p["w_f"]),
+        dense(h, p["w_z"]), dense(h, p["w_o"])], axis=1)  # (B,4,d)
+    hy, (cache["h"], cache["c"], cache["n"], cache["m"]) = \
+        ssm.slstm_step(gates, p["r_gates"],
+                       (cache["h"], cache["c"], cache["n"], cache["m"]))
+    y = rmsnorm(hy.astype(x.dtype), p["gnorm"], cfg.norm_eps)
+    up = dense(y, p["w_up"])
+    ffd = up.shape[-1] // 2
+    y2 = jax.nn.silu(up[..., :ffd]) * up[..., ffd:]
+    return x + dense(y2, p["w_down"]) + y, cache
+
+
+def _hybrid_block_step(p, x, cache, pos, cfg: ArchConfig):
+    b, d = x.shape
+    sc = cfg.ssm
+    dss = sc.expand * d
+    nh = sc.n_ssm_heads or 8
+    hd = cfg.head_dim
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    posf = jnp.asarray(pos, jnp.int32)
+    cache = dict(cache)
+    # attention branch (ring cache, SWA)
+    q = dense(h, p["wq"]).reshape(b, cfg.n_heads, hd)
+    k_t = dense(h, p["wk"]).reshape(b, cfg.n_kv_heads, hd)
+    v_t = dense(h, p["wv"]).reshape(b, cfg.n_kv_heads, hd)
+    posb = jnp.broadcast_to(posf, (b, cfg.n_heads))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_t = apply_rope(k_t, posb[:, :cfg.n_kv_heads], cfg.rope_theta)
+    w = cache["k"].shape[1]
+    slot = jnp.mod(pos, w)
+    cache["k"] = _write_at(cache["k"], k_t, slot)
+    cache["v"] = _write_at(cache["v"], v_t, slot)
+    attn = decode_attention_ring(q, cache["k"], cache["v"], pos,
+                                 window=cfg.window)
+    attn = attn.reshape(b, cfg.n_heads * hd)
+    ao = dense(rmsnorm(attn, p["attn_out_norm"], cfg.norm_eps),
+               p["wo_attn"])
+    # ssm branch
+    inp = dense(h, p["w_ssm_in"])
+    xs, z = inp[..., :dss], inp[..., dss:]
+    xcv, cache["conv"] = ssm.causal_conv1d_step(xs, cache["conv"],
+                                                p["conv_w"])
+    xcv = jax.nn.silu(xcv)
+    bc = dense(xcv, p["w_bc"])
+    bvec, cvec = bc[..., :sc.d_state], bc[..., sc.d_state:]
+    dt = dense(xcv, p["w_dt"])
+    xheads = xcv.reshape(b, nh, dss // nh)
+    y, cache["ssm_state"] = ssm.ssd_step(
+        xheads, dt, p["a_log"], bvec, cvec, p["d_skip"],
+        cache["ssm_state"])
+    y = y.reshape(b, dss)
+    y = rmsnorm(y, p["ssm_out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    so = dense(y, p["wo_ssm"])
+    x = x + 0.5 * (ao + so)
+    h2 = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    return x + glu_ffn(p, h2, act=cfg.act), cache
+
+
+def _block_step(kind, p, x, cache, pos, cfg):
+    if kind == "attn":
+        return _attn_block_step(p, x, cache, pos, cfg, moe_layer=False)
+    if kind == "attn_moe":
+        return _attn_block_step(p, x, cache, pos, cfg, moe_layer=True)
+    if kind == "mlstm":
+        return _mlstm_block_step(p, x, cache, pos, cfg)
+    if kind == "slstm":
+        return _slstm_block_step(p, x, cache, pos, cfg)
+    if kind == "hybrid":
+        return _hybrid_block_step(p, x, cache, pos, cfg)
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ArchConfig, inputs_t, caches, pos):
+    """One decoding step.
+
+    inputs_t: (B,) int32 token ids or (B,d) embeddings; caches: from
+    init_cache/prefill; pos: () int32 absolute position of this token.
+    Returns (logits (B,V), new_caches).
+    """
+    if cfg.input_mode == "tokens":
+        x = embed_lookup(params["embed"], inputs_t)
+    else:
+        x = inputs_t
+    x = constrain_tokens(x)
+    new_caches = []
+    for seg_params, seg_cache, (kind, count) in zip(
+            params["segments"], caches, cfg.segments):
+        def body(h, xs, _kind=kind):
+            layer_p, layer_c = xs
+            h2, c2 = _block_step(_kind, layer_p, h, layer_c, pos, cfg)
+            return constrain_tokens(h2), c2
+        x, new_c = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(new_c)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), new_caches
+
+
+def _ring_from_full(k_full, window):
+    """(B,S,Hkv,D) -> ring (B,W,Hkv,D) holding the last W positions at
+    slots p % W (valid for S >= W and S < W alike)."""
+    b, s, hkv, d = k_full.shape
+    w = window
+    if s >= w:
+        j = jnp.arange(w)
+        p_idx = s - 1 - jnp.mod(s - 1 - j, w)
+        return k_full[:, p_idx]
+    ring = jnp.zeros((b, w, hkv, d), k_full.dtype)
+    return ring.at[:, jnp.arange(s) % w].set(k_full)
+
+
+def prefill(params, cfg: ArchConfig, inputs, max_len: int):
+    """Process a full prompt; return (last-token logits, decode caches,
+    pos). inputs: (B,S) tokens or (B,S,d) embeddings."""
+    s = inputs.shape[1]
+    h, raw_caches = forward_hidden(params, cfg, inputs, remat=False,
+                                   want_cache=True)
+    logits = _unembed(params, cfg, h[:, -1])
+    s_att = _swa_cache_len(cfg, max_len)
+    caches = []
+    for raw, (kind, count) in zip(raw_caches, cfg.segments):
+        if kind in ("attn", "attn_moe") and cfg.attn_kind == "mla":
+            pad = max_len - s
+            c = {"ckv": jnp.pad(raw["ckv"],
+                                ((0, 0), (0, 0), (0, pad), (0, 0))),
+                 "krope": jnp.pad(raw["krope"],
+                                  ((0, 0), (0, 0), (0, pad), (0, 0)))}
+        elif kind in ("attn", "attn_moe"):
+            if cfg.window:
+                c = {"k": jax.vmap(
+                        lambda kk: _ring_from_full(kk, s_att))(raw["k"]),
+                     "v": jax.vmap(
+                        lambda vv: _ring_from_full(vv, s_att))(raw["v"])}
+            else:
+                pad = max_len - s
+                c = {"k": jnp.pad(raw["k"], ((0, 0), (0, 0), (0, pad),
+                                             (0, 0), (0, 0))),
+                     "v": jnp.pad(raw["v"], ((0, 0), (0, 0), (0, pad),
+                                             (0, 0), (0, 0)))}
+        elif kind == "mlstm":
+            c = dict(raw)
+        elif kind == "slstm":
+            c = {"h": raw["h"], "c": raw["c"], "n": raw["n"],
+                 "m": raw["m"], "conv": raw["conv"]}
+        elif kind == "hybrid":
+            c = {"k": jax.vmap(
+                    lambda kk: _ring_from_full(kk, s_att))(raw["k"]),
+                 "v": jax.vmap(
+                    lambda vv: _ring_from_full(vv, s_att))(raw["v"]),
+                 "ssm_state": raw["ssm_state"], "conv": raw["conv"]}
+        else:
+            raise ValueError(kind)
+        caches.append(c)
+    return logits, caches, jnp.asarray(s, jnp.int32)

@@ -1,0 +1,132 @@
+"""Activation sharding constraints (placement hints, AIEBLAS-style).
+
+`constrain_*` are no-ops when no mesh is set (CPU unit tests) and emit
+jax.lax.with_sharding_constraint under the production mesh. They pin
+the batch dim of activations to the DP axes so GSPMD resolves the
+FSDP-sharded weight matmuls by all-gathering WEIGHTS (small) instead of
+replicating ACTIVATIONS (huge) — without these, the layer scan loses
+data parallelism entirely (measured: 4x FLOPs per device).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STYLE = contextvars.ContextVar("parallelism_style", default="2d")
+
+
+@contextlib.contextmanager
+def parallelism_style(style: str):
+    """"2d" (DP x TP baseline) or "fsdp" (pure ZeRO-3: batch and
+    weights sharded over ALL mesh axes). Must be active while the step
+    function is traced/lowered."""
+    tok = _STYLE.set(style)
+    try:
+        yield
+    finally:
+        _STYLE.reset(tok)
+
+
+def current_style() -> str:
+    return _STYLE.get()
+
+
+def _mesh_axes():
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return None
+    return mesh.axis_names
+
+
+def dp_axes_in_mesh():
+    axes = _mesh_axes()
+    if axes is None:
+        return None
+    if current_style() == "fsdp":
+        return tuple(a for a in ("pod", "data", "model") if a in axes)
+    return tuple(a for a in ("pod", "data") if a in axes)
+
+
+def constrain_tokens(x):
+    """(B, S) or (B, S, d) activations: batch over DP axes."""
+    dp = dp_axes_in_mesh()
+    if not dp or x.shape[0] % _size(dp) != 0:
+        return x
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def dp_total_in_mesh() -> int:
+    """Product of the DP axis sizes (1 when no mesh is set)."""
+    dp = dp_axes_in_mesh()
+    if not dp:
+        return 1
+    return _size(dp)
+
+
+def constrain_hidden(x):
+    """(B, d) decode activations."""
+    return constrain_tokens(x)
+
+
+def constrain_heads(x):
+    """(B, H, S, D) or (B, H, D): batch over DP; heads over model when
+    divisible (keeps attention TP'd for divisible-head archs)."""
+    dp = dp_axes_in_mesh()
+    if not dp:
+        return x
+    axes = _mesh_axes()
+    spec = [None] * x.ndim
+    if x.shape[0] % _size(dp) == 0:
+        spec[0] = dp
+    if current_style() != "fsdp" and "model" in axes \
+            and x.shape[1] % _msize() == 0:
+        spec[1] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _size(axes):
+    mesh = jax.sharding.get_abstract_mesh()
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _msize():
+    mesh = jax.sharding.get_abstract_mesh()
+    return mesh.shape["model"]
+
+
+def constrain_param_tree(params):
+    """Constrain per-layer param slices (inside the scan body) to their
+    FSDP storage sharding. with_sharding_constraint transposes to the
+    same constraint on the cotangent, so per-layer weight grads
+    REDUCE-SCATTER onto the shards instead of ALL-REDUCING in full
+    (measured 1.9 GB -> ~1.0 GB wire per layer on llama3-8b)."""
+    if current_style() != "fsdp":
+        return params
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return params
+    axes = tuple(a for a in ("pod", "data", "model")
+                 if a in mesh.axis_names)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def one(x):
+        if not hasattr(x, "shape") or x.ndim == 0:
+            return x
+        dims = sorted(range(x.ndim), key=lambda i: -x.shape[i])
+        for i in dims:
+            if x.shape[i] % n == 0 and x.shape[i] >= n:
+                spec = [None] * x.ndim
+                spec[i] = axes
+                return jax.lax.with_sharding_constraint(x, P(*spec))
+        return x
+
+    return jax.tree.map(one, params)

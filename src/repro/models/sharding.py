@@ -1,0 +1,256 @@
+"""Sharding rules: parameter / cache / batch PartitionSpecs.
+
+Baseline parallelism (DESIGN.md §5):
+  - DP over ("pod",) "data"  — batch dim of every input
+  - TP over "model"          — Megatron column/row sharding of every
+    projection; EP over "model" for MoE when n_experts divides it;
+    sequence (context) sharding of decode KV caches over "model".
+  - The "pod" axis carries only the gradient all-reduce (pure DP).
+
+These are *placement hints* in the AIEBLAS sense: explicit
+PartitionSpecs on the program boundary; GSPMD propagates the interior.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# -- helpers ----------------------------------------------------------------
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _divides(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+# -- parameter specs --------------------------------------------------------
+
+# key -> rule; rule is a callable (cfg, mesh, shape) -> PartitionSpec for
+# the STACKED (leading layer dim) parameter.
+
+
+def _data_size(mesh: Mesh) -> int:
+    return mesh.shape["data"]
+
+
+def _col(*, lead=1):
+    """TP: last dim over "model"; FSDP: contraction dim over "data"
+    (storage-sharded, all-gathered by GSPMD for compute — ZeRO-3)."""
+    def rule(cfg, mesh, shape):
+        spec = [None] * len(shape)
+        if _divides(shape[-1], _model_size(mesh)):
+            spec[-1] = "model"
+        if len(shape) >= 2 and _divides(shape[-2], _data_size(mesh)):
+            spec[-2] = "data"
+        return P(*spec)
+    return rule
+
+
+def _row(*, lead=1):
+    """TP: second-to-last (contraction) dim over "model" (psum);
+    FSDP: output dim over "data"."""
+    def rule(cfg, mesh, shape):
+        spec = [None] * len(shape)
+        if _divides(shape[-2], _model_size(mesh)):
+            spec[-2] = "model"
+        if _divides(shape[-1], _data_size(mesh)):
+            spec[-1] = "data"
+        return P(*spec)
+    return rule
+
+
+def _replicated(cfg, mesh, shape):
+    return P(*([None] * len(shape)))
+
+
+def _expert(cfg, mesh, shape):
+    """(L, E, d_in, d_out): EP on E if divisible (+FSDP on d_in), else
+    TP on the wider of (d_in, d_out) with FSDP on the other."""
+    msize = _model_size(mesh)
+    dsize = _data_size(mesh)
+    e = shape[1]
+    din_data = "data" if _divides(shape[-2], dsize) else None
+    if _divides(e, msize):
+        return P(None, "model", din_data, None)
+    # TP within experts: shard the ff dim (the larger of the two)
+    if shape[-1] >= shape[-2] and _divides(shape[-1], msize):
+        return P(None, None, din_data, "model")
+    if _divides(shape[-2], msize):
+        dout_data = "data" if _divides(shape[-1], dsize) else None
+        return P(None, None, "model", dout_data)
+    return P(None, None, din_data, None)
+
+
+_PARAM_RULES = {
+    # attention
+    "wq": _col(), "wk": _col(), "wv": _col(),
+    "wo": _row(),
+    "wq_a": _col(), "wq_b": _col(),
+    "wkv_a": _replicated, "wkv_b": _col(),
+    # dense ffn
+    "w_gate": _col(), "w_up": _col(), "w_down": _row(),
+    # moe
+    "router": _replicated,
+    "we_gate": _expert, "we_up": _expert, "we_down": _expert,
+    "ws_gate": _col(), "ws_up": _col(), "ws_down": _row(),
+    # mlstm
+    "conv_w": _col(),
+    "w_i": _replicated, "w_f": _replicated, "b_f": _replicated,
+    # slstm (tiny — replicated)
+    "w_z": _replicated, "w_o": _replicated, "r_gates": _replicated,
+    # hybrid ssm branch
+    "w_ssm_in": _col(), "w_bc": _row(), "w_dt": _row(),
+    "a_log": _replicated, "d_skip": _replicated,
+    "wo_ssm": _row(), "wo_attn": _row(),
+}
+
+_TOP_LEVEL = {
+    "embed": lambda cfg, mesh, shape: P(
+        "model" if _divides(shape[0], _model_size(mesh)) else None,
+        "data" if _divides(shape[1], _data_size(mesh)) else None),
+    "lm_head": lambda cfg, mesh, shape: P(
+        "data" if _divides(shape[0], _data_size(mesh)) else None,
+        "model" if _divides(shape[-1], _model_size(mesh)) else None),
+    "wkv_a": lambda cfg, mesh, shape: P(
+        None,
+        "data" if _divides(shape[-2], _data_size(mesh)) else None,
+        None),
+}
+
+
+def fsdp_axes(mesh: Mesh):
+    """All mesh axes combined — pure ZeRO-3 sharding domain."""
+    return tuple(a for a in ("pod", "data", "model")
+                 if a in mesh.axis_names)
+
+
+def _fsdp_spec(mesh: Mesh, shape):
+    """Pure-FSDP rule: shard the largest divisible dim over ALL axes
+    combined; storage-only (GSPMD all-gathers for compute)."""
+    axes = fsdp_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    dims = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in dims:
+        if shape[i] % n == 0 and shape[i] >= n:
+            spec = [None] * len(shape)
+            spec[i] = axes
+            return P(*spec)
+    # fall back: data axis only
+    d = mesh.shape["data"]
+    for i in dims:
+        if shape[i] % d == 0 and shape[i] >= d:
+            spec = [None] * len(shape)
+            spec[i] = "data"
+            return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_shape, *,
+                style: str = "2d"):
+    """PartitionSpec pytree matching a params (or ShapeDtypeStruct)
+    pytree. style: "2d" (FSDP over data x TP over model — baseline) or
+    "fsdp" (pure ZeRO-3 over all axes; batch must shard over all axes
+    too — see batch_specs)."""
+    if style == "fsdp":
+        def fsdp_for(path, leaf):
+            # stacked segment params: never shard the layer dim
+            shape = leaf.shape
+            keys = [p.key for p in path if hasattr(p, "key")]
+            name = keys[-1] if keys else ""
+            spec = _fsdp_spec(mesh, shape)
+            if name not in _TOP_LEVEL and len(shape) >= 1 and \
+                    spec and len(spec) > 0 and spec[0] is not None:
+                spec = P(None, *spec[1:])
+            return spec
+        return jax.tree_util.tree_map_with_path(fsdp_for, params_shape)
+
+    def spec_for(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        if name in _TOP_LEVEL:
+            return _TOP_LEVEL[name](cfg, mesh, shape)
+        rule = _PARAM_RULES.get(name)
+        if rule is None:
+            return P(*([None] * len(shape)))
+        # xlstm wq/wk/wv operate headwise on a model-sharded dm — keep
+        # them replicated for the tiny ssm family instead
+        if cfg.family == "ssm" and name in ("wq", "wk", "wv", "conv_w",
+                                            "w_gate", "w_up", "w_down",
+                                            "wo"):
+            if name in ("w_up", "w_down"):
+                return _PARAM_RULES[name](cfg, mesh, shape)
+            return P(*([None] * len(shape)))
+        return rule(cfg, mesh, shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def param_shardings(cfg, mesh, params_shape):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, params_shape))
+
+
+# -- batch / activation specs -----------------------------------------------
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, *, batch_divisible=True,
+                style: str = "2d"):
+    """Input specs for a train batch {"inputs","labels"}."""
+    if style == "fsdp":
+        dp = fsdp_axes(mesh) if batch_divisible else (None,)
+    else:
+        dp = dp_axes(mesh) if batch_divisible else (None,)
+    tok = P(dp, None) if cfg.input_mode == "tokens" else P(dp, None, None)
+    return {"inputs": tok, "labels": P(dp, None)}
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, cache_shape, *,
+                batch: int):
+    """Decode-cache specs: batch over DP (when divisible), cache
+    sequence dim over "model" (context parallelism), SSM states DP-only.
+    """
+    dpa = dp_axes(mesh)
+    dp_total = 1
+    for a in dpa:
+        dp_total *= mesh.shape[a]
+    bdim = dpa if batch % dp_total == 0 else None
+    msize = _model_size(mesh)
+
+    def spec_for(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        if name in ("k", "v", "ckv", "krope"):
+            # (L, B, S, ...) — shard S over model if divisible
+            s_ax = "model" if _divides(shape[2], msize) else None
+            rest = [None] * (len(shape) - 3)
+            return P(None, bdim, s_ax, *rest)
+        # ssm/conv states: (L, B, ...)
+        return P(None, bdim, *([None] * (len(shape) - 2)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def decode_input_specs(cfg: ArchConfig, mesh: Mesh, *, batch: int):
+    dpa = dp_axes(mesh)
+    dp_total = 1
+    for a in dpa:
+        dp_total *= mesh.shape[a]
+    bdim = dpa if batch % dp_total == 0 else None
+    if cfg.input_mode == "tokens":
+        return P(bdim)
+    return P(bdim, None)

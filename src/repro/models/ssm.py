@@ -1,0 +1,357 @@
+"""Sequence-state models: Mamba-2 SSD (chunked scan + decode step),
+xLSTM mLSTM (stabilized chunkwise-parallel + sequential oracle + decode
+step) and sLSTM (sequential scan + decode step), causal depthwise conv.
+
+Per DESIGN.md, the chunk-local work is MXU gemms (the BLAS substrate);
+the cross-chunk state pass is the dataflow 'stream' edge.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (mamba/mlstm front conv)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w):
+    """x: (B,S,C); w: (K,C) depthwise. Left-padded causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def causal_conv1d_step(x_t, conv_state, w):
+    """One decode step. x_t: (B,C); conv_state: (B,K-1,C) past inputs.
+    Returns (y_t, new_conv_state)."""
+    k = w.shape[0]
+    full = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,K,C)
+    y = jnp.sum(full.astype(jnp.float32)
+                * w[None].astype(jnp.float32), axis=1)
+    return y.astype(x_t.dtype), full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, *, chunk=128):
+    """Chunked-parallel SSD scan.
+
+    x: (B,S,H,P) values; dt: (B,S,H) raw (softplus applied here);
+    a_log: (H,) (A = -exp(a_log)); b,c: (B,S,N) (single group);
+    d_skip: (H,). Returns y: (B,S,H,P).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    lc = min(chunk, s)
+    s_p = -(-s // lc) * lc
+    pad = s_p - s
+    xf = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))
+                 ).astype(jnp.float32)
+    # pad dt with a large negative so softplus(dt)=0: padded steps then
+    # neither decay the state (exp(0)=1) nor contribute to it
+    dtf = jax.nn.softplus(
+        jnp.pad(dt, ((0, 0), (0, pad), (0, 0)),
+                constant_values=-1e9).astype(jnp.float32))
+    bf = jnp.pad(b, ((0, 0), (0, pad), (0, 0))).astype(jnp.float32)
+    cf = jnp.pad(c, ((0, 0), (0, pad), (0, 0))).astype(jnp.float32)
+    nc = s_p // lc
+    a = -jnp.exp(a_log.astype(jnp.float32))          # (H,)
+
+    # chunk-major: (nc, B, lc, ...)
+    xc = xf.reshape(bsz, nc, lc, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dtf.reshape(bsz, nc, lc, h).transpose(1, 0, 2, 3)
+    bc = bf.reshape(bsz, nc, lc, n).transpose(1, 0, 2, 3)
+    cc = cf.reshape(bsz, nc, lc, n).transpose(1, 0, 2, 3)
+
+    def chunk_body(state, blk):
+        # state: (B,H,N,P)
+        xb, dtb, bb, cb = blk       # (B,lc,H,P) (B,lc,H) (B,lc,N) (B,lc,N)
+        l = dtb * a                  # log decay per step (B,lc,H)
+        f = jnp.cumsum(l, axis=1)    # inclusive cumsum (B,lc,H)
+        # intra-chunk: M_ij = exp(F_i - F_j) for j <= i (step j's own
+        # decay is NOT applied to its own contribution: S_j includes
+        # dt_j B_j x_j undecayed, and F_i - F_j = sum of decays j+1..i)
+        wij = f[:, :, None, :] - f[:, None, :, :]      # (B,i,j,H)
+        mask = jnp.tril(jnp.ones((lc, lc), bool))
+        mij = jnp.where(mask[None, :, :, None], jnp.exp(wij), 0.0)
+        cbt = jnp.einsum("bin,bjn->bij", cb, bb)       # (B,i,j)
+        g = cbt[:, :, :, None] * mij                   # (B,i,j,H)
+        dx = dtb[..., None] * xb                       # (B,lc,H,P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", g, dx)
+        # inter-chunk: y_i += (C_i exp(F_i)) . state
+        decay_i = jnp.exp(f)                           # (B,lc,H)
+        y_inter = jnp.einsum("bin,bhnp->bihp", cb, state) \
+            * decay_i[..., None]
+        # state update: carry of step j to chunk end is exp(total - F_j)
+        total = f[:, -1]                               # (B,H)
+        w_end = jnp.exp(total[:, None, :] - f)         # (B,lc,H)
+        new_state = state * jnp.exp(total)[:, :, None, None] \
+            + jnp.einsum("bjn,bjhp,bjh->bhnp", bb, dx, w_end)
+        y = y_intra + y_inter
+        return new_state, y
+
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    final_state, ys = jax.lax.scan(chunk_body, state0, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s_p, h, p)[:, :s]
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None,
+                                                               None, :,
+                                                               None]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_sequential(x, dt, a_log, b, c, d_skip):
+    """Step-by-step oracle for ssd_chunked."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, t):
+        xt = x[:, t].astype(jnp.float32)              # (B,H,P)
+        dtt = jax.nn.softplus(dt[:, t].astype(jnp.float32))  # (B,H)
+        bt = b[:, t].astype(jnp.float32)              # (B,N)
+        ct = c[:, t].astype(jnp.float32)
+        decay = jnp.exp(dtt * a)                      # (B,H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bn,bhp,bh->bhnp", bt, xt, dtt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    y = ys.transpose(1, 0, 2, 3)
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None,
+                                                               None, :,
+                                                               None]
+    return y.astype(x.dtype)
+
+
+def ssd_step(x_t, dt_t, a_log, b_t, c_t, d_skip, state):
+    """One decode step. x_t: (B,H,P); dt_t: (B,H); b_t/c_t: (B,N);
+    state: (B,H,N,P). Returns (y_t, new_state)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtt = jax.nn.softplus(dt_t.astype(jnp.float32))
+    decay = jnp.exp(dtt * a)
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", b_t.astype(jnp.float32),
+        x_t.astype(jnp.float32), dtt)
+    y = jnp.einsum("bn,bhnp->bhp", c_t.astype(jnp.float32), state)
+    y = y + x_t.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, :,
+                                                                 None]
+    return y.astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM mLSTM (matrix memory)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_sequential(q, k, v, i_gate, f_gate):
+    """Stabilized sequential mLSTM oracle.
+
+    q,k,v: (B,S,H,D); i_gate,f_gate: (B,S,H) preactivations.
+    Returns h: (B,S,H,D).
+    """
+    bsz, s, h, d = q.shape
+    scale = d ** -0.5
+
+    def step(carry, t):
+        cmat, n, m = carry  # (B,H,D,D), (B,H,D), (B,H)
+        qt = q[:, t].astype(jnp.float32) * scale
+        kt = k[:, t].astype(jnp.float32) * scale
+        vt = v[:, t].astype(jnp.float32)
+        it = i_gate[:, t].astype(jnp.float32)
+        ft = jax.nn.log_sigmoid(f_gate[:, t].astype(jnp.float32))
+        m_new = jnp.maximum(ft + m, it)
+        fs = jnp.exp(ft + m - m_new)
+        is_ = jnp.exp(it - m_new)
+        cmat = fs[..., None, None] * cmat + is_[..., None, None] \
+            * kt[..., :, None] * vt[..., None, :]
+        n = fs[..., None] * n + is_[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, cmat)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))
+        return (cmat, n, m_new), num / den[..., None]
+
+    carry0 = (jnp.zeros((bsz, h, d, d), jnp.float32),
+              jnp.zeros((bsz, h, d), jnp.float32),
+              jnp.zeros((bsz, h), jnp.float32))
+    _, ys = jax.lax.scan(step, carry0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3).astype(q.dtype)
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, *, chunk=128):
+    """Stabilized chunkwise-parallel mLSTM (the train/prefill path).
+
+    Matches mlstm_sequential; intra-chunk work is quadratic gemms, the
+    cross-chunk state is (C, n, m) carried through a scan.
+    """
+    bsz, s, h, d = q.shape
+    lc = min(chunk, s)
+    s_p = -(-s // lc) * lc
+    pad = s_p - s
+
+    def padt(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    scale = d ** -0.5
+    qf = padt(q).astype(jnp.float32) * scale
+    kf = padt(k).astype(jnp.float32) * scale
+    vf = padt(v).astype(jnp.float32)
+    # pad gates with f=0 (logsig(0)<0 fine) i=-inf-ish so padded steps
+    # contribute nothing
+    i_p = jnp.pad(i_gate.astype(jnp.float32),
+                  ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+    f_p = jnp.pad(f_gate.astype(jnp.float32),
+                  ((0, 0), (0, pad), (0, 0)), constant_values=30.0)
+    nc = s_p // lc
+
+    def tochunks(t):
+        return t.reshape((bsz, nc, lc) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    qc, kc, vc = tochunks(qf), tochunks(kf), tochunks(vf)
+    ic, fc = tochunks(i_p), tochunks(f_p)
+
+    def chunk_body(carry, blk):
+        cmat, n, m = carry           # (B,H,D,D), (B,H,D), (B,H)
+        qb, kb, vb, ib, fb = blk     # (B,lc,H,*)
+        flog = jax.nn.log_sigmoid(fb)            # (B,lc,H)
+        fcum = jnp.cumsum(flog, axis=1)          # inclusive (B,lc,H)
+        # w_ij = Fcum_i - Fcum_j + i_j   (j <= i)
+        wij = (fcum[:, :, None, :] - fcum[:, None, :, :]
+               + ib[:, None, :, :])
+        mask = jnp.tril(jnp.ones((lc, lc), bool))[None, :, :, None]
+        wij = jnp.where(mask, wij, -1e30)
+        # state path weight for row i: Fcum_i + m_in
+        w_state = fcum + m[:, None, :]           # (B,lc,H)
+        m_i = jnp.maximum(jnp.max(wij, axis=2), w_state)  # (B,lc,H)
+        pij = jnp.exp(wij - m_i[:, :, None, :])  # (B,i,j,H)
+        p_state = jnp.exp(w_state - m_i)         # (B,lc,H)
+        qk = jnp.einsum("bihd,bjhd->bijh", qb, kb)
+        gmat = qk * pij
+        num = jnp.einsum("bijh,bjhe->bihe", gmat, vb) \
+            + jnp.einsum("bihd,bhde->bihe", qb, cmat) \
+            * p_state[..., None]
+        # n_i = sum_j pij k_j + p_state * n_in ; then den = |q.n|
+        n_i = jnp.einsum("bijh,bjhd->bihd", pij, kb) \
+            + p_state[..., None] * n[:, None]
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bihd,bihd->bih", qb, n_i)),
+            jnp.exp(-m_i))
+        y = num / den[..., None]
+        # chunk-end state
+        total = fcum[:, -1]                       # (B,H)
+        w_end = total[:, None, :] - fcum + ib     # (B,lc,H)
+        m_out = jnp.maximum(total + m, jnp.max(w_end, axis=1))
+        p_end = jnp.exp(w_end - m_out[:, None, :])
+        carry_scale = jnp.exp(total + m - m_out)
+        cmat = carry_scale[..., None, None] * cmat + jnp.einsum(
+            "bjhd,bjhe,bjh->bhde", kb, vb, p_end)
+        n = carry_scale[..., None] * n + jnp.einsum(
+            "bjhd,bjh->bhd", kb, p_end)
+        return (cmat, n, m_out), y
+
+    carry0 = (jnp.zeros((bsz, h, d, d), jnp.float32),
+              jnp.zeros((bsz, h, d), jnp.float32),
+              jnp.zeros((bsz, h), jnp.float32))
+    final_state, ys = jax.lax.scan(chunk_body, carry0,
+                                   (qc, kc, vc, ic, fc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s_p, h, d)[:, :s]
+    return y.astype(q.dtype), final_state
+
+
+def mlstm_step(q_t, k_t, v_t, i_t, f_t, state):
+    """One decode step; state = (C, n, m)."""
+    cmat, n, m = state
+    d = q_t.shape[-1]
+    scale = d ** -0.5
+    qt = q_t.astype(jnp.float32) * scale
+    kt = k_t.astype(jnp.float32) * scale
+    vt = v_t.astype(jnp.float32)
+    it = i_t.astype(jnp.float32)
+    ft = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+    m_new = jnp.maximum(ft + m, it)
+    fs = jnp.exp(ft + m - m_new)
+    is_ = jnp.exp(it - m_new)
+    cmat = fs[..., None, None] * cmat \
+        + is_[..., None, None] * kt[..., :, None] * vt[..., None, :]
+    n = fs[..., None] * n + is_[..., None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, cmat)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(q_t.dtype)
+    return y, (cmat, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM sLSTM (scalar memory, recurrent head mixing)
+# ---------------------------------------------------------------------------
+
+
+def slstm_scan(x_gates, r_weights, h0=None):
+    """Sequential sLSTM over preprojected input gate preactivations.
+
+    x_gates: (B,S,4,d) order (i,f,z,o) from the input projections;
+    r_weights: (4,H,hd,hd) per-head recurrent matrices (block diag).
+    Returns h: (B,S,d) and final state (h,c,n,m) each (B,d).
+    """
+    bsz, s, _, d = x_gates.shape
+    nh = r_weights.shape[1]
+    hd = d // nh
+
+    def step(carry, t):
+        h, c, n, m = carry           # (B,d) x3, (B,d)
+        hh = h.reshape(bsz, nh, hd)
+        rec = jnp.einsum("bhd,ghde->bghe", hh,
+                         r_weights.astype(jnp.float32))
+        rec = rec.reshape(bsz, 4, d)
+        pre = x_gates[:, t].astype(jnp.float32) + rec
+        it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        fs = jnp.exp(logf + m - m_new)
+        is_ = jnp.exp(it - m_new)
+        c = fs * c + is_ * zt
+        n = fs * n + is_
+        h_new = ot * c / jnp.maximum(n, 1.0)
+        return (h_new, c, n, m_new), h_new
+
+    zeros = jnp.zeros((bsz, d), jnp.float32)
+    carry0 = (zeros if h0 is None else h0.astype(jnp.float32),
+              zeros, zeros, jnp.full((bsz, d), -1e30, jnp.float32))
+    carry, ys = jax.lax.scan(step, carry0, jnp.arange(s))
+    return ys.transpose(1, 0, 2), carry
+
+
+def slstm_step(x_gates_t, r_weights, state):
+    """One decode step. x_gates_t: (B,4,d); state (h,c,n,m)."""
+    bsz, _, d = x_gates_t.shape
+    h, c, n, m = state
+    nh = r_weights.shape[1]
+    hd = d // nh
+    hh = h.reshape(bsz, nh, hd)
+    rec = jnp.einsum("bhd,ghde->bghe", hh,
+                     r_weights.astype(jnp.float32)).reshape(bsz, 4, d)
+    pre = x_gates_t.astype(jnp.float32) + rec
+    it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    fs = jnp.exp(logf + m - m_new)
+    is_ = jnp.exp(it - m_new)
+    c = fs * c + is_ * zt
+    n = fs * n + is_
+    h_new = ot * c / jnp.maximum(n, 1.0)
+    return h_new, (h_new, c, n, m_new)

@@ -1,0 +1,2 @@
+from .adamw import AdamW, cosine_schedule, global_norm  # noqa: F401
+from . import compress  # noqa: F401

@@ -1,0 +1,79 @@
+"""AdamW implemented directly on pytrees (no external deps).
+
+Optimizer moments live in f32 and inherit the parameter shardings, so
+under the production mesh the optimizer is TP-sharded exactly like the
+weights (ZeRO-style DP sharding of moments is a documented hillclimb
+option in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def _lr(self, step):
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, params, grads, opt_state, step):
+        """Returns (new_params, new_opt_state)."""
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip is not None:
+            gnorm = global_norm(gf)
+            scale = jnp.minimum(1.0, self.grad_clip
+                                / jnp.maximum(gnorm, 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        t = step.astype(jnp.float32) + 1.0
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         opt_state["m"], gf)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         opt_state["v"], gf)
+        mhat_scale = 1.0 / (1.0 - b1 ** t)
+        vhat_scale = 1.0 / (1.0 - b2 ** t)
+
+        def upd(p, m_, v_):
+            u = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale)
+                                     + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, peak_lr * cos)
+    return lr

@@ -1,0 +1,45 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+int8 quantization with per-tensor scale and stochastic rounding — the
+classic bandwidth trick for the slow inter-pod hop. Quantize ->
+(all-reduce happens on the int8-as-f32 payload under GSPMD; on real
+fabric this is an int8 collective) -> dequantize. Unbiased:
+E[deq(q(x))] = x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, key):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    lo = jnp.floor(y)
+    prob = y - lo
+    rnd = jax.random.uniform(key, x.shape)
+    q = lo + (rnd < prob).astype(jnp.float32)
+    q = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, key):
+    """Quantize every leaf; returns (quantized tree, scales tree)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    qs, scales = [], []
+    for leaf, k in zip(leaves, keys):
+        q, s = quantize_int8(leaf, k)
+        qs.append(q)
+        scales.append(s)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales))
+
+
+def decompress_tree(qs, scales):
+    return jax.tree.map(dequantize_int8, qs, scales)

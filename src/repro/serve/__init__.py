@@ -1,0 +1,1 @@
+from .engine import GenerationResult, ServeEngine, pad_and_batch  # noqa

@@ -1,0 +1,92 @@
+"""Serving engine: batched prefill + greedy/temperature decode with a
+preallocated KV/state cache, continuous-batching bookkeeping.
+
+The jitted hot path is exactly the serve_step the dry-run lowers; the
+engine adds request batching, cache management and sampling around it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: List[List[int]]     # per-sequence generated ids
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_len: int,
+                 batch_size: int, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        def _prefill(params, inputs):
+            return prefill(params, cfg, inputs, max_len)
+
+        def _step(params, caches, tok, pos, key):
+            logits, caches = decode_step(params, cfg, tok, caches, pos)
+            if temperature > 0.0:
+                nxt = jax.random.categorical(
+                    key, logits.astype(jnp.float32) / temperature,
+                    axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            return nxt.astype(jnp.int32), caches
+
+        self._prefill = jax.jit(_prefill)
+        self._step = jax.jit(_step, donate_argnums=1)
+
+    def generate(self, prompts, *, max_new_tokens: int,
+                 stop_token: Optional[int] = None) -> GenerationResult:
+        """prompts: (B, S) int32 (right-aligned, same length — the
+        batcher pads upstream)."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        b, s = prompts.shape
+        assert b == self.batch_size, (b, self.batch_size)
+        assert s + max_new_tokens <= self.max_len
+
+        logits, caches, pos = self._prefill(self.params, prompts)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs = [tok]
+        done = jnp.zeros((b,), bool)
+        for i in range(max_new_tokens - 1):
+            self.key, sub = jax.random.split(self.key)
+            tok, caches = self._step(self.params, caches, tok, pos,
+                                     sub)
+            pos = pos + 1
+            if stop_token is not None:
+                done = done | (tok == stop_token)
+                if bool(done.all()):
+                    outs.append(tok)
+                    break
+            outs.append(tok)
+        toks = jnp.stack(outs, axis=1)
+        return GenerationResult(tokens=[list(map(int, row))
+                                        for row in toks],
+                                steps=toks.shape[1])
+
+
+def pad_and_batch(prompts: List[List[int]], batch_size: int,
+                  pad_id: int = 0):
+    """Left-pad a ragged request list into fixed (B, S) batches."""
+    batches = []
+    for i in range(0, len(prompts), batch_size):
+        chunk = prompts[i:i + batch_size]
+        while len(chunk) < batch_size:
+            chunk = chunk + [chunk[-1]]      # repeat to fill the batch
+        s = max(len(p) for p in chunk)
+        rows = [[pad_id] * (s - len(p)) + list(p) for p in chunk]
+        batches.append(jnp.asarray(rows, jnp.int32))
+    return batches

@@ -1,0 +1,2 @@
+from .step import (make_prefill_step, make_serve_step,  # noqa: F401
+                   make_train_state, make_train_step)

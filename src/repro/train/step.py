@@ -1,0 +1,65 @@
+"""Train / serve step factories — the functions the launcher jits with
+explicit in/out shardings (the dry-run lowers exactly these)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.optim import AdamW
+
+
+def make_train_state(cfg: ArchConfig, params, optim: AdamW):
+    return {"params": params, "opt": optim.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ArchConfig, optim: AdamW, *, remat=True,
+                    grad_specs=None):
+    """state, batch -> new_state, metrics.
+
+    grad_specs: optional PartitionSpec pytree (the param specs). Pinning
+    gradients to the parameter sharding makes GSPMD emit a
+    reduce-scatter onto the FSDP shards instead of a full all-reduce
+    (4x less wire for bf16 grads).
+    """
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            return M.train_loss(p, cfg, batch, remat=remat)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        if grad_specs is not None:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_specs)
+        new_params, new_opt = optim.update(
+            state["params"], grads, state["opt"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One greedy decode step: (params, caches, token/emb, pos) ->
+    (next_token_or_logits, new_caches)."""
+
+    def serve_step(params, caches, inputs_t, pos):
+        logits, new_caches = M.decode_step(params, cfg, inputs_t,
+                                           caches, pos)
+        return logits, new_caches
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int):
+    def prefill_step(params, inputs):
+        return M.prefill(params, cfg, inputs, max_len)
+    return prefill_step

@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family
+runs one forward + one train-grad step + a prefill/decode consistency
+check on CPU, asserting shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import (decode_step, forward_logits, init_cache,
+                          init_params, prefill, train_loss)
+
+B, S = 2, 24
+
+
+def _batch(cfg, key):
+    ki, kl = jax.random.split(key)
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(ki, (B, S), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(ki, (B, S, cfg.d_model),
+                                   dtype=jnp.float32)
+    labels = jax.random.randint(kl, (B, S), 0, cfg.vocab_size)
+    return {"inputs": inputs, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_and_grad(arch):
+    cfg = get_config(arch).reduced()
+    # f32 params on CPU for numerics
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    logits = forward_logits(params, cfg, batch["inputs"], remat=False)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    loss, grads = jax.value_and_grad(train_loss)(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "no grads"
+    for g in leaves:
+        assert np.isfinite(np.asarray(g, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_matches_forward(arch):
+    """decode_step after prefill(S-1 tokens) must reproduce the
+    full-sequence forward logits at the last position."""
+    cfg = get_config(arch).reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, jax.random.PRNGKey(3))
+    inputs = batch["inputs"]
+    max_len = S + 4
+
+    full = forward_logits(params, cfg, inputs, remat=False)
+
+    # prefill on the first S-1 tokens, then decode token S-1
+    _, caches, pos = prefill(params, cfg, inputs[:, :S - 1], max_len)
+    assert int(pos) == S - 1
+    last_in = inputs[:, S - 1]
+    logits, caches = decode_step(params, cfg, last_in, caches, pos)
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32),
+        np.asarray(full[:, -1], np.float32), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "hymba-1.5b",
+                                  "minicpm3-4b", "h2o-danube-3-4b"])
+def test_pure_decode_chain(arch):
+    """init_cache + N decode steps == forward over those N tokens."""
+    cfg = get_config(arch).reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(4))
+    n = 10
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, n), 0,
+                              cfg.vocab_size)
+    full = forward_logits(params, cfg, toks, remat=False)
+    caches = init_cache(cfg, B, n + 2, dtype=jnp.float32)
+    outs = []
+    for t in range(n):
+        logits, caches = decode_step(params, cfg, toks[:, t], caches,
+                                     jnp.asarray(t, jnp.int32))
+        outs.append(logits)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_n_params_accounting():
+    """n_params() approximation within 20% of the actual leaf count for
+    a dense arch (sanity for the roofline's 6ND)."""
+    cfg = get_config("llama3-8b").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    actual = sum(x.size for x in jax.tree.leaves(params))
+    approx = cfg.n_params()
+    assert 0.5 * actual < approx < 2.0 * actual, (actual, approx)

@@ -1,0 +1,125 @@
+"""Fault-tolerance machinery: atomic checkpointing, CRC verification,
+restart/restore, elastic re-sharding, straggler + heartbeat monitors."""
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.ft import HeartbeatMonitor, StragglerWatchdog
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    return {"params": {"w": jax.random.normal(k1, (8, 8)),
+                       "b": jnp.zeros((8,))},
+            "opt": {"m": {"w": jax.random.normal(k2, (8, 8)),
+                          "b": jnp.ones((8,))}},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(10, tree, blocking=True)
+    assert mgr.latest_valid_step() == 10
+    step, restored = mgr.restore_latest(tree)
+    assert step == 10
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b),
+                 tree, restored)
+
+
+def test_corrupted_checkpoint_skipped(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(1, tree, blocking=True)
+    mgr.save(2, tree, blocking=True)
+    # corrupt step 2: flip bytes in one array
+    d = tmp_path / "step_0000000002"
+    target = sorted(d.glob("arr_*.npy"))[0]
+    raw = bytearray(target.read_bytes())
+    raw[-8] ^= 0xFF
+    target.write_bytes(bytes(raw))
+    assert mgr.latest_valid_step() == 1  # falls back to last good
+    step, restored = mgr.restore_latest(tree)
+    assert step == 1
+
+
+def test_torn_write_never_published(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(1, tree, blocking=True)
+    # simulate a crash mid-write: a .tmp dir left behind
+    tmp = tmp_path / "step_0000000005.tmp"
+    tmp.mkdir()
+    (tmp / "arr_00000.npy").write_bytes(b"garbage")
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_valid_step() == 1
+
+
+def test_keep_last_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore onto explicit (single-device) shardings — the elastic
+    re-mesh path."""
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(3, tree, blocking=True)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()), tree)
+    step, restored = mgr.restore_latest(tree, shardings=sh)
+    assert step == 3
+    for leaf in jax.tree.leaves(restored):
+        assert leaf.sharding is not None
+
+
+def test_missing_array_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"a": jnp.ones(3)}, blocking=True)
+    with pytest.raises(ValueError, match="missing"):
+        mgr.restore(1, {"a": jnp.ones(3), "b": jnp.ones(3)})
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(threshold=2.0, min_samples=5)
+    for i in range(20):
+        assert not wd.record(i, 1.0)
+    assert wd.record(20, 3.5)          # 3.5x median
+    assert not wd.record(21, 1.4)
+    assert wd.slow_steps == [20]
+
+
+def test_heartbeat_monitor_failure_fires_once():
+    t = [0.0]
+    failed = []
+    mon = HeartbeatMonitor(hosts=["h0", "h1"], interval_s=1.0,
+                           suspect_after=2, dead_after=5,
+                           on_failure=failed.append,
+                           clock=lambda: t[0])
+    t[0] = 3.0
+    mon.beat("h0")
+    assert mon.status("h1") == "suspected"
+    assert mon.poll() == []
+    t[0] = 6.0
+    mon.beat("h0")
+    assert mon.poll() == ["h1"]
+    assert mon.poll() == []            # fires exactly once
+    assert failed == ["h1"]
+    assert mon.alive_hosts == ["h0"]
+    # elastic rejoin
+    mon.beat("h1")
+    assert mon.status("h1") == "alive"

@@ -1,0 +1,196 @@
+"""Core library behaviour: spec parsing, graph building, fusion plan,
+and end-to-end program execution in all three modes vs the oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AXPYDOT_SPEC, Program, axpydot_program, fusion,
+                        spec as spec_mod)
+from repro.core.graph import DataflowGraph
+from repro.core.spec import SpecError
+from repro.kernels import ref
+
+
+def _vec(n, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Spec / graph validation
+# ---------------------------------------------------------------------------
+
+
+def test_parse_axpydot_spec():
+    ps = spec_mod.parse(AXPYDOT_SPEC)
+    assert [r.name for r in ps.routines] == ["zcalc", "zdot"]
+    g = DataflowGraph(ps)
+    assert g.order == ["zcalc", "zdot"]
+    assert sorted(g.input_names()) == ["neg_alpha", "u", "v", "w"]
+    assert g.output_names() == ["beta"]
+
+
+def test_unknown_routine_rejected():
+    with pytest.raises(KeyError):
+        spec_mod.parse({"routines": [{"blas": "nosuch"}]})
+
+
+def test_bad_connection_target_rejected():
+    bad = {"routines": [
+        {"blas": "axpy", "name": "a", "connections": {"out": "b.nope"}},
+        {"blas": "dot", "name": "b"}]}
+    with pytest.raises(SpecError, match="no input port"):
+        spec_mod.parse(bad)
+
+
+def test_scalar_output_cannot_feed_window():
+    bad = {"routines": [
+        {"blas": "dot", "name": "d", "connections": {"out": "a.x"}},
+        {"blas": "axpy", "name": "a"}]}
+    with pytest.raises(SpecError, match="scalar outputs"):
+        DataflowGraph(spec_mod.parse(bad))
+
+
+def test_cycle_rejected():
+    bad = {"routines": [
+        {"blas": "axpy", "name": "a", "connections": {"out": "b.x"}},
+        {"blas": "axpy", "name": "b", "connections": {"out": "a.x"}}]}
+    with pytest.raises(SpecError, match="cycle"):
+        DataflowGraph(spec_mod.parse(bad))
+
+
+def test_double_driven_port_rejected():
+    bad = {"routines": [
+        {"blas": "axpy", "name": "a", "connections": {"out": "c.x"}},
+        {"blas": "axpy", "name": "b", "connections": {"out": "c.x"}},
+        {"blas": "dot", "name": "c"}]}
+    with pytest.raises(SpecError, match="driven twice"):
+        DataflowGraph(spec_mod.parse(bad))
+
+
+def test_vector_width_must_be_lane_multiple():
+    with pytest.raises(SpecError, match="multiple of 128"):
+        spec_mod.parse({"vector_width": 64,
+                        "routines": [{"blas": "axpy"}]})
+
+
+# ---------------------------------------------------------------------------
+# Fusion planning
+# ---------------------------------------------------------------------------
+
+
+def test_axpydot_fuses_into_one_group():
+    prog = axpydot_program()
+    assert len(prog.groups) == 1
+    assert prog.groups[0].fused
+    assert prog.groups[0].nodes == ["zcalc", "zdot"]
+
+
+def test_nodataflow_mode_splits_groups():
+    prog = axpydot_program(mode="nodataflow")
+    assert len(prog.groups) == 2
+    assert not any(g.fused for g in prog.groups)
+
+
+def test_gemv_chain_does_not_fuse_into_level1():
+    spec = {"routines": [
+        {"blas": "gemv", "name": "mv",
+         "connections": {"out": "d.x"}},
+        {"blas": "dot", "name": "d"}]}
+    prog = Program.from_spec(spec)
+    # gemv is its own kernel; dot is a separate group
+    assert len(prog.groups) == 2
+
+
+# ---------------------------------------------------------------------------
+# Execution: all modes match the oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["dataflow", "nodataflow", "reference"])
+@pytest.mark.parametrize("n", [128, 1000, 10_000])
+def test_axpydot_program_all_modes(mode, n):
+    w, v, u = _vec(n, 1), _vec(n, 2), _vec(n, 3)
+    alpha = 0.7
+    prog = axpydot_program(mode=mode)
+    out = prog(neg_alpha=-alpha, w=w, v=v, u=u)
+    want = ref.axpydot(jnp.float32(alpha), w, v, u)
+    np.testing.assert_allclose(out["beta"], want, rtol=1e-5,
+                               atol=1e-2 * np.sqrt(n))
+
+
+@pytest.mark.parametrize("mode", ["dataflow", "nodataflow"])
+def test_longer_chain_waxpby_scal_dot_nrm2(mode):
+    """w' = 0.5x + 2y ; s = 3w' ; d = s·x ; r = ||s||."""
+    spec = {"routines": [
+        {"blas": "waxpby", "name": "wx",
+         "scalars": {"alpha": 0.5, "beta": 2.0},
+         "inputs": {"x": "x", "y": "y"},
+         "connections": {"out": "sc.x"}},
+        {"blas": "scal", "name": "sc", "scalars": {"alpha": 3.0},
+         "connections": {"out": "dd.x"},
+         "outputs": {"out": "s"}},
+        {"blas": "dot", "name": "dd", "inputs": {"y": "x"}},
+        # second consumer of the same on-chip window:
+        {"blas": "nrm2", "name": "nn"},
+    ]}
+    spec["routines"][1]["connections"] = {"out": "dd.x"}
+    # nn.x also fed by sc.out is impossible (single writer per port is
+    # fine, one output may fan out) — connect via a second entry:
+    spec["routines"][1]["connections"] = {"out": "dd.x"}
+    prog = Program.from_spec(spec, mode=mode)
+    x, y = _vec(512, 4), _vec(512, 5)
+    out = prog(**{"x": x, "y": y, "nn.x": 3.0 * (0.5 * x + 2.0 * y)})
+    w_ = 0.5 * x + 2.0 * y
+    s_ = 3.0 * w_
+    np.testing.assert_allclose(out["dd.out"], jnp.sum(s_ * x), rtol=1e-4)
+    np.testing.assert_allclose(out["s"], s_, rtol=1e-5, atol=1e-5)
+
+
+def test_fanout_one_output_two_consumers():
+    """One routine output feeding two downstream routines on-chip."""
+    spec = {"routines": [
+        {"blas": "scal", "name": "sc", "scalars": {"alpha": 2.0},
+         "inputs": {"x": "x"},
+         "connections": {"out": "d1.x"}},
+        {"blas": "dot", "name": "d1", "inputs": {"y": "y"}},
+    ]}
+    prog = Program.from_spec(spec)
+    x, y = _vec(256, 6), _vec(256, 7)
+    out = prog(x=x, y=y)
+    np.testing.assert_allclose(out["d1.out"], jnp.sum(2.0 * x * y),
+                               rtol=1e-4)
+
+
+def test_program_jitted_and_describe():
+    prog = axpydot_program()
+    run = prog.jitted()
+    w, v, u = _vec(300, 1), _vec(300, 2), _vec(300, 3)
+    out = run(neg_alpha=jnp.float32(-0.7), w=w, v=v, u=u)
+    want = ref.axpydot(jnp.float32(0.7), w, v, u)
+    np.testing.assert_allclose(out["beta"], want, rtol=1e-4, atol=1e-3)
+    desc = prog.describe()
+    assert "FUSED" in desc and "zcalc" in desc
+
+
+def test_onchip_synthetic_inputs():
+    prog = axpydot_program()
+    n = 1024
+    sizes = {"w": (n,), "v": (n,), "u": (n,), "neg_alpha": ()}
+    inputs = prog.synthetic_inputs(sizes)
+    out = prog(**inputs)
+    z = inputs["w"] + inputs["neg_alpha"] * inputs["v"]
+    np.testing.assert_allclose(out["beta"], jnp.sum(z * inputs["u"]),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_missing_input_raises():
+    prog = axpydot_program()
+    with pytest.raises(ValueError, match="missing program inputs"):
+        prog(w=_vec(10), v=_vec(10), u=_vec(10))
+
+
+def test_mismatched_lengths_raise_in_fused_group():
+    prog = axpydot_program()
+    with pytest.raises(ValueError, match="disagree on length"):
+        prog(neg_alpha=-1.0, w=_vec(128), v=_vec(128), u=_vec(256))

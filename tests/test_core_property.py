@@ -1,0 +1,84 @@
+"""Property-based tests (hypothesis): for ANY randomly composed level-1
+dataflow graph, the fused dataflow execution, the no-dataflow execution
+and the pure-jnp reference must agree — the system's core invariant
+(fusion never changes semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Program
+
+ELTWISE = ["axpy", "scal", "waxpby", "vsub"]
+REDUCE = ["dot", "asum", "nrm2"]
+
+
+@st.composite
+def random_chain_spec(draw):
+    """A random chain of 1-4 eltwise routines, optionally ending in a
+    reduction, with random literal scalars."""
+    n_elt = draw(st.integers(1, 4))
+    end_reduce = draw(st.booleans())
+    routines = []
+    for i in range(n_elt):
+        blas = draw(st.sampled_from(ELTWISE))
+        r = {"blas": blas, "name": f"e{i}"}
+        scal = {}
+        for s in {"axpy": ["alpha"], "scal": ["alpha"],
+                  "waxpby": ["alpha", "beta"], "vsub": []}[blas]:
+            scal[s] = draw(st.floats(-2.0, 2.0, allow_nan=False,
+                                     width=32))
+        if scal:
+            r["scalars"] = scal
+        if i > 0:
+            # chain: previous out feeds this x
+            routines[-1]["connections"] = {"out": f"e{i}.x"}
+        routines.append(r)
+    if end_reduce:
+        blas = draw(st.sampled_from(REDUCE))
+        routines[-1]["connections"] = {"out": "red.x"}
+        routines.append({"blas": blas, "name": "red"})
+    return {"dtype": "float32", "routines": routines,
+            "window_size": draw(st.sampled_from([128, 256]))}
+
+
+@given(spec=random_chain_spec(),
+       n=st.sampled_from([64, 257, 1024]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_fusion_is_semantics_preserving(spec, n, seed):
+    progs = {m: Program.from_spec(spec, mode=m)
+             for m in ("dataflow", "nodataflow", "reference")}
+    names = progs["dataflow"].input_names
+    key = jax.random.PRNGKey(seed)
+    inputs = {}
+    for i, name in enumerate(sorted(names)):
+        k = jax.random.fold_in(key, i)
+        inputs[name] = jax.random.uniform(k, (n,), minval=-1.0,
+                                          maxval=1.0)
+    outs = {m: p(**inputs) for m, p in progs.items()}
+    for out_name in progs["dataflow"].output_names:
+        a = np.asarray(outs["dataflow"][out_name], np.float64)
+        b = np.asarray(outs["reference"][out_name], np.float64)
+        c = np.asarray(outs["nodataflow"][out_name], np.float64)
+        scale = max(1.0, np.abs(b).max())
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4 * scale)
+        np.testing.assert_allclose(c, b, rtol=1e-4, atol=1e-4 * scale)
+
+
+@given(alpha=st.floats(-3.0, 3.0, allow_nan=False, width=32),
+       n=st.integers(1, 5000),
+       seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_axpydot_any_length_any_alpha(alpha, n, seed):
+    """Fused axpydot == oracle for arbitrary (unaligned) lengths."""
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(seed)
+    kw, kv, ku = jax.random.split(key, 3)
+    w = jax.random.uniform(kw, (n,), minval=-1, maxval=1)
+    v = jax.random.uniform(kv, (n,), minval=-1, maxval=1)
+    u = jax.random.uniform(ku, (n,), minval=-1, maxval=1)
+    got = ops.axpydot(alpha, w, v, u)
+    want = ref.axpydot(jnp.float32(alpha), w, v, u)
+    np.testing.assert_allclose(got, want, rtol=1e-4,
+                               atol=1e-4 * max(1.0, float(np.abs(want))))

@@ -1,0 +1,22 @@
+"""Distributed BLAS ('multi-AIE') routines — run in a subprocess so the
+8-device host platform doesn't leak into other tests' jax state."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = pathlib.Path(__file__).parent / "_distributed_check.py"
+_SRC = str(pathlib.Path(__file__).parents[1] / "src")
+
+
+@pytest.mark.slow
+def test_distributed_blas_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(_SCRIPT)], env=env, capture_output=True,
+        text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "DISTRIBUTED-OK" in proc.stdout

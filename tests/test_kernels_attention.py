@@ -1,0 +1,75 @@
+"""Flash-attention + decode-attention Pallas kernels vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.attention import mha
+from repro.kernels.decode_attention import decode_attention
+
+
+def _qkv(b, hq, hkv, sq, skv, d, dtype, seed=0):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (b, hq, sq, d), dtype=dtype)
+    k = jax.random.normal(kk, (b, hkv, skv, d), dtype=dtype)
+    v = jax.random.normal(kv, (b, hkv, skv, d), dtype=dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (5, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_mha_gqa_causal(hq, hkv, causal):
+    q, k, v = _qkv(2, hq, hkv, 64, 64, 32, jnp.float32)
+    got = mha(q, k, v, causal=causal, block_q=32, block_k=32)
+    want = ref.mha(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("sq,skv", [(16, 64), (64, 64), (33, 70)])
+def test_mha_uneven_lengths(sq, skv):
+    q, k, v = _qkv(1, 4, 2, sq, skv, 64, jnp.float32, seed=3)
+    got = mha(q, k, v, causal=True, block_q=16, block_k=32)
+    want = ref.mha(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [8, 32, None])
+def test_mha_sliding_window(window):
+    q, k, v = _qkv(1, 4, 4, 96, 96, 32, jnp.float32, seed=5)
+    got = mha(q, k, v, causal=True, window=window, block_q=32, block_k=32)
+    want = ref.mha(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_mha_bf16():
+    q, k, v = _qkv(1, 2, 2, 128, 128, 64, jnp.bfloat16, seed=7)
+    got = mha(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref.mha(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("window", [None, 64])
+def test_decode_attention(hq, hkv, window):
+    b, smax, d = 3, 256, 32
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(kq, (b, hq, d), dtype=jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, smax, d), dtype=jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, smax, d), dtype=jnp.float32)
+    cache_len = jnp.array([256, 100, 17], jnp.int32)
+    got = decode_attention(q, k, v, cache_len, window=window, block_k=128)
+    want = ref.decode_attention(q, k, v, cache_len, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_mha_last_token():
+    """Decode over a full cache == last row of causal prefill attention."""
+    b, hq, hkv, s, d = 2, 4, 2, 64, 32
+    q, k, v = _qkv(b, hq, hkv, s, s, d, jnp.float32, seed=13)
+    full = ref.mha(q, k, v, causal=True)
+    got = decode_attention(q[:, :, -1], k, v,
+                           jnp.full((b,), s, jnp.int32), block_k=128)
+    np.testing.assert_allclose(got, full[:, :, -1], rtol=2e-4, atol=2e-4)

@@ -1,0 +1,164 @@
+"""Shape/dtype sweeps: every BLAS Pallas kernel vs its ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+VEC_SIZES = [7, 128, 1000, 4096, 100_000]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+
+
+def _vecs(n, dtype, k, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    return [jax.random.normal(key, (n,), dtype=dtype) for key in keys]
+
+
+@pytest.mark.parametrize("n", VEC_SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_axpy(n, dtype):
+    x, y = _vecs(n, dtype, 2)
+    got = ops.axpy(1.7, x, y)
+    np.testing.assert_allclose(got, ref.axpy(jnp.asarray(1.7, dtype), x, y),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("n", VEC_SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_scal(n, dtype):
+    (x,) = _vecs(n, dtype, 1)
+    np.testing.assert_allclose(ops.scal(-0.3, x),
+                               ref.scal(jnp.asarray(-0.3, dtype), x),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("n", VEC_SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_waxpby(n, dtype):
+    x, y = _vecs(n, dtype, 2)
+    got = ops.waxpby(0.5, x, -1.25, y)
+    want = ref.waxpby(jnp.asarray(0.5, dtype), x,
+                      jnp.asarray(-1.25, dtype), y)
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("n", VEC_SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dot(n, dtype):
+    x, y = _vecs(n, dtype, 2)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(ops.dot(x, y), ref.dot(x, y), rtol=rtol,
+                               atol=1e-2 * np.sqrt(n))
+
+
+@pytest.mark.parametrize("n", VEC_SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_asum_nrm2(n, dtype):
+    (x,) = _vecs(n, dtype, 1)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(ops.asum(x), ref.asum(x), rtol=rtol)
+    np.testing.assert_allclose(ops.nrm2(x), ref.nrm2(x), rtol=rtol)
+
+
+@pytest.mark.parametrize("n", [64, 1000, 40_000])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_axpydot_fused_matches_oracle_and_nodf(n, dtype):
+    w, v, u = _vecs(n, dtype, 3)
+    alpha = 0.9
+    want = ref.axpydot(jnp.asarray(alpha, dtype), w, v, u)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    atol = 1e-2 * np.sqrt(n)
+    np.testing.assert_allclose(ops.axpydot(alpha, w, v, u), want,
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(ops.axpydot_nodf(alpha, w, v, u), want,
+                               rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("m,n", [(8, 128), (100, 300), (512, 512),
+                                 (1000, 257)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gemv(m, n, dtype):
+    key = jax.random.PRNGKey(1)
+    ka, kx, ky = jax.random.split(key, 3)
+    a = jax.random.normal(ka, (m, n), dtype=dtype)
+    x = jax.random.normal(kx, (n,), dtype=dtype)
+    y = jax.random.normal(ky, (m,), dtype=dtype)
+    got = ops.gemv(1.1, a, x, 0.7, y)
+    want = ref.gemv(1.1, a, x, 0.7, y)
+    tol = dict(rtol=3e-2, atol=3e-1) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4 * np.sqrt(n))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 128, 128), (64, 64, 64),
+                                   (130, 257, 100), (512, 384, 256)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gemm(m, k, n, dtype):
+    key = jax.random.PRNGKey(2)
+    ka, kb, kc = jax.random.split(key, 3)
+    a = jax.random.normal(ka, (m, k), dtype=dtype)
+    b = jax.random.normal(kb, (k, n), dtype=dtype)
+    c = jax.random.normal(kc, (m, n), dtype=dtype)
+    got = ops.gemm(0.8, a, b, 1.2, c, block_m=128, block_n=128, block_k=128)
+    want = ref.gemm(0.8, a, b, 1.2, c)
+    tol = dict(rtol=3e-2, atol=5e-1) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_matmul(dtype):
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (96, 160), dtype=dtype)
+    b = jax.random.normal(key, (160, 224), dtype=dtype)
+    got = ops.matmul(a, b, block_m=64, block_n=128, block_k=128)
+    want = ref.matmul(a, b)
+    tol = dict(rtol=3e-2, atol=5e-1) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_composites(dtype):
+    key = jax.random.PRNGKey(4)
+    ka, kb, kx, kp, kr = jax.random.split(key, 5)
+    m, n = 96, 160
+    a = jax.random.normal(ka, (m, n), dtype=dtype)
+    b = jax.random.normal(kb, (m, n), dtype=dtype)
+    x = jax.random.normal(kx, (n,), dtype=dtype)
+    p = jax.random.normal(kp, (n,), dtype=dtype)
+    r = jax.random.normal(kr, (m,), dtype=dtype)
+    np.testing.assert_allclose(ops.gesummv(0.4, a, 0.6, b, x),
+                               ref.gesummv(0.4, a, 0.6, b, x),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(ops.atax(a, x), ref.atax(a, x),
+                               rtol=1e-4, atol=1e-2)
+    q_got, s_got = ops.bicgk(a, p, r)
+    q_want, s_want = ref.bicgk(a, p, r)
+    np.testing.assert_allclose(q_got, q_want, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(s_got, s_want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,n", [(8, 128), (100, 300)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ger(m, n, dtype):
+    key = jax.random.PRNGKey(7)
+    kx, ky, ka = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (m,), dtype=dtype)
+    y = jax.random.normal(ky, (n,), dtype=dtype)
+    a = jax.random.normal(ka, (m, n), dtype=dtype)
+    got = ops.ger(0.5, x, y, a)
+    want = ref.ger(0.5, x, y, a)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)

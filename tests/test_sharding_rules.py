@@ -1,0 +1,93 @@
+"""Sharding-rule invariants (no devices needed: specs are static).
+
+Every generated PartitionSpec must (a) only name real mesh axes,
+(b) only shard divisible dims, (c) never shard the stacked layer dim.
+Checked for all 10 archs x both styles x both meshes via eval_shape.
+"""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import model as M
+from repro.models import sharding as S
+
+
+class _FakeMesh:
+    """Mesh stand-in: axis names + sizes only (what the rules read)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESHES = {
+    "pod16x16": _FakeMesh({"data": 16, "model": 16}),
+    "multipod": _FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+
+def _axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        assert a in mesh.axis_names, f"unknown axis {a}"
+        n *= mesh.shape[a]
+    return n
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("style", ["2d", "fsdp"])
+def test_param_specs_are_valid(arch, mesh_name, style):
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_name]
+    shapes = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = S.param_specs(cfg, mesh, shapes, style=style)
+
+    def check(path, leaf, spec):
+        assert isinstance(spec, P)
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, spec):
+            n = _axis_size(mesh, entry)
+            assert dim % n == 0, (path, spec, leaf.shape)
+
+    jax.tree_util.tree_map_with_path(check, shapes, specs)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mixtral-8x22b",
+                                  "hymba-1.5b", "minicpm3-4b"])
+def test_cache_specs_are_valid(arch):
+    from repro.configs import SHAPES
+    cfg = get_config(arch)
+    mesh = MESHES["pod16x16"]
+    shape = SHAPES["decode_32k"]
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    specs = S.cache_specs(cfg, mesh, cache_shapes,
+                          batch=shape.global_batch)
+
+    def check(path, leaf, spec):
+        for dim, entry in zip(leaf.shape, spec):
+            n = _axis_size(mesh, entry)
+            assert dim % n == 0, (path, spec, leaf.shape)
+
+    jax.tree_util.tree_map_with_path(check, cache_shapes, specs)
+
+
+def test_model_flops_sane():
+    """6·N·D consistency: train flops = 3x prefill flops per token."""
+    from repro.configs import SHAPES
+    from repro.launch.roofline import model_flops_for
+    cfg = get_config("llama3-8b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    pf = model_flops_for(cfg, SHAPES["prefill_32k"])
+    tok_tr = SHAPES["train_4k"].global_batch * 4096
+    tok_pf = SHAPES["prefill_32k"].global_batch * 32768
+    assert tr / tok_tr == pytest.approx(3 * pf / tok_pf)
+    # MoE uses active params
+    mx = get_config("mixtral-8x22b")
+    assert mx.n_active_params() < 0.35 * mx.n_params()
