@@ -3,6 +3,7 @@
   fig3      — paper Fig. 3 (axpy/gemv/axpydot, DF vs no-DF, PL vs
               on-chip, CPU baseline)           [the paper's only figure]
   kernels   — per-kernel microbenchmarks
+  solvers   — iterative-solver iteration throughput, DF vs no-DF
   roofline  — the (arch x shape) roofline table from the dry-run
               artifacts (run `python -m repro.launch.dryrun --all`
               first; skipped gracefully if absent)
@@ -16,7 +17,8 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
 
-from benchmarks import fig3_routines, kernel_bench, roofline_table
+from benchmarks import (fig3_routines, kernel_bench, roofline_table,
+                        solver_bench)
 
 
 def main() -> None:
@@ -25,6 +27,9 @@ def main() -> None:
     print()
     print("== kernel microbenchmarks ==")
     kernel_bench.main()
+    print()
+    print("== solver benchmarks (dataflow-composed iteration loops) ==")
+    solver_bench.main(sizes=(256, 1024), max_iters=10)
     print()
     print("== roofline table (from dry-run artifacts) ==")
     if roofline_table.RESULTS.exists():

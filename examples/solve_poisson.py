@@ -1,0 +1,47 @@
+"""Solve a 1-D Poisson problem end-to-end with the dataflow CG solver.
+
+Discretizing -u'' = f on (0, 1) with homogeneous Dirichlet boundaries
+and n interior points gives the classic SPD tridiagonal system
+A = (1/h²) tridiag(-1, 2, -1). The solver's iteration body is built
+from registry routines (gemv/axpy/waxpby/nrm2) composed via
+ProgramSpec JSON and runs as a single on-device lax.while_loop.
+
+    PYTHONPATH=src python examples/solve_poisson.py
+"""
+import jax.numpy as jnp
+
+from repro.solvers import CG
+
+
+def poisson_matrix(n: int) -> jnp.ndarray:
+    h2 = (n + 1) ** 2  # 1/h²
+    main = 2.0 * jnp.ones(n)
+    off = -jnp.ones(n - 1)
+    return h2 * (jnp.diag(main) + jnp.diag(off, 1) + jnp.diag(off, -1))
+
+
+def main(n: int = 512):
+    A = poisson_matrix(n)
+    grid = jnp.arange(1, n + 1) / (n + 1)
+    # manufactured solution u(t) = sin(pi t)  =>  f = pi^2 sin(pi t)
+    f = (jnp.pi ** 2) * jnp.sin(jnp.pi * grid)
+    u_exact = jnp.sin(jnp.pi * grid)
+
+    solver = CG(mode="dataflow", max_iters=2 * n)
+    print(solver.describe())
+    print()
+
+    result = solver.solve(A, f, tol=1e-8)
+    relres = float(result.residual / jnp.linalg.norm(f))
+    print(f"n={n}: {result}")
+    print(f"  relative residual   : {relres:.3e}")
+    print(f"  max |u - u_exact|   : "
+          f"{float(jnp.max(jnp.abs(result.x - u_exact))):.3e} "
+          f"(discretization error ~ {1.0 / (n + 1) ** 2:.1e})")
+    hist = result.history[~jnp.isnan(result.history)]
+    print(f"  residual history    : {float(hist[0]):.2e} -> "
+          f"{float(hist[-1]):.2e} over {hist.shape[0] - 1} iterations")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.kernels import ops
 from repro.kernels.common import (LANES, as_2d, cdiv, default_interpret,
                                   pad_to, pl, smem_scalar_spec)
+from repro.kernels.dot import IAMAX_MAX_LEN, iamax_block
 
 from . import routines as R
 from .fusion import FusionGroup
@@ -39,10 +40,16 @@ _KERNEL_CALL: Dict[str, Callable] = {
     "waxpby": lambda s, i, kw: ops.waxpby(s["alpha"], i["x"], s["beta"],
                                           i["y"], **kw),
     "vsub": lambda s, i, kw: ops.axpy(-1.0, i["y"], i["x"], **kw),
+    "vmul": lambda s, i, kw: ops.vmul(i["x"], i["y"], **kw),
+    "copy": lambda s, i, kw: ops.copy(i["x"], **kw),
+    "rot": lambda s, i, kw: ops.rot(s["c"], s["s"], i["x"], i["y"], **kw),
     "dot": lambda s, i, kw: ops.dot(i["x"], i["y"], **kw),
     "asum": lambda s, i, kw: ops.asum(i["x"], **kw),
     "nrm2": lambda s, i, kw: ops.nrm2(i["x"], **kw),
+    "iamax": lambda s, i, kw: ops.iamax(i["x"], **kw),
     "gemv": lambda s, i, kw: ops.gemv(s["alpha"], i["A"], i["x"],
+                                      s["beta"], i["y"]),
+    "symv": lambda s, i, kw: ops.symv(s["alpha"], i["A"], i["x"],
                                       s["beta"], i["y"]),
     "ger": lambda s, i, kw: ops.ger(s["alpha"], i["x"], i["y"], i["A"]),
     "gemm": lambda s, i, kw: ops.gemm(s["alpha"], i["A"], i["B"],
@@ -108,6 +115,9 @@ def _build_fused_kernel(graph: DataflowGraph, group: FusionGroup,
     ns, nv = len(sig.scalar_keys), len(sig.vec_in_keys)
     ne = len(sig.elt_out_keys)
 
+    def _is_idx(key):
+        return graph.nodes[key[0]].rdef.index_reduction
+
     def kernel(*refs):
         s_refs = refs[:ns]
         v_refs = refs[ns:ns + nv]
@@ -118,8 +128,12 @@ def _build_fused_kernel(graph: DataflowGraph, group: FusionGroup,
         if r_refs:
             @pl.when(step == 0)
             def _init():
-                for r in r_refs:
-                    r[...] = jnp.zeros_like(r)
+                for key, r in zip(sig.red_out_keys, r_refs):
+                    if _is_idx(key):
+                        r[0, 0] = -1.0   # any |x| >= 0 beats the seed
+                        r[0, 1] = 0.0
+                    else:
+                        r[...] = jnp.zeros_like(r)
 
         env = {}
         for key, ref_ in zip(sig.vec_in_keys, v_refs):
@@ -132,18 +146,29 @@ def _build_fused_kernel(graph: DataflowGraph, group: FusionGroup,
             rdef = rspec.rdef
             s = {sn: scal_env[(name, sn)] for sn in rdef.scalars}
             args = [env[(name, p)] for p in rdef.inputs]
-            val = rdef.emitter(s, *args)
-            for port in rdef.outputs:
+            if rdef.index_reduction:
+                vals = (iamax_block(args[0], step),)
+            else:
+                val = rdef.emitter(s, *args)
+                vals = val if isinstance(val, tuple) else (val,)
+            assert len(vals) == len(rdef.outputs), rdef.name
+            for port, v in zip(rdef.outputs, vals):
                 # propagate along internal edges (the on-chip handoff)
                 for e in graph.consumers_of(name, port):
                     if e.dst in members:
-                        env[(e.dst, e.dst_port)] = val
-                env[(name, port)] = val
+                        env[(e.dst, e.dst_port)] = v
+                env[(name, port)] = v
 
         for key, ref_ in zip(sig.elt_out_keys, e_refs):
             ref_[...] = env[key].astype(out_dtype)
         for key, ref_ in zip(sig.red_out_keys, r_refs):
-            ref_[0, 0] += env[key]
+            if _is_idx(key):
+                val, gidx = env[key]
+                better = val > ref_[0, 0]
+                ref_[0, 1] = jnp.where(better, gidx, ref_[0, 1])
+                ref_[0, 0] = jnp.where(better, val, ref_[0, 0])
+            else:
+                ref_[0, 0] += env[key]
 
     return kernel
 
@@ -157,6 +182,9 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
     block_rows = max(graph.nodes[n].window_size for n in group.nodes)
     kernel = _build_fused_kernel(graph, group, sig, dtype)
 
+    has_idx_red = any(graph.nodes[k[0]].rdef.index_reduction
+                      for k in sig.red_out_keys)
+
     def run(scalars, vec_ins):
         vecs = [vec_ins[k] for k in sig.vec_in_keys]
         n = vecs[0].shape[0]
@@ -165,6 +193,10 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
                 raise ValueError(
                     f"fused group vectors disagree on length: "
                     f"{sig.vec_in_keys[0]}={n}, {k}={v.shape[0]}")
+        if has_idx_red and n > IAMAX_MAX_LEN:
+            raise ValueError(
+                f"iamax index carry is f32 and exact only up to "
+                f"{IAMAX_MAX_LEN} elements, got {n}")
         v2ds = []
         for v in vecs:
             v2d, _ = as_2d(v)
@@ -175,19 +207,23 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
         rows = v2ds[0].shape[0]
         grid = (cdiv(rows, br),)
         vec_spec = pl.BlockSpec((br, LANES), lambda i: (i, 0))
-        red_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+        # index-carrying reductions accumulate a (max, index) pair in a
+        # (1, 2) block; plain sum reductions keep the (1, 1) scalar
+        red_cols = [2 if graph.nodes[k[0]].rdef.index_reduction else 1
+                    for k in sig.red_out_keys]
+        red_specs = [pl.BlockSpec((1, c), lambda i: (0, 0))
+                     for c in red_cols]
         out_shapes = (
             [jax.ShapeDtypeStruct((rows, LANES), dtype)
              for _ in sig.elt_out_keys]
-            + [jax.ShapeDtypeStruct((1, 1), jnp.float32)
-               for _ in sig.red_out_keys])
+            + [jax.ShapeDtypeStruct((1, c), jnp.float32)
+               for c in red_cols])
         outs = pl.pallas_call(
             kernel,
             grid=grid,
             in_specs=[smem_scalar_spec()] * len(sig.scalar_keys)
             + [vec_spec] * len(v2ds),
-            out_specs=[vec_spec] * len(sig.elt_out_keys)
-            + [red_spec] * len(sig.red_out_keys),
+            out_specs=[vec_spec] * len(sig.elt_out_keys) + red_specs,
             out_shape=out_shapes,
             interpret=interpret,
         )(*[jnp.reshape(scalars[k], (1,)).astype(jnp.float32)
@@ -198,8 +234,12 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
             results[key] = o.reshape(-1)[:n]
         for key, o in zip(sig.red_out_keys,
                           outs[len(sig.elt_out_keys):]):
+            rdef = graph.nodes[key[0]].rdef
+            if rdef.index_reduction:
+                results[key] = o[0, 1].astype(jnp.int32)
+                continue
             val = o[0, 0]
-            post = graph.nodes[key[0]].rdef.post
+            post = rdef.post
             results[key] = post(val) if post is not None else val
         return results
 

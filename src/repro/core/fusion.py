@@ -34,12 +34,9 @@ def _reachability(graph: DataflowGraph):
     """descendants[n] = set of nodes reachable from n (excl. n)."""
     desc = {n: set() for n in graph.nodes}
     for n in reversed(graph.order):
-        for (src, _), edges in graph.out_edges.items():
-            if src != n:
-                continue
-            for e in edges:
-                desc[n].add(e.dst)
-                desc[n] |= desc[e.dst]
+        for e in graph.adj[n]:
+            desc[n].add(e.dst)
+            desc[n] |= desc[e.dst]
     return desc
 
 

@@ -49,16 +49,26 @@ class DataflowGraph:
         self.out_edges: dict[tuple, list] = {}  # (src, src_port) -> [edges]
 
         for r in spec.routines:
-            for out_port, target in r.connections.items():
-                tname, tport = target.rsplit(".", 1)
-                e = Edge(r.name, out_port, tname, tport)
-                key = (tname, tport)
-                if key in self.in_edges:
-                    raise SpecError(
-                        f"input port {tname}.{tport} driven twice")
-                self.in_edges[key] = e
-                self.out_edges.setdefault((r.name, out_port), []).append(e)
-                self.edges.append(e)
+            for out_port, targets in r.connections.items():
+                for target in targets:
+                    tname, tport = target.rsplit(".", 1)
+                    e = Edge(r.name, out_port, tname, tport)
+                    key = (tname, tport)
+                    if key in self.in_edges:
+                        raise SpecError(
+                            f"input port {tname}.{tport} driven twice")
+                    self.in_edges[key] = e
+                    self.out_edges.setdefault(
+                        (r.name, out_port), []).append(e)
+                    self.edges.append(e)
+
+        # adjacency list: src routine -> its out-edges, ordered by src
+        # port for determinism. Built once so topo sort / reachability
+        # are O(V + E) instead of rescanning every out_edges entry per
+        # node.
+        self.adj: dict[str, list] = {n: [] for n in self.nodes}
+        for key in sorted(self.out_edges):
+            self.adj[key[0]].extend(self.out_edges[key])
 
         self._check_port_kinds()
         self.order = self._topo_sort()
@@ -90,13 +100,10 @@ class DataflowGraph:
         while ready:
             n = ready.pop(0)
             order.append(n)
-            for (src, _), edges in sorted(self.out_edges.items()):
-                if src != n:
-                    continue
-                for e in edges:
-                    indeg[e.dst] -= 1
-                    if indeg[e.dst] == 0:
-                        ready.append(e.dst)
+            for e in self.adj[n]:
+                indeg[e.dst] -= 1
+                if indeg[e.dst] == 0:
+                    ready.append(e.dst)
         if len(order) != len(self.nodes):
             cyclic = sorted(set(self.nodes) - set(order))
             raise SpecError(f"dataflow graph has a cycle through {cyclic}")

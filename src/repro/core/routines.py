@@ -36,6 +36,9 @@ class RoutineDef:
     # classification for the fusion planner
     eltwise: bool = False       # pointwise producer (axpy/scal/waxpby)
     reduction: bool = False     # vector -> scalar sink (dot/asum/nrm2)
+    # index-carrying reduction (iamax): the generated kernel tracks a
+    # (running max, flat index) pair instead of a sum accumulator
+    index_reduction: bool = False
     # codegen hooks
     emitter: Optional[Callable] = None      # f32 block expr for fusion
     post: Optional[Callable] = None         # applied after full reduction
@@ -131,9 +134,32 @@ register(RoutineDef(
     inputs={"x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
     eltwise=True,
     emitter=lambda s, x, y: x * y,
-    kernel=None,  # fused-only helper (Hadamard); ref path when standalone
+    kernel=ops.vmul,
     reference=lambda s, x, y: x * y,
     cost=lambda sh: (sh["x"][0], _vbytes(sh["x"], sh["y"], sh["x"])),
+))
+
+register(RoutineDef(
+    name="copy", level=1, scalars=(),
+    inputs={"x": VEC}, outputs={"out": OUT_VEC},
+    eltwise=True,
+    emitter=lambda s, x: x,
+    kernel=ops.copy,
+    reference=lambda s, x: ref.copy(x),
+    cost=lambda sh: (0, _vbytes(sh["x"], sh["x"])),
+))
+
+register(RoutineDef(
+    name="rot", level=1, scalars=("c", "s"),
+    inputs={"x": VEC, "y": VEC},
+    outputs={"out_x": OUT_VEC, "out_y": OUT_VEC},
+    eltwise=True,
+    emitter=lambda s, x, y: (s["c"] * x + s["s"] * y,
+                             s["c"] * y - s["s"] * x),
+    kernel=ops.rot,
+    reference=lambda s, x, y: ref.rot(s["c"], s["s"], x, y),
+    cost=lambda sh: (6 * sh["x"][0],
+                     _vbytes(sh["x"], sh["y"], sh["x"], sh["y"])),
 ))
 
 # ---------------------------------------------------------------------------
@@ -171,6 +197,17 @@ register(RoutineDef(
     cost=lambda sh: (2 * sh["x"][0], _vbytes(sh["x"])),
 ))
 
+register(RoutineDef(
+    name="iamax", level=1, scalars=(),
+    inputs={"x": VEC}, outputs={"out": OUT_SCALAR},
+    reduction=True, index_reduction=True,
+    # no emitter: the fused-kernel generator synthesizes the
+    # (running max, index) carry — see codegen._emit_index_reduction
+    kernel=ops.iamax,
+    reference=lambda s, x: ref.iamax(x),
+    cost=lambda sh: (2 * sh["x"][0], _vbytes(sh["x"])),
+))
+
 # ---------------------------------------------------------------------------
 # Level 2 / 3 — standalone Pallas kernels (their own fusion groups)
 # ---------------------------------------------------------------------------
@@ -183,6 +220,18 @@ register(RoutineDef(
     reference=lambda s, A, x, y: ref.gemv(s["alpha"], A, x, s["beta"], y),
     cost=lambda sh: (2 * sh["A"][0] * sh["A"][1],
                      _vbytes(sh["A"], sh["x"], sh["y"], (sh["A"][0],))),
+))
+
+register(RoutineDef(
+    name="symv", level=2, scalars=("alpha", "beta"),
+    inputs={"A": MAT, "x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    kernel=lambda alpha, A, x, beta, y, **kw: ops.symv(
+        alpha, A, x, beta, y, **kw),
+    reference=lambda s, A, x, y: ref.symv(s["alpha"], A, x, s["beta"], y),
+    # only the lower triangle of A is read: ~n²/2 matrix bytes
+    cost=lambda sh: (2 * sh["A"][0] * sh["A"][0],
+                     _vbytes(sh["x"], sh["y"], (sh["A"][0],))
+                     + 2 * sh["A"][0] * sh["A"][0]),
 ))
 
 register(RoutineDef(

@@ -15,7 +15,10 @@ AIEBLAS JSON schema:
       "blas": "axpy",
       "name": "my_axpy",
       "scalars": {"alpha": {"input": "alpha"}},   // or {"value": -1.0}
-      "connections": {"out": "my_dot.x"},         // on-chip edge
+      "connections": {"out": "my_dot.x"},         // on-chip edge; a list
+                                                  // of targets fans out
+                                                  // one window to many
+                                                  // consumers
       "window_size": 512,                         // per-routine override
       "placement": {"x": ["data"], "y": ["data"]} // optional hint
     },
@@ -67,7 +70,7 @@ class RoutineSpec:
     blas: str
     name: str
     scalars: Mapping[str, ScalarBinding]
-    connections: Mapping[str, str]     # out port -> "routine.port"
+    connections: Mapping[str, tuple]   # out port -> ("routine.port", ...)
     input_aliases: Mapping[str, str]   # in port  -> program input name
     output_aliases: Mapping[str, str]  # out port -> program output name
     window_size: int
@@ -152,11 +155,26 @@ def parse(spec: Union[str, Mapping, pathlib.Path]) -> ProgramSpec:
                 raise SpecError(
                     f"{rname}: routine {blas!r} has no scalar {s!r}")
 
-        conns = dict(raw.get("connections", {}))
-        for port in conns:
+        conns = {}
+        for port, targets in dict(raw.get("connections", {})).items():
             if port not in rdef.outputs:
                 raise SpecError(
                     f"{rname}: no output port {port!r} on {blas!r}")
+            if isinstance(targets, str):
+                targets = (targets,)
+            elif isinstance(targets, (list, tuple)):
+                targets = tuple(targets)
+            else:
+                raise SpecError(
+                    f"{rname}.{port}: connection target must be a "
+                    f"'routine.port' string or a list of them, got "
+                    f"{targets!r}")
+            for t in targets:
+                if not isinstance(t, str):
+                    raise SpecError(
+                        f"{rname}.{port}: connection target must be a "
+                        f"'routine.port' string, got {t!r}")
+            conns[port] = targets
         in_aliases = dict(raw.get("inputs", {}))
         for port in in_aliases:
             if port not in rdef.inputs:
@@ -181,20 +199,21 @@ def parse(spec: Union[str, Mapping, pathlib.Path]) -> ProgramSpec:
     # validate connection targets
     by_name = {r.name: r for r in parsed}
     for r in parsed:
-        for out_port, target in r.connections.items():
-            if "." not in target:
-                raise SpecError(
-                    f"{r.name}.{out_port}: connection target must be "
-                    f"'routine.port', got {target!r}")
-            tname, tport = target.rsplit(".", 1)
-            if tname not in by_name:
-                raise SpecError(
-                    f"{r.name}.{out_port}: unknown target routine "
-                    f"{tname!r}")
-            if tport not in by_name[tname].rdef.inputs:
-                raise SpecError(
-                    f"{r.name}.{out_port}: target {tname!r} has no input "
-                    f"port {tport!r}")
+        for out_port, targets in r.connections.items():
+            for target in targets:
+                if "." not in target:
+                    raise SpecError(
+                        f"{r.name}.{out_port}: connection target must be "
+                        f"'routine.port', got {target!r}")
+                tname, tport = target.rsplit(".", 1)
+                if tname not in by_name:
+                    raise SpecError(
+                        f"{r.name}.{out_port}: unknown target routine "
+                        f"{tname!r}")
+                if tport not in by_name[tname].rdef.inputs:
+                    raise SpecError(
+                        f"{r.name}.{out_port}: target {tname!r} has no "
+                        f"input port {tport!r}")
 
     return ProgramSpec(
         name=name, dtype=_DTYPES[dtype_name], routines=tuple(parsed),

@@ -29,7 +29,23 @@ def _waxpby_kernel(alpha_ref, beta_ref, x_ref, y_ref, o_ref):
     o_ref[...] = alpha_ref[0] * x_ref[...] + beta_ref[0] * y_ref[...]
 
 
-def _eltwise_call(kernel, scalars, vectors, *, block_rows, interpret):
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _vmul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] * y_ref[...]
+
+
+def _rot_kernel(c_ref, s_ref, x_ref, y_ref, ox_ref, oy_ref):
+    c, s = c_ref[0], s_ref[0]
+    x, y = x_ref[...], y_ref[...]
+    ox_ref[...] = c * x + s * y
+    oy_ref[...] = c * y - s * x
+
+
+def _eltwise_call(kernel, scalars, vectors, *, block_rows, interpret,
+                  n_out=1):
     """Shared driver for level-1 element-wise routines on 1-D operands."""
     x2ds, n = [], None
     for v in vectors:
@@ -39,15 +55,17 @@ def _eltwise_call(kernel, scalars, vectors, *, block_rows, interpret):
     block_rows = min(block_rows, rows)
     grid = (cdiv(rows, block_rows),)
     vec_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
-    out = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[smem_scalar_spec()] * len(scalars) + [vec_spec] * len(x2ds),
-        out_specs=vec_spec,
-        out_shape=jax.ShapeDtypeStruct(x2ds[0].shape, x2ds[0].dtype),
+        out_specs=[vec_spec] * n_out,
+        out_shape=[jax.ShapeDtypeStruct(x2ds[0].shape, x2ds[0].dtype)
+                   for _ in range(n_out)],
         interpret=interpret,
     )(*[jnp.reshape(s, (1,)).astype(x2ds[0].dtype) for s in scalars], *x2ds)
-    return out.reshape(-1)[:n]
+    flat = tuple(o.reshape(-1)[:n] for o in outs)
+    return flat[0] if n_out == 1 else flat
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -70,3 +88,29 @@ def waxpby(alpha, x, beta, y, *, block_rows=DEFAULT_BLOCK_ROWS,
     interpret = default_interpret() if interpret is None else interpret
     return _eltwise_call(_waxpby_kernel, [alpha, beta], [x, y],
                          block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def copy(x, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
+    """y = x (BLAS scopy) — a window-to-window DMA through VMEM."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _eltwise_call(_copy_kernel, [], [x],
+                         block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def vmul(x, y, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
+    """out = x ⊙ y (Hadamard product)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _eltwise_call(_vmul_kernel, [], [x, y],
+                         block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def rot(c, s, x, y, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
+    """Apply a Givens plane rotation (BLAS srot):
+    x' = c x + s y ; y' = c y - s x. Returns (x', y')."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _eltwise_call(_rot_kernel, [c, s], [x, y],
+                         block_rows=block_rows, interpret=interpret,
+                         n_out=2)

@@ -15,16 +15,18 @@ import jax.numpy as jnp
 
 from . import ref  # noqa: F401  (re-exported for convenience)
 from .attention import mha
-from .axpy import axpy, scal, waxpby
+from .axpy import axpy, copy, rot, scal, vmul, waxpby
 from .axpydot import axpydot
 from .decode_attention import decode_attention
-from .dot import asum, dot, nrm2
+from .dot import asum, dot, iamax, nrm2
 from .ger import ger
 from .gemm import gemm, matmul
 from .gemv import gemv
+from .symv import symv
 
 __all__ = [
-    "axpy", "scal", "waxpby", "dot", "asum", "nrm2", "gemv", "gemm",
+    "axpy", "scal", "waxpby", "copy", "vmul", "rot", "dot", "asum",
+    "nrm2", "iamax", "gemv", "symv", "gemm",
     "matmul", "axpydot", "axpydot_nodf", "gesummv", "atax", "bicgk",
     "ger",
     "mha", "decode_attention", "ref",

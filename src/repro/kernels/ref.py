@@ -46,6 +46,26 @@ def waxpby(alpha, x, beta, y):
     return alpha * x + beta * y
 
 
+def copy(x):
+    """y = x (BLAS scopy)."""
+    return x
+
+
+def vmul(x, y):
+    """out = x ⊙ y (Hadamard product)."""
+    return x * y
+
+
+def rot(c, s, x, y):
+    """Givens plane rotation: (c x + s y, c y - s x)."""
+    return c * x + s * y, c * y - s * x
+
+
+def iamax(x):
+    """Index of the first element with maximal |x_i| (BLAS isamax)."""
+    return jnp.argmax(jnp.abs(x.astype(jnp.float32))).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # BLAS level 2
 # ---------------------------------------------------------------------------
@@ -60,6 +80,15 @@ def gemv(alpha, a, x, beta, y):
 def ger(alpha, x, y, a):
     """A' = alpha * x yᵀ + A (rank-1 update)."""
     return (alpha * jnp.outer(x, y) + a).astype(a.dtype)
+
+
+def symv(alpha, a, x, beta, y):
+    """y' = alpha * S @ x + beta * y with S the symmetric matrix stored
+    in A's lower triangle (the upper triangle is never referenced)."""
+    af = a.astype(jnp.float32)
+    s = jnp.tril(af) + jnp.tril(af, -1).T
+    acc = jnp.dot(s, x.astype(jnp.float32))
+    return (alpha * acc + beta * y.astype(jnp.float32)).astype(a.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,212 @@
+"""ProgramSpec JSON for every solver iteration body.
+
+Each spec below is a plain AIEBLAS-style JSON dict assembled from
+registry routines (gemv/dot/axpy/vsub/vmul/scal/waxpby/nrm2), so every
+solver iteration goes through the real pipeline — spec parse → dataflow
+graph → fusion plan → generated Pallas kernels — in both `dataflow`
+and `nodataflow` modes. The comments note which routines the fusion
+planner merges into a single on-chip kernel in dataflow mode.
+
+Convention: gemv `y` operands that are multiplied by beta=0 are aliased
+to an existing same-length vector instead of a dedicated zeros input,
+so no dead operand crosses the program boundary.
+"""
+from __future__ import annotations
+
+# r = b - A x ; rnorm = ‖r‖        (vsub → nrm2 fuse into one kernel)
+RESIDUAL = {
+    "name": "residual",
+    "routines": [
+        {"blas": "gemv", "name": "matvec",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "x", "y": "b"},
+         "connections": {"out": "res.y"}},
+        {"blas": "vsub", "name": "res", "inputs": {"x": "b"},
+         "connections": {"out": "rn.x"}, "outputs": {"out": "r"}},
+        {"blas": "nrm2", "name": "rn", "outputs": {"out": "rnorm"}},
+    ],
+}
+
+# ‖x‖ alone — used for the relative-tolerance scale ‖b‖
+NRM2 = {
+    "name": "nrm2",
+    "routines": [
+        {"blas": "nrm2", "name": "nn", "inputs": {"x": "x"},
+         "outputs": {"out": "norm"}},
+    ],
+}
+
+# --------------------------------------------------------------------
+# Conjugate gradient
+# --------------------------------------------------------------------
+
+# q = A p ; pq = pᵀ q
+CG_MATVEC = {
+    "name": "cg_matvec",
+    "routines": [
+        {"blas": "gemv", "name": "matvec",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "p", "y": "p"},
+         "connections": {"out": "pq.x"}, "outputs": {"out": "q"}},
+        {"blas": "dot", "name": "pq", "inputs": {"y": "p"},
+         "outputs": {"out": "pq"}},
+    ],
+}
+
+# x' = x + alpha p ; r' = r - alpha q ; rnorm = ‖r'‖
+# (rup → rn fuse: the new residual never round-trips through HBM
+#  before its norm is taken)
+CG_UPDATE = {
+    "name": "cg_update",
+    "routines": [
+        {"blas": "axpy", "name": "xup",
+         "scalars": {"alpha": {"input": "alpha"}},
+         "inputs": {"x": "p", "y": "x"}, "outputs": {"out": "x_next"}},
+        {"blas": "axpy", "name": "rup",
+         "scalars": {"alpha": {"input": "neg_alpha"}},
+         "inputs": {"x": "q", "y": "r"},
+         "connections": {"out": "rn.x"}, "outputs": {"out": "r_next"}},
+        {"blas": "nrm2", "name": "rn", "outputs": {"out": "rnorm"}},
+    ],
+}
+
+# p' = r' + beta p
+CG_PUPDATE = {
+    "name": "cg_pupdate",
+    "routines": [
+        {"blas": "waxpby", "name": "pup",
+         "scalars": {"alpha": 1.0, "beta": {"input": "beta"}},
+         "inputs": {"x": "r", "y": "p"}, "outputs": {"out": "p_next"}},
+    ],
+}
+
+# --------------------------------------------------------------------
+# Jacobi / Richardson:  x' = x + omega D⁻¹ (b - A x)
+# --------------------------------------------------------------------
+
+# x' = x + omega (dinv ⊙ r)         (vmul → axpy fuse into one kernel)
+# The residual r and its norm come from RESIDUAL on the *updated* x,
+# so the reported residual/history always belong to the returned
+# iterate (same telemetry semantics as CG/BiCGStab).
+JACOBI_UPDATE = {
+    "name": "jacobi_update",
+    "routines": [
+        {"blas": "vmul", "name": "sc",
+         "inputs": {"x": "r", "y": "dinv"},
+         "connections": {"out": "xup.x"}},
+        {"blas": "axpy", "name": "xup",
+         "scalars": {"alpha": {"input": "omega"}},
+         "inputs": {"y": "x"}, "outputs": {"out": "x_next"}},
+    ],
+}
+
+# --------------------------------------------------------------------
+# BiCGStab
+# --------------------------------------------------------------------
+
+# v = A p ; rv = r̂ᵀ v
+BICG_MATVEC1 = {
+    "name": "bicg_matvec1",
+    "routines": [
+        {"blas": "gemv", "name": "matvec",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "p", "y": "p"},
+         "connections": {"out": "rv.x"}, "outputs": {"out": "v"}},
+        {"blas": "dot", "name": "rv", "inputs": {"y": "rhat"},
+         "outputs": {"out": "rv"}},
+    ],
+}
+
+# s = r - alpha v
+# (A ‖s‖-based early exit — x += alpha p, stop when s is tiny — is the
+#  classic refinement; it needs a lax.cond in the driver body, left as
+#  a follow-up, so no nrm2 rides along that nobody consumes.)
+BICG_SUPDATE = {
+    "name": "bicg_supdate",
+    "routines": [
+        {"blas": "axpy", "name": "sup",
+         "scalars": {"alpha": {"input": "neg_alpha"}},
+         "inputs": {"x": "v", "y": "r"}, "outputs": {"out": "s"}},
+    ],
+}
+
+# t = A s ; tt = tᵀ t ; ts = tᵀ s    (t fans out to three input ports)
+BICG_MATVEC2 = {
+    "name": "bicg_matvec2",
+    "routines": [
+        {"blas": "gemv", "name": "matvec",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "s", "y": "s"},
+         "connections": {"out": ["tt.x", "tt.y", "ts.x"]},
+         "outputs": {"out": "t"}},
+        {"blas": "dot", "name": "tt", "outputs": {"out": "tt"}},
+        {"blas": "dot", "name": "ts", "inputs": {"y": "s"},
+         "outputs": {"out": "ts"}},
+    ],
+}
+
+# x' = x + alpha p + omega s ; r' = s - omega t ; rnorm ; rho' = r̂ᵀ r'
+# Two fused groups: {xh → xup} and {rup → rn, rho}
+BICG_XRUPDATE = {
+    "name": "bicg_xrupdate",
+    "routines": [
+        {"blas": "axpy", "name": "xh",
+         "scalars": {"alpha": {"input": "alpha"}},
+         "inputs": {"x": "p", "y": "x"},
+         "connections": {"out": "xup.y"}},
+        {"blas": "axpy", "name": "xup",
+         "scalars": {"alpha": {"input": "omega"}},
+         "inputs": {"x": "s"}, "outputs": {"out": "x_next"}},
+        {"blas": "axpy", "name": "rup",
+         "scalars": {"alpha": {"input": "neg_omega"}},
+         "inputs": {"x": "t", "y": "s"},
+         "connections": {"out": ["rn.x", "rho.x"]},
+         "outputs": {"out": "r_next"}},
+        {"blas": "nrm2", "name": "rn", "outputs": {"out": "rnorm"}},
+        {"blas": "dot", "name": "rho", "inputs": {"y": "rhat"},
+         "outputs": {"out": "rho_next"}},
+    ],
+}
+
+# p' = r' + beta (p - omega v)       (pm → pup fuse)
+BICG_PUPDATE = {
+    "name": "bicg_pupdate",
+    "routines": [
+        {"blas": "axpy", "name": "pm",
+         "scalars": {"alpha": {"input": "neg_omega"}},
+         "inputs": {"x": "v", "y": "p"},
+         "connections": {"out": "pup.y"}},
+        {"blas": "waxpby", "name": "pup",
+         "scalars": {"alpha": 1.0, "beta": {"input": "beta"}},
+         "inputs": {"x": "r"}, "outputs": {"out": "p_next"}},
+    ],
+}
+
+# --------------------------------------------------------------------
+# Power iteration
+# --------------------------------------------------------------------
+
+# av = A v ; norm = ‖av‖ ; lambda = vᵀ av
+POWER_STEP = {
+    "name": "power_step",
+    "routines": [
+        {"blas": "gemv", "name": "matvec",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "v", "y": "v"},
+         "connections": {"out": ["nn.x", "lam.x"]},
+         "outputs": {"out": "av"}},
+        {"blas": "nrm2", "name": "nn", "outputs": {"out": "norm"}},
+        {"blas": "dot", "name": "lam", "inputs": {"y": "v"},
+         "outputs": {"out": "lambda"}},
+    ],
+}
+
+# v' = av / ‖av‖
+NORMALIZE = {
+    "name": "normalize",
+    "routines": [
+        {"blas": "scal", "name": "norm",
+         "scalars": {"alpha": {"input": "inv_norm"}},
+         "inputs": {"x": "av"}, "outputs": {"out": "v_next"}},
+    ],
+}

@@ -148,6 +148,146 @@ def test_composites(dtype):
     np.testing.assert_allclose(s_got, s_want, rtol=1e-4, atol=1e-3)
 
 
+# ---------------------------------------------------------------------------
+# PR1 registry growth: copy / vmul / rot / iamax / symv
+# Property style: seeded sweeps over random shapes and values, kernel
+# vs reference, plus fused-vs-unfused parity through Program specs.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", VEC_SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_copy(n, dtype):
+    (x,) = _vecs(n, dtype, 1)
+    got = ops.copy(x)
+    assert got.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+@pytest.mark.parametrize("n", VEC_SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_vmul(n, dtype):
+    x, y = _vecs(n, dtype, 2)
+    np.testing.assert_allclose(ops.vmul(x, y), ref.vmul(x, y),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_rot_property(seed):
+    """Random sizes/angles: kernel matches oracle and preserves the
+    rotation invariant x'² + y'² = x² + y² elementwise."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 5000))
+    theta = float(rng.uniform(0, 2 * np.pi))
+    c, s = float(np.cos(theta)), float(np.sin(theta))
+    x, y = _vecs(n, jnp.float32, 2, seed=seed)
+    gx, gy = ops.rot(c, s, x, y)
+    wx, wy = ref.rot(c, s, x, y)
+    np.testing.assert_allclose(gx, wx, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gy, wy, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gx * gx + gy * gy, x * x + y * y,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_iamax_property(seed):
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(1, 20_000))
+    (x,) = _vecs(n, jnp.float32, 1, seed=seed)
+    assert int(ops.iamax(x)) == int(ref.iamax(x))
+
+
+def test_iamax_ties_and_edges():
+    # first occurrence wins on ties (BLAS isamax semantics)
+    t = jnp.array([1.0, -3.0, 3.0, 0.5])
+    assert int(ops.iamax(t)) == 1
+    assert int(ops.iamax(jnp.zeros(1000))) == 0
+    assert int(ops.iamax(jnp.array([7.0]))) == 0
+    # max in the zero-padded tail region of the last window
+    x = jnp.zeros(1000).at[999].set(-5.0)
+    assert int(ops.iamax(x)) == 999
+
+
+@pytest.mark.parametrize("n", [8, 100, 257, 512])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_symv(n, dtype):
+    key = jax.random.PRNGKey(11)
+    ka, kx, ky = jax.random.split(key, 3)
+    a = jax.random.normal(ka, (n, n), dtype=dtype)
+    x = jax.random.normal(kx, (n,), dtype=dtype)
+    y = jax.random.normal(ky, (n,), dtype=dtype)
+    got = ops.symv(1.3, a, x, -0.6, y, block=128)
+    want = ref.symv(1.3, a, x, -0.6, y)
+    tol = dict(rtol=3e-2, atol=3e-1) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4 * np.sqrt(n))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_symv_ignores_upper_triangle():
+    """Only the lower triangle may be referenced."""
+    key = jax.random.PRNGKey(12)
+    a = jax.random.normal(key, (100, 100))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (100,))
+    y = jnp.zeros(100)
+    garbage = a + jnp.triu(jnp.full((100, 100), 1e6), k=1)
+    np.testing.assert_allclose(ops.symv(1.0, a, x, 0.0, y, block=64),
+                               ops.symv(1.0, garbage, x, 0.0, y, block=64),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["dataflow", "nodataflow", "reference"])
+@pytest.mark.parametrize("seed", range(3))
+def test_new_routines_fused_vs_unfused(mode, seed):
+    """copy/vmul/rot/iamax composed in one spec: identical results
+    whether the planner fuses them into one generated kernel
+    (dataflow), runs one kernel per routine (nodataflow), or takes the
+    jnp oracle path (reference)."""
+    from repro.core import Program
+
+    rng = np.random.default_rng(200 + seed)
+    n = int(rng.integers(2, 3000))
+    theta = float(rng.uniform(0, 2 * np.pi))
+    c, s = float(np.cos(theta)), float(np.sin(theta))
+    x, y = _vecs(n, jnp.float32, 2, seed=seed)
+
+    spec = {"routines": [
+        {"blas": "copy", "name": "cp", "inputs": {"x": "x"},
+         "connections": {"out": "g.x"}},
+        {"blas": "rot", "name": "g", "scalars": {"c": c, "s": s},
+         "inputs": {"y": "y"},
+         "connections": {"out_x": ["h.x", "im.x"], "out_y": "h.y"},
+         "outputs": {"out_y": "yr"}},
+        {"blas": "vmul", "name": "h", "outputs": {"out": "prod"}},
+        {"blas": "iamax", "name": "im", "outputs": {"out": "idx"}},
+    ]}
+    prog = Program.from_spec(spec, mode=mode)
+    out = prog(x=x, y=y)
+    wx, wy = ref.rot(c, s, x, y)
+    np.testing.assert_allclose(out["yr"], wy, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out["prod"], wx * wy, rtol=1e-4,
+                               atol=1e-5)
+    assert int(out["idx"]) == int(ref.iamax(wx))
+
+
+@pytest.mark.parametrize("mode", ["dataflow", "nodataflow", "reference"])
+def test_symv_through_program(mode):
+    from repro.core import Program
+
+    key = jax.random.PRNGKey(13)
+    a = jax.random.normal(key, (300, 300))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (300,))
+    y = jax.random.normal(jax.random.fold_in(key, 2), (300,))
+    spec = {"routines": [
+        {"blas": "symv", "name": "sv",
+         "scalars": {"alpha": 1.5, "beta": -0.5},
+         "inputs": {"A": "A", "x": "x", "y": "y"},
+         "outputs": {"out": "out"}}]}
+    out = Program.from_spec(spec, mode=mode)(A=a, x=x, y=y)
+    np.testing.assert_allclose(out["out"], ref.symv(1.5, a, x, -0.5, y),
+                               rtol=1e-4, atol=1e-3)
+
+
 @pytest.mark.parametrize("m,n", [(8, 128), (100, 300)])
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_ger(m, n, dtype):

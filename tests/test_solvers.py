@@ -1,0 +1,187 @@
+"""Solver subsystem: convergence vs jnp.linalg, dataflow/nodataflow
+parity, early stopping, residual telemetry, and compile-once loops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.solvers import (BiCGStab, CG, Jacobi, PowerIteration, cg,
+                           jacobi)
+
+MODES = ["dataflow", "nodataflow"]
+
+
+def _spd(n, seed=0):
+    k = jax.random.PRNGKey(seed)
+    m = jax.random.normal(k, (n, n), jnp.float32)
+    return m @ m.T / n + jnp.eye(n, dtype=jnp.float32)
+
+
+def _diag_dominant(n, seed=0):
+    a = _spd(n, seed)
+    return a + 2.0 * jnp.diag(jnp.sum(jnp.abs(a), axis=1))
+
+
+def _rhs(n, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Convergence vs jnp.linalg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [64, 512, 4096])
+def test_cg_solves_random_spd(n):
+    A, b = _spd(n), _rhs(n)
+    res = cg(A, b, tol=1e-6, max_iters=300)
+    assert bool(res.converged)
+    relres = float(jnp.linalg.norm(b - A @ res.x) / jnp.linalg.norm(b))
+    assert relres <= 1e-5, relres
+    x_ref = jnp.linalg.solve(A, b)
+    np.testing.assert_allclose(res.x, x_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_bicgstab_solves_nonsymmetric():
+    n = 256
+    # diagonally-shifted nonsymmetric system
+    k = jax.random.PRNGKey(3)
+    A = jax.random.normal(k, (n, n), jnp.float32) / jnp.sqrt(n) \
+        + 3.0 * jnp.eye(n)
+    b = _rhs(n)
+    res = BiCGStab(max_iters=300).solve(A, b, tol=1e-7)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_jacobi_converges_on_diag_dominant():
+    n = 128
+    A, b = _diag_dominant(n), _rhs(n)
+    res = jacobi(A, b, tol=1e-6, max_iters=500)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b),
+                               rtol=1e-4, atol=1e-5)
+    # reported residual belongs to the returned iterate, not the
+    # previous one
+    np.testing.assert_allclose(res.residual,
+                               jnp.linalg.norm(b - A @ res.x),
+                               rtol=1e-3)
+
+
+def test_power_iteration_finds_dominant_eigenpair():
+    n = 128
+    A = _spd(n)
+    res = PowerIteration(max_iters=2000).solve(A, tol=1e-9)
+    lam = res.aux["eigenvalue"]
+    lam_true = jnp.linalg.eigvalsh(A)[-1]
+    np.testing.assert_allclose(lam, lam_true, rtol=1e-4)
+    # eigvector residual ‖A v − λ v‖ small
+    v = res.x
+    assert float(jnp.linalg.norm(A @ v - lam * v)) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Mode parity: dataflow and nodataflow produce identical iterates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls,make_A", [
+    (CG, _spd), (BiCGStab, _spd), (Jacobi, _diag_dominant)])
+def test_linear_solver_mode_parity(cls, make_A):
+    n = 200
+    A, b = make_A(n), _rhs(n)
+    results = {m: cls(mode=m, max_iters=100).solve(A, b, tol=1e-7)
+               for m in MODES}
+    assert (int(results["dataflow"].iterations)
+            == int(results["nodataflow"].iterations))
+    np.testing.assert_allclose(results["dataflow"].x,
+                               results["nodataflow"].x,
+                               rtol=1e-5, atol=1e-6)
+    # residual histories track each other iteration by iteration
+    np.testing.assert_allclose(results["dataflow"].history,
+                               results["nodataflow"].history,
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_power_iteration_mode_parity():
+    A = _spd(100)
+    results = {m: PowerIteration(mode=m, max_iters=500).solve(A, tol=1e-8)
+               for m in MODES}
+    np.testing.assert_allclose(results["dataflow"].aux["eigenvalue"],
+                               results["nodataflow"].aux["eigenvalue"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(results["dataflow"].x,
+                               results["nodataflow"].x,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Stopping behaviour + telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_early_stop_on_max_iters():
+    A, b = _spd(128), _rhs(128)
+    res = CG(max_iters=3).solve(A, b, tol=1e-12)
+    assert int(res.iterations) == 3
+    assert not bool(res.converged)
+
+
+def test_stops_before_max_iters_on_tolerance():
+    A, b = _spd(128), _rhs(128)
+    res = CG(max_iters=200).solve(A, b, tol=1e-5)
+    assert bool(res.converged)
+    assert int(res.iterations) < 200
+
+
+def test_zero_rhs_converges_instantly():
+    A = _spd(64)
+    res = CG(max_iters=50).solve(A, jnp.zeros(64), tol=1e-6)
+    assert int(res.iterations) == 0
+    assert bool(res.converged)
+    np.testing.assert_array_equal(np.asarray(res.x), np.zeros(64))
+
+
+def test_residual_history_telemetry():
+    A, b = _spd(128), _rhs(128)
+    res = CG(max_iters=100).solve(A, b, tol=1e-6)
+    k = int(res.iterations)
+    hist = np.asarray(res.history)
+    assert hist.shape == (101,)
+    assert np.all(np.isfinite(hist[:k + 1]))
+    assert np.all(np.isnan(hist[k + 1:]))
+    np.testing.assert_allclose(hist[0], jnp.linalg.norm(b), rtol=1e-5)
+    np.testing.assert_allclose(hist[k], res.residual, rtol=1e-6)
+    # CG residuals on a well-conditioned SPD system shrink overall
+    assert hist[k] < 1e-3 * hist[0]
+
+
+# ---------------------------------------------------------------------------
+# Compile-once: the loop body is traced exactly once per shape
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls,make_A", [
+    (CG, _spd), (BiCGStab, _spd), (Jacobi, _diag_dominant)])
+def test_loop_body_compiles_once(cls, make_A):
+    n = 96
+    A, b = make_A(n), _rhs(n)
+    solver = cls(max_iters=50)
+    solver.solve(A, b, tol=1e-6)
+    assert solver.trace_count == 1
+    # same shapes, different values/tol: jit cache hit, no retrace
+    solver.solve(A + 0.1 * jnp.eye(n), b * 2.0, tol=1e-4)
+    assert solver.trace_count == 1
+    # new shape: exactly one more trace
+    solver.solve(make_A(2 * n), _rhs(2 * n), tol=1e-6)
+    assert solver.trace_count == 2
+
+
+def test_solver_describe_lists_fused_groups():
+    solver = CG(mode="dataflow")
+    desc = solver.describe()
+    assert "FUSED on-chip group" in desc
+    assert "cg_update" in desc
+    nodesc = CG(mode="nodataflow").describe()
+    assert "FUSED" not in nodesc
