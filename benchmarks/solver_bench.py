@@ -1,6 +1,11 @@
 """Solver benchmarks: iterations/s for the dataflow-composed solvers
 and the dataflow-vs-nodataflow speedup of the on-device iteration loop.
 
+Covers both solver styles: the class-based SolverPrograms AND the
+JSON-described loop programs (cg_spec / jacobi_spec rows), so a
+regression in the spec-level path shows up next to its hand-written
+reference.
+
 CSV: solver,mode,n,iters,us_per_iter[,df_speedup]
 
 Timing excludes compilation (one warm-up solve per configuration). On
@@ -8,6 +13,8 @@ CPU the Pallas kernels run in interpret mode, so absolute numbers are
 not hardware numbers — the interesting figure is the relative cost of
 fused vs per-routine iteration bodies, the same comparison as the
 paper's w/DF vs w/o-DF bars.
+
+`--smoke` runs tiny sizes with few iterations — the CI drift check.
 """
 from __future__ import annotations
 
@@ -16,9 +23,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.solvers import CG, BiCGStab, Jacobi, PowerIteration
+from repro.solvers import (CG, BiCGStab, Jacobi, LoopProgram,
+                           PowerIteration, specs)
+from repro.solvers.iterative import jacobi_dinv
 
 DEFAULT_SIZES = (256, 1024, 4096)
+SMOKE_SIZES = (64, 128)
 
 
 def _spd(n, seed=0):
@@ -32,7 +42,50 @@ def _diag_dominant(n, seed=0):
     return a + 2.0 * jnp.diag(jnp.sum(jnp.abs(a), axis=1))
 
 
-def _time_solve(solver, iters=3, **operands):
+def _rhs(n):
+    return jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+
+
+def _ops_linear(make_A, n):
+    A = make_A(n)
+    return {"A": A, "b": _rhs(n)}
+
+
+def _ops_power(make_A, n):
+    return {"A": make_A(n)}
+
+
+def _ops_cg_loop(make_A, n):
+    A = make_A(n)
+    return {"A": A, "b": _rhs(n), "x0": jnp.zeros(n, jnp.float32)}
+
+
+def _ops_jacobi_loop(make_A, n):
+    A = make_A(n)
+    return {"A": A, "b": _rhs(n), "x0": jnp.zeros(n, jnp.float32),
+            "dinv": jacobi_dinv(A), "omega": jnp.float32(1.0)}
+
+
+# name, solver factory (mode, max_iters) -> solver, matrix maker,
+# operand packer
+CONFIGS = (
+    ("cg", lambda m, i: CG(mode=m, max_iters=i), _spd, _ops_linear),
+    ("cg_spec",
+     lambda m, i: LoopProgram(specs.CG_LOOP, mode=m, max_iters=i),
+     _spd, _ops_cg_loop),
+    ("bicgstab", lambda m, i: BiCGStab(mode=m, max_iters=i), _spd,
+     _ops_linear),
+    ("jacobi", lambda m, i: Jacobi(mode=m, max_iters=i),
+     _diag_dominant, _ops_linear),
+    ("jacobi_spec",
+     lambda m, i: LoopProgram(specs.JACOBI_LOOP, mode=m, max_iters=i),
+     _diag_dominant, _ops_jacobi_loop),
+    ("power", lambda m, i: PowerIteration(mode=m, max_iters=i), _spd,
+     _ops_power),
+)
+
+
+def _time_solve(solver, operands, iters=3):
     run = lambda: solver.solve(**operands, tol=0.0)  # noqa: E731
     res = run()                       # warm-up: compile + first solve
     jax.block_until_ready(res.x)
@@ -44,36 +97,30 @@ def _time_solve(solver, iters=3, **operands):
     return us, int(res.iterations)
 
 
-def bench_one(cls, make_A, n, max_iters, **solver_kw):
+def bench_one(name, make_solver, make_A, make_ops, n, max_iters):
     """Times a full max_iters solve (tol=0 so no early exit) in both
     modes; returns rows of (solver, mode, n, iters, us_per_iter)."""
-    A = make_A(n)
-    b = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
-    operands = ({"A": A} if cls is PowerIteration else {"A": A, "b": b})
+    operands = make_ops(make_A, n)
     rows = []
     per_iter = {}
     for mode in ("dataflow", "nodataflow"):
-        solver = cls(mode=mode, max_iters=max_iters, **solver_kw)
-        us, iters = _time_solve(solver, **operands)
+        solver = make_solver(mode, max_iters)
+        us, iters = _time_solve(solver, operands)
         per_iter[mode] = us / max(iters, 1)
-        rows.append((solver.name, mode, n, iters, per_iter[mode]))
+        rows.append((name, mode, n, iters, per_iter[mode]))
     speedup = per_iter["nodataflow"] / per_iter["dataflow"]
-    return rows, (rows[0][0], n, speedup)
+    return rows, (name, n, speedup)
 
 
 def main(sizes=DEFAULT_SIZES, max_iters=20):
     print("solver,mode,n,iters,us_per_iter")
     speedups = []
-    for cls, make_A, kw in (
-            (CG, _spd, {}),
-            (BiCGStab, _spd, {}),
-            (Jacobi, _diag_dominant, {}),
-            (PowerIteration, _spd, {}),
-    ):
+    for name, make_solver, make_A, make_ops in CONFIGS:
         for n in sizes:
-            rows, sp = bench_one(cls, make_A, n, max_iters, **kw)
-            for name, mode, nn, iters, us in rows:
-                print(f"{name},{mode},{nn},{iters},{us:.1f}")
+            rows, sp = bench_one(name, make_solver, make_A, make_ops,
+                                 n, max_iters)
+            for rname, mode, nn, iters, us in rows:
+                print(f"{rname},{mode},{nn},{iters},{us:.1f}")
             speedups.append(sp)
     print()
     print("solver,n,df_speedup")
@@ -89,5 +136,10 @@ if __name__ == "__main__":
     ap.add_argument("--sizes", type=int, nargs="+",
                     default=list(DEFAULT_SIZES))
     ap.add_argument("--max-iters", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + few iterations (CI drift check)")
     args = ap.parse_args()
-    main(sizes=tuple(args.sizes), max_iters=args.max_iters)
+    if args.smoke:
+        main(sizes=SMOKE_SIZES, max_iters=5)
+    else:
+        main(sizes=tuple(args.sizes), max_iters=args.max_iters)

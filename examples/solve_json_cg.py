@@ -1,0 +1,106 @@
+"""Conjugate gradient from a pure JSON description — no solver code.
+
+The whole solver below is DATA: routines composed into dataflow stage
+programs, loop state with init bindings, scalar update expressions
+(`alpha = rz / pq`), vector AND scalar feedback edges, and a stop
+rule. `LoopProgram` compiles it into one jitted `lax.while_loop`; the
+iteration body traces exactly once and never leaves the device.
+
+Run:  PYTHONPATH=src python examples/solve_json_cg.py
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.solvers import LoopProgram
+
+CG_JSON = """
+{
+  "name": "cg_from_json",
+  "dtype": "float32",
+  "operands": {"A": "matrix", "b": "vector", "x0": "vector"},
+  "setup": [
+    {"program": {"name": "bnorm", "routines": [
+       {"blas": "nrm2", "name": "nn", "inputs": {"x": "b"},
+        "outputs": {"out": "bnorm"}}]}},
+    {"program": {"name": "residual", "routines": [
+       {"blas": "gemv", "name": "mv",
+        "scalars": {"alpha": 1.0, "beta": 0.0},
+        "inputs": {"A": "A", "x": "x0", "y": "b"},
+        "connections": {"out": "sub.y"}},
+       {"blas": "vsub", "name": "sub", "inputs": {"x": "b"},
+        "connections": {"out": "rn.x"}, "outputs": {"out": "r0"}},
+       {"blas": "nrm2", "name": "rn", "outputs": {"out": "rnorm0"}}]}}
+  ],
+  "iterate": {
+    "state": {
+      "x":  {"init": "x0"},
+      "r":  {"init": "r0"},
+      "p":  {"init": "r0"},
+      "rz": {"init": "rnorm0 * rnorm0", "kind": "scalar"}
+    },
+    "body": [
+      {"program": {"name": "matvec", "routines": [
+         {"blas": "gemv", "name": "mv",
+          "scalars": {"alpha": 1.0, "beta": 0.0},
+          "inputs": {"A": "A", "x": "p", "y": "p"},
+          "connections": {"out": "pq.x"}, "outputs": {"out": "q"}},
+         {"blas": "dot", "name": "pq", "inputs": {"y": "p"},
+          "outputs": {"out": "pq"}}]}},
+      {"let": {"alpha": "rz / pq", "neg_alpha": "-alpha"}},
+      {"program": {"name": "update", "routines": [
+         {"blas": "axpy", "name": "xup",
+          "scalars": {"alpha": {"input": "alpha"}},
+          "inputs": {"x": "p", "y": "x"},
+          "outputs": {"out": "x_next"}},
+         {"blas": "axpy", "name": "rup",
+          "scalars": {"alpha": {"input": "neg_alpha"}},
+          "inputs": {"x": "q", "y": "r"},
+          "connections": {"out": "rn.x"},
+          "outputs": {"out": "r_next"}},
+         {"blas": "nrm2", "name": "rn", "outputs": {"out": "rnorm"}}]}},
+      {"let": {"rz_next": "rnorm * rnorm", "beta": "rz_next / rz"}},
+      {"program": {"name": "pupdate", "routines": [
+         {"blas": "waxpby", "name": "pup",
+          "scalars": {"alpha": 1.0, "beta": {"input": "beta"}},
+          "inputs": {"x": "r", "y": "p"},
+          "outputs": {"out": "p_next"}}]},
+       "inputs": {"r": "r_next"}}
+    ],
+    "feedback": {"x": "x_next", "r": "r_next", "p": "p_next",
+                 "rz": "rz_next"},
+    "while": {"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
+              "rtol": 1e-6, "max_iters": 200},
+    "solution": {"x": "x"}
+  }
+}
+"""
+
+
+def main():
+    n = 256
+    key = jax.random.PRNGKey(0)
+    m = jax.random.normal(key, (n, n), jnp.float32)
+    A = m @ m.T / n + jnp.eye(n)                       # SPD
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+
+    solver = LoopProgram(json.loads(CG_JSON))
+    print(solver.describe())
+    print()
+
+    res = solver.solve(A=A, b=b, x0=jnp.zeros(n))
+    relres = float(jnp.linalg.norm(b - A @ res.x) / jnp.linalg.norm(b))
+    print(f"converged={bool(res.converged)} "
+          f"iterations={int(res.iterations)} relres={relres:.2e} "
+          f"(body traced {solver.trace_count}x)")
+
+    # multi-RHS: one vmapped compiled loop solves a block of systems
+    B = jax.random.normal(jax.random.PRNGKey(2), (4, n), jnp.float32)
+    batch = solver.batched(A=A, b=B, x0=jnp.zeros_like(B),
+                           axes={"A": None})
+    print(f"batched: {batch}")
+
+
+if __name__ == "__main__":
+    main()

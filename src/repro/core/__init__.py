@@ -4,7 +4,7 @@ JSON routine spec -> dataflow graph -> fusion plan -> generated Pallas
 kernels (dataflow mode) / per-routine kernels (no-dataflow) / jnp
 reference. Distributed ("multi-AIE") routines live in .distributed.
 """
-from . import codegen, distributed, fusion, graph, placement  # noqa: F401
-from . import routines, spec  # noqa: F401
+from . import codegen, distributed, expr, fusion, graph  # noqa: F401
+from . import lowering, placement, routines, spec  # noqa: F401
 from .runtime import (AXPY_SPEC, AXPYDOT_SPEC, GEMV_SPEC, Program,  # noqa
                       axpy_program, axpydot_program, gemv_program)

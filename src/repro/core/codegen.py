@@ -15,7 +15,6 @@ Three modes mirror the paper's evaluation matrix:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Dict, List
 
 import jax
@@ -24,7 +23,7 @@ import jax.numpy as jnp
 from repro.kernels import ops
 from repro.kernels.common import (LANES, as_2d, cdiv, default_interpret,
                                   pad_to, pl, smem_scalar_spec)
-from repro.kernels.dot import IAMAX_MAX_LEN, iamax_block
+from repro.kernels.dot import iamax_block
 
 from . import routines as R
 from .fusion import FusionGroup
@@ -125,15 +124,28 @@ def _build_fused_kernel(graph: DataflowGraph, group: FusionGroup,
         r_refs = refs[ns + nv + ne:]
         step = pl.program_id(0)
 
+        # index-carrying reductions own an (f32 max, int32 index) ref
+        # pair; plain sums own a single f32 accumulator
+        red_refs, cursor = {}, 0
+        for key in sig.red_out_keys:
+            if _is_idx(key):
+                red_refs[key] = (r_refs[cursor], r_refs[cursor + 1])
+                cursor += 2
+            else:
+                red_refs[key] = (r_refs[cursor],)
+                cursor += 1
+
         if r_refs:
             @pl.when(step == 0)
             def _init():
-                for key, r in zip(sig.red_out_keys, r_refs):
+                for key in sig.red_out_keys:
                     if _is_idx(key):
-                        r[0, 0] = -1.0   # any |x| >= 0 beats the seed
-                        r[0, 1] = 0.0
+                        m_ref, i_ref = red_refs[key]
+                        m_ref[0, 0] = -1.0   # any |x| >= 0 beats this
+                        i_ref[0, 0] = jnp.int32(0)
                     else:
-                        r[...] = jnp.zeros_like(r)
+                        (acc,) = red_refs[key]
+                        acc[...] = jnp.zeros_like(acc)
 
         env = {}
         for key, ref_ in zip(sig.vec_in_keys, v_refs):
@@ -161,14 +173,16 @@ def _build_fused_kernel(graph: DataflowGraph, group: FusionGroup,
 
         for key, ref_ in zip(sig.elt_out_keys, e_refs):
             ref_[...] = env[key].astype(out_dtype)
-        for key, ref_ in zip(sig.red_out_keys, r_refs):
+        for key in sig.red_out_keys:
             if _is_idx(key):
                 val, gidx = env[key]
-                better = val > ref_[0, 0]
-                ref_[0, 1] = jnp.where(better, gidx, ref_[0, 1])
-                ref_[0, 0] = jnp.where(better, val, ref_[0, 0])
+                m_ref, i_ref = red_refs[key]
+                better = val > m_ref[0, 0]
+                i_ref[0, 0] = jnp.where(better, gidx, i_ref[0, 0])
+                m_ref[0, 0] = jnp.where(better, val, m_ref[0, 0])
             else:
-                ref_[0, 0] += env[key]
+                (acc,) = red_refs[key]
+                acc[0, 0] += env[key]
 
     return kernel
 
@@ -182,9 +196,6 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
     block_rows = max(graph.nodes[n].window_size for n in group.nodes)
     kernel = _build_fused_kernel(graph, group, sig, dtype)
 
-    has_idx_red = any(graph.nodes[k[0]].rdef.index_reduction
-                      for k in sig.red_out_keys)
-
     def run(scalars, vec_ins):
         vecs = [vec_ins[k] for k in sig.vec_in_keys]
         n = vecs[0].shape[0]
@@ -193,10 +204,6 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
                 raise ValueError(
                     f"fused group vectors disagree on length: "
                     f"{sig.vec_in_keys[0]}={n}, {k}={v.shape[0]}")
-        if has_idx_red and n > IAMAX_MAX_LEN:
-            raise ValueError(
-                f"iamax index carry is f32 and exact only up to "
-                f"{IAMAX_MAX_LEN} elements, got {n}")
         v2ds = []
         for v in vecs:
             v2d, _ = as_2d(v)
@@ -207,17 +214,22 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
         rows = v2ds[0].shape[0]
         grid = (cdiv(rows, br),)
         vec_spec = pl.BlockSpec((br, LANES), lambda i: (i, 0))
-        # index-carrying reductions accumulate a (max, index) pair in a
-        # (1, 2) block; plain sum reductions keep the (1, 1) scalar
-        red_cols = [2 if graph.nodes[k[0]].rdef.index_reduction else 1
-                    for k in sig.red_out_keys]
-        red_specs = [pl.BlockSpec((1, c), lambda i: (0, 0))
-                     for c in red_cols]
+        # index-carrying reductions accumulate into an (f32 max, int32
+        # index) ref pair; plain sum reductions keep one (1, 1) f32
+        red_specs, red_shapes = [], []
+        for k in sig.red_out_keys:
+            if graph.nodes[k[0]].rdef.index_reduction:
+                red_specs += [pl.BlockSpec((1, 1), lambda i: (0, 0))] * 2
+                red_shapes += [jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                               jax.ShapeDtypeStruct((1, 1), jnp.int32)]
+            else:
+                red_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0)))
+                red_shapes.append(
+                    jax.ShapeDtypeStruct((1, 1), jnp.float32))
         out_shapes = (
             [jax.ShapeDtypeStruct((rows, LANES), dtype)
              for _ in sig.elt_out_keys]
-            + [jax.ShapeDtypeStruct((1, c), jnp.float32)
-               for c in red_cols])
+            + red_shapes)
         outs = pl.pallas_call(
             kernel,
             grid=grid,
@@ -232,13 +244,15 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
         results = {}
         for key, o in zip(sig.elt_out_keys, outs[:len(sig.elt_out_keys)]):
             results[key] = o.reshape(-1)[:n]
-        for key, o in zip(sig.red_out_keys,
-                          outs[len(sig.elt_out_keys):]):
+        cursor = len(sig.elt_out_keys)
+        for key in sig.red_out_keys:
             rdef = graph.nodes[key[0]].rdef
             if rdef.index_reduction:
-                results[key] = o[0, 1].astype(jnp.int32)
+                results[key] = outs[cursor + 1][0, 0]
+                cursor += 2
                 continue
-            val = o[0, 0]
+            val = outs[cursor][0, 0]
+            cursor += 1
             post = rdef.post
             results[key] = post(val) if post is not None else val
         return results

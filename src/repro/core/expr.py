@@ -1,0 +1,191 @@
+"""Tiny validated scalar-expression grammar for loop specs.
+
+Iteration scalars (`alpha = rz / pq`, `beta = rz_next / rz`) are
+*described* in the JSON spec rather than hand-written in Python glue,
+so the expression language is deliberately minimal and fully validated
+at parse time — identifiers, float literals, `+ - * /`, unary minus,
+and parentheses. There is no `eval`, no attribute access, no calls:
+anything outside the grammar is a parse error.
+
+Division uses `sdiv`, the library-wide safe divide (0 instead of
+inf/NaN on a zero denominator), matching what the hand-written solvers
+do for step lengths so that a converged-in-body iteration cannot
+poison the `lax.while_loop` carry.
+
+    expr := term (('+'|'-') term)*
+    term := unary (('*'|'/') unary)*
+    unary := '-' unary | atom
+    atom := NUMBER | IDENT | '(' expr ')'
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+class ExprError(ValueError):
+    """Raised for any token or construct outside the grammar."""
+
+
+def sdiv(a, b):
+    """a / b that yields 0 instead of inf/NaN on a zero denominator."""
+    return jnp.where(b == 0, 0.0, a / jnp.where(b == 0, 1.0, b))
+
+
+_TOKEN = re.compile(
+    r"\s*(?:(?P<num>\d+\.?\d*(?:[eE][+-]?\d+)?|\.\d+(?:[eE][+-]?\d+)?)"
+    r"|(?P<name>[A-Za-z_][A-Za-z0-9_]*)"
+    r"|(?P<op>[-+*/()]))")
+
+
+def _tokenize(src: str):
+    pos, out = 0, []
+    while pos < len(src):
+        m = _TOKEN.match(src, pos)
+        if m is None:
+            raise ExprError(
+                f"invalid token at column {pos} in scalar expression "
+                f"{src!r}")
+        if m.group("num") is not None:
+            out.append(("num", float(m.group("num"))))
+        elif m.group("name") is not None:
+            out.append(("name", m.group("name")))
+        else:
+            out.append(("op", m.group("op")))
+        pos = m.end()
+        if pos < len(src) and src[pos:].strip() == "":
+            break
+    return out
+
+
+# AST nodes are plain tuples:
+#   ("num", 1.5) | ("name", "rz") | ("neg", node) | ("+", a, b) | ...
+
+
+class _Parser:
+    def __init__(self, src: str):
+        self.src = src
+        self.toks = _tokenize(src)
+        self.i = 0
+
+    def peek(self):
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def next(self):
+        t = self.peek()
+        if t is None:
+            raise ExprError(f"unexpected end of scalar expression "
+                            f"{self.src!r}")
+        self.i += 1
+        return t
+
+    def expr(self):
+        node = self.term()
+        while self.peek() in (("op", "+"), ("op", "-")):
+            op = self.next()[1]
+            node = (op, node, self.term())
+        return node
+
+    def term(self):
+        node = self.unary()
+        while self.peek() in (("op", "*"), ("op", "/")):
+            op = self.next()[1]
+            node = (op, node, self.unary())
+        return node
+
+    def unary(self):
+        if self.peek() == ("op", "-"):
+            self.next()
+            return ("neg", self.unary())
+        return self.atom()
+
+    def atom(self):
+        kind, val = self.next()
+        if kind == "num":
+            return ("num", val)
+        if kind == "name":
+            return ("name", val)
+        if (kind, val) == ("op", "("):
+            node = self.expr()
+            if self.next() != ("op", ")"):
+                raise ExprError(f"unbalanced parentheses in {self.src!r}")
+            return node
+        raise ExprError(f"unexpected {val!r} in scalar expression "
+                        f"{self.src!r}")
+
+
+def _collect_names(node, acc):
+    tag = node[0]
+    if tag == "name":
+        acc.add(node[1])
+    elif tag == "neg":
+        _collect_names(node[1], acc)
+    elif tag in ("+", "-", "*", "/"):
+        _collect_names(node[1], acc)
+        _collect_names(node[2], acc)
+
+
+def _evaluate(node, env):
+    tag = node[0]
+    if tag == "num":
+        return jnp.float32(node[1])
+    if tag == "name":
+        return env[node[1]]
+    if tag == "neg":
+        return -_evaluate(node[1], env)
+    a, b = _evaluate(node[1], env), _evaluate(node[2], env)
+    if tag == "+":
+        return a + b
+    if tag == "-":
+        return a - b
+    if tag == "*":
+        return a * b
+    return sdiv(a, b)   # "/"
+
+
+@dataclasses.dataclass(frozen=True)
+class Expr:
+    """A parsed, validated scalar expression."""
+    src: str
+    ast: Tuple = dataclasses.field(repr=False, default=None)
+    names: frozenset = frozenset()
+
+    def evaluate(self, env: Mapping):
+        """Evaluate against name -> jax scalar bindings (safe divide)."""
+        missing = [n for n in self.names if n not in env]
+        if missing:
+            raise ExprError(
+                f"expression {self.src!r} references undefined names "
+                f"{missing}")
+        return _evaluate(self.ast, env)
+
+    @property
+    def bare_name(self) -> Optional[str]:
+        """The identifier if this expression is a lone name, else None.
+
+        A bare name may reference a value of any kind (vector state
+        init like `"init": "r0"`); a composite expression is scalar
+        arithmetic only.
+        """
+        return self.ast[1] if self.ast[0] == "name" else None
+
+
+def parse_expr(src) -> Expr:
+    """Parse one scalar expression; raises ExprError outside the
+    grammar."""
+    if isinstance(src, (int, float)) and not isinstance(src, bool):
+        return Expr(src=repr(float(src)), ast=("num", float(src)))
+    if not isinstance(src, str):
+        raise ExprError(f"scalar expression must be a string or number, "
+                        f"got {type(src).__name__}")
+    p = _Parser(src)
+    node = p.expr()
+    if p.peek() is not None:
+        raise ExprError(
+            f"trailing tokens after scalar expression {src!r}")
+    names = set()
+    _collect_names(node, names)
+    return Expr(src=src, ast=node, names=frozenset(names))

@@ -5,11 +5,22 @@ DAG whose nodes are routine instances and whose edges say "this output
 window feeds that input port on-chip". Program inputs/outputs are the
 unconnected ports (they become PL movers in the paper; HBM-resident
 jit arguments here).
+
+Construction is split into independently-testable pieces so
+`core.lowering` can run them as named passes:
+
+    g = DataflowGraph(spec, validate=False)   # structure only
+    check_port_kinds(g)                       # edge typing
+    g.order = topo_sort(g)                    # schedule / cycle check
+    io = collect_io(g)                        # program boundary + kinds
+
+`DataflowGraph(spec)` (the default, validate=True) still runs all of
+them, so existing call sites keep working.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional
+from typing import List, Mapping, Optional
 
 from . import routines as R
 from .spec import ProgramSpec, RoutineSpec, SpecError
@@ -39,8 +50,18 @@ class ProgramOutput:
     kind: str       # "vector" | "matrix" | "scalar"
 
 
+@dataclasses.dataclass(frozen=True)
+class ProgramIO:
+    """The program boundary, as inferred by `collect_io`: every public
+    input/output binding plus a deduped name -> kind map for each."""
+    inputs: List[ProgramInput]
+    outputs: List[ProgramOutput]
+    input_kinds: Mapping[str, str]    # public name -> kind
+    output_kinds: Mapping[str, str]
+
+
 class DataflowGraph:
-    def __init__(self, spec: ProgramSpec):
+    def __init__(self, spec: ProgramSpec, *, validate: bool = True):
         self.spec = spec
         self.nodes: Mapping[str, RoutineSpec] = {
             r.name: r for r in spec.routines}
@@ -70,82 +91,14 @@ class DataflowGraph:
         for key in sorted(self.out_edges):
             self.adj[key[0]].extend(self.out_edges[key])
 
-        self._check_port_kinds()
-        self.order = self._topo_sort()
-        self.inputs = self._collect_inputs()
-        self.outputs = self._collect_outputs()
-
-    # -- validation ---------------------------------------------------
-
-    def _check_port_kinds(self):
-        for e in self.edges:
-            src_def = self.nodes[e.src].rdef
-            dst_def = self.nodes[e.dst].rdef
-            out_kind = src_def.outputs[e.src_port]
-            in_kind = dst_def.inputs[e.dst_port]
-            ok = (out_kind == R.OUT_VEC and in_kind == R.VEC) or \
-                 (out_kind == R.OUT_MAT and in_kind == R.MAT)
-            if not ok:
-                raise SpecError(
-                    f"type mismatch on edge {e.src}.{e.src_port} "
-                    f"({out_kind}) -> {e.dst}.{e.dst_port} ({in_kind}); "
-                    f"scalar outputs cannot feed window ports")
-
-    def _topo_sort(self):
-        indeg = {n: 0 for n in self.nodes}
-        for e in self.edges:
-            indeg[e.dst] += 1
-        ready = sorted(n for n, d in indeg.items() if d == 0)
-        order = []
-        while ready:
-            n = ready.pop(0)
-            order.append(n)
-            for e in self.adj[n]:
-                indeg[e.dst] -= 1
-                if indeg[e.dst] == 0:
-                    ready.append(e.dst)
-        if len(order) != len(self.nodes):
-            cyclic = sorted(set(self.nodes) - set(order))
-            raise SpecError(f"dataflow graph has a cycle through {cyclic}")
-        return order
-
-    # -- program boundary ---------------------------------------------
-
-    def _collect_inputs(self):
-        inputs = []
-        for name in self.order:
-            r = self.nodes[name]
-            for port, kind in r.rdef.inputs.items():
-                if (name, port) in self.in_edges:
-                    continue  # driven on-chip
-                public = r.input_aliases.get(port, f"{name}.{port}")
-                inputs.append(ProgramInput(public, name, port, kind))
-            for sname, binding in r.scalars.items():
-                if binding.kind == "input":
-                    inputs.append(ProgramInput(
-                        binding.input_name, name, sname, "scalar"))
-        # aliased inputs may be shared (same public name feeding two
-        # routines) — dedupe by public name, keep all (routine, port)
-        # bindings.
-        return inputs
-
-    def _collect_outputs(self):
-        outs = []
-        for name in self.order:
-            r = self.nodes[name]
-            for port, kind in r.rdef.outputs.items():
-                consumed = (name, port) in self.out_edges
-                public = r.output_aliases.get(port)
-                if consumed and public is None:
-                    continue  # internal edge only
-                public = public or f"{name}.{port}"
-                kind_map = {R.OUT_VEC: "vector", R.OUT_MAT: "matrix",
-                            R.OUT_SCALAR: "scalar"}
-                outs.append(ProgramOutput(public, name, port,
-                                          kind_map[kind]))
-        if not outs:
-            raise SpecError("program has no outputs")
-        return outs
+        self.order: Optional[list] = None
+        self.inputs: Optional[list] = None
+        self.outputs: Optional[list] = None
+        if validate:
+            check_port_kinds(self)
+            self.order = topo_sort(self)
+            io = collect_io(self)
+            self.inputs, self.outputs = io.inputs, io.outputs
 
     # -- queries used by the fusion planner -----------------------------
 
@@ -165,3 +118,101 @@ class DataflowGraph:
 
     def output_names(self):
         return [o.name for o in self.outputs]
+
+
+# ---------------------------------------------------------------------------
+# Validation / inference passes (invoked by core.lowering)
+# ---------------------------------------------------------------------------
+
+
+def check_port_kinds(graph: DataflowGraph) -> None:
+    """Edge typing: window outputs may only feed matching window ports;
+    scalar (reduction) outputs cannot feed window ports at all."""
+    for e in graph.edges:
+        src_def = graph.nodes[e.src].rdef
+        dst_def = graph.nodes[e.dst].rdef
+        out_kind = src_def.outputs[e.src_port]
+        in_kind = dst_def.inputs[e.dst_port]
+        ok = (out_kind == R.OUT_VEC and in_kind == R.VEC) or \
+             (out_kind == R.OUT_MAT and in_kind == R.MAT)
+        if not ok:
+            raise SpecError(
+                f"type mismatch on edge {e.src}.{e.src_port} "
+                f"({out_kind}) -> {e.dst}.{e.dst_port} ({in_kind}); "
+                f"scalar outputs cannot feed window ports")
+
+
+def topo_sort(graph: DataflowGraph) -> list:
+    """Deterministic topological order; raises SpecError on cycles."""
+    indeg = {n: 0 for n in graph.nodes}
+    for e in graph.edges:
+        indeg[e.dst] += 1
+    ready = sorted(n for n, d in indeg.items() if d == 0)
+    order = []
+    while ready:
+        n = ready.pop(0)
+        order.append(n)
+        for e in graph.adj[n]:
+            indeg[e.dst] -= 1
+            if indeg[e.dst] == 0:
+                ready.append(e.dst)
+    if len(order) != len(graph.nodes):
+        cyclic = sorted(set(graph.nodes) - set(order))
+        raise SpecError(f"dataflow graph has a cycle through {cyclic}")
+    return order
+
+
+_KIND_MAP = {R.OUT_VEC: "vector", R.OUT_MAT: "matrix",
+             R.OUT_SCALAR: "scalar"}
+
+
+def collect_io(graph: DataflowGraph) -> ProgramIO:
+    """Infer the program boundary: unconnected ports become public
+    inputs/outputs, with a deduped public-name -> kind map. Requires
+    `graph.order` (run `topo_sort` first)."""
+    if graph.order is None:
+        graph.order = topo_sort(graph)
+
+    inputs, in_kinds = [], {}
+    for name in graph.order:
+        r = graph.nodes[name]
+        for port, kind in r.rdef.inputs.items():
+            if (name, port) in graph.in_edges:
+                continue  # driven on-chip
+            public = r.input_aliases.get(port, f"{name}.{port}")
+            inputs.append(ProgramInput(public, name, port, kind))
+        for sname, binding in r.scalars.items():
+            if binding.kind == "input":
+                inputs.append(ProgramInput(
+                    binding.input_name, name, sname, "scalar"))
+    # aliased inputs may be shared (same public name feeding two
+    # routines) — dedupe by public name, keep all (routine, port)
+    # bindings, but reject one public name used at two different kinds.
+    for pi in inputs:
+        prev = in_kinds.get(pi.name)
+        if prev is not None and prev != pi.kind:
+            raise SpecError(
+                f"program input {pi.name!r} bound at conflicting kinds "
+                f"{prev} and {pi.kind}")
+        in_kinds[pi.name] = pi.kind
+
+    outputs, out_kinds = [], {}
+    for name in graph.order:
+        r = graph.nodes[name]
+        for port, kind in r.rdef.outputs.items():
+            consumed = (name, port) in graph.out_edges
+            public = r.output_aliases.get(port)
+            if consumed and public is None:
+                continue  # internal edge only
+            public = public or f"{name}.{port}"
+            if public in out_kinds:
+                raise SpecError(
+                    f"duplicate program output name {public!r}")
+            out_kinds[public] = _KIND_MAP[kind]
+            outputs.append(ProgramOutput(public, name, port,
+                                         _KIND_MAP[kind]))
+    if not outputs:
+        raise SpecError("program has no outputs")
+
+    return ProgramIO(inputs=inputs, outputs=outputs,
+                     input_kinds=in_kinds, output_kinds=out_kinds)

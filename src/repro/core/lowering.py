@@ -1,0 +1,395 @@
+"""Lowering: named compiler passes over a ProgramIR, plus a program
+cache.
+
+PR 1 entangled parse -> graph -> fuse -> emit inside
+`Program.from_spec`; this module splits that into an explicit pass
+pipeline (the TPU analogue of AIEBLAS's generator stages in Fig. 1),
+each pass independently invocable and testable:
+
+    parse      raw JSON -> ProgramSpec            (spec layer)
+    graph      ProgramSpec -> DataflowGraph       (structure only)
+    infer      port-kind checking, topo schedule, program-boundary IO
+    fuse       fusion planning (on-chip groups)
+    place      placement-hint annotation
+    emit       Pallas codegen -> python callable
+
+`lower()` runs the pipeline; `compile_cached()` memoizes whole IRs by
+(spec digest, mode, fuse, interpret) so a body spec that appears in
+many loop programs — or in repeated `Program.from_spec` calls —
+compiles exactly once per configuration.
+
+`lower_loop()` lowers a LoopSpec: it compiles every stage program
+through the cache and performs the cross-stage def-use and kind
+inference that makes "scalar fed to a window port" or "value used
+before it is produced" a spec error instead of a runtime surprise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Callable, List, Mapping, Optional, Tuple, Union
+
+from . import codegen, fusion, spec as spec_mod
+from .graph import (DataflowGraph, ProgramIO, check_port_kinds,
+                    collect_io, topo_sort)
+from .spec import (LetStage, LoopSpec, ProgramStage, SpecError)
+
+# ---------------------------------------------------------------------------
+# ProgramIR + passes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ProgramIR:
+    """Everything the pipeline knows about one program, accreted by the
+    passes below. `fn` is the emitted callable (inputs dict -> outputs
+    dict)."""
+    raw: Mapping
+    digest: str
+    mode: str
+    fuse: bool
+    interpret: Optional[bool]
+    spec: Optional[spec_mod.ProgramSpec] = None
+    graph: Optional[DataflowGraph] = None
+    io: Optional[ProgramIO] = None
+    groups: Optional[list] = None
+    placements: Optional[Mapping] = None
+    fn: Optional[Callable] = None
+    passes_run: List[str] = dataclasses.field(default_factory=list)
+
+
+def parse_pass(ir: ProgramIR) -> None:
+    ir.spec = spec_mod.parse(ir.raw)
+
+
+def graph_pass(ir: ProgramIR) -> None:
+    ir.graph = DataflowGraph(ir.spec, validate=False)
+
+
+def infer_pass(ir: ProgramIR) -> None:
+    """Shape/kind inference: edge typing, topo schedule, boundary IO."""
+    check_port_kinds(ir.graph)
+    ir.graph.order = topo_sort(ir.graph)
+    ir.io = collect_io(ir.graph)
+    ir.graph.inputs, ir.graph.outputs = ir.io.inputs, ir.io.outputs
+
+
+def fuse_pass(ir: ProgramIR) -> None:
+    ir.groups = fusion.plan(ir.graph, enable=ir.fuse)
+
+
+def place_pass(ir: ProgramIR) -> None:
+    """Collect per-public-input placement hints (mesh-axis names). The
+    runtime turns these into NamedShardings via core.placement when a
+    mesh is in play."""
+    hints = {}
+    for pi in ir.io.inputs:
+        hint = ir.graph.nodes[pi.routine].placement.get(pi.port)
+        if hint is None:
+            continue
+        prev = hints.get(pi.name)
+        if prev is not None and prev != hint:
+            raise SpecError(
+                f"conflicting placement hints for program input "
+                f"{pi.name!r}: {prev} vs {hint}")
+        hints[pi.name] = hint
+    ir.placements = hints
+
+
+def emit_pass(ir: ProgramIR) -> None:
+    ir.fn = codegen.emit_program(ir.graph, ir.groups, ir.mode,
+                                 interpret=ir.interpret)
+
+
+PIPELINE: Tuple = (
+    ("parse", parse_pass),
+    ("graph", graph_pass),
+    ("infer", infer_pass),
+    ("fuse", fuse_pass),
+    ("place", place_pass),
+    ("emit", emit_pass),
+)
+
+
+def _canonical_raw(raw: Union[str, Mapping, pathlib.Path]) -> Mapping:
+    if isinstance(raw, pathlib.Path):
+        raw = json.loads(raw.read_text())
+    elif isinstance(raw, str):
+        raw = json.loads(raw)
+    if not isinstance(raw, Mapping):
+        raise SpecError(f"spec must be a mapping, got {type(raw)}")
+    return raw
+
+
+def spec_digest(raw: Union[str, Mapping, pathlib.Path]) -> str:
+    """Stable content digest of a raw spec (key order independent)."""
+    canon = json.dumps(_canonical_raw(raw), sort_keys=True,
+                       separators=(",", ":"), default=repr)
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
+          upto: Optional[str] = None,
+          interpret: Optional[bool] = None) -> ProgramIR:
+    """Run the pass pipeline over a raw spec. `upto` stops after the
+    named pass (inclusive) for partial lowering in tests/tools."""
+    if mode not in ("dataflow", "nodataflow", "reference"):
+        raise ValueError(f"unknown mode {mode!r}")
+    raw = _canonical_raw(raw)
+    if fuse is None:
+        fuse = mode == "dataflow"
+    ir = ProgramIR(raw=raw, digest=spec_digest(raw), mode=mode,
+                   fuse=fuse, interpret=interpret)
+    known = [name for name, _ in PIPELINE]
+    if upto is not None and upto not in known:
+        raise ValueError(f"unknown pass {upto!r}; pipeline: {known}")
+    for name, p in PIPELINE:
+        p(ir)
+        ir.passes_run.append(name)
+        if name == upto:
+            break
+    return ir
+
+
+# ---------------------------------------------------------------------------
+# Program cache
+# ---------------------------------------------------------------------------
+
+_CACHE: dict = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def compile_cached(raw, *, mode: str = "dataflow",
+                   fuse: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> ProgramIR:
+    """Fully lower a spec, memoized by (digest, mode, fuse, interpret).
+
+    Loop programs routinely reuse body specs (RESIDUAL appears in
+    setup, in the Jacobi body, and in every class-based linear solver);
+    the cache makes each distinct body compile once per configuration.
+    """
+    raw = _canonical_raw(raw)
+    if fuse is None:
+        fuse = mode == "dataflow"
+    key = (spec_digest(raw), mode, fuse, interpret)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _STATS["hits"] += 1
+        return hit
+    _STATS["misses"] += 1
+    ir = lower(raw, mode=mode, fuse=fuse, interpret=interpret)
+    _CACHE[key] = ir
+    return ir
+
+
+def cache_stats() -> Mapping[str, int]:
+    return dict(_STATS, size=len(_CACHE))
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+
+
+# ---------------------------------------------------------------------------
+# Loop lowering
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledStage:
+    """One lowered loop stage. For program stages, `inputs`/`outputs`
+    are fully-resolved maps between the inner program's public names
+    and loop-environment names (identity defaults applied)."""
+    stage: object                    # LetStage | ProgramStage
+    ir: Optional[ProgramIR] = None   # program stages only
+    inputs: Optional[Mapping] = None     # program input -> env name
+    outputs: Optional[Mapping] = None    # program output -> env name
+
+    @property
+    def is_let(self) -> bool:
+        return self.ir is None
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopIR:
+    """A lowered loop program, executable by solvers.LoopProgram."""
+    lspec: LoopSpec
+    mode: str
+    interpret: Optional[bool]
+    setup: Tuple          # (CompiledStage, ...)
+    body: Tuple
+    setup_kinds: Mapping[str, str]   # env after setup: name -> kind
+    state_kinds: Mapping[str, str]
+    body_kinds: Mapping[str, str]    # env after one body iteration
+
+
+def _no_forward_ref(name, kinds, where):
+    if name not in kinds:
+        raise SpecError(
+            f"{where}: {name!r} is not defined at this point in the "
+            f"loop (operands, state, and values produced by earlier "
+            f"stages are in scope); values from later stages cannot be "
+            f"used — cyclic feedback must be routed through "
+            f"iterate.state")
+
+
+def _lower_stages(stages, kinds, where_prefix, *, mode, interpret):
+    """Lower a stage list against an env of name -> kind, enforcing
+    single-assignment, no forward references, and port-kind typing.
+    Mutates and returns `kinds`; returns (compiled stages, produced
+    names)."""
+    compiled, produced = [], set()
+    for i, st in enumerate(stages):
+        where = f"{where_prefix}[{i}]"
+        if isinstance(st, LetStage):
+            for name, expr in st.bindings:
+                if name in kinds:
+                    raise SpecError(
+                        f"{where}: let binding {name!r} rebinds an "
+                        f"existing name (loop values are "
+                        f"single-assignment per iteration)")
+                for n in sorted(expr.names):
+                    _no_forward_ref(n, kinds, f"{where}.{name}")
+                    if kinds[n] != "scalar":
+                        raise SpecError(
+                            f"{where}.{name}: expression {expr.src!r} "
+                            f"uses {n!r} which is a {kinds[n]}, not a "
+                            f"scalar")
+                kinds[name] = "scalar"
+                produced.add(name)
+            compiled.append(CompiledStage(stage=st))
+            continue
+
+        assert isinstance(st, ProgramStage)
+        ir = compile_cached(st.raw_program, mode=mode,
+                            interpret=interpret)
+        unknown = set(st.inputs) - set(ir.io.input_kinds)
+        if unknown:
+            raise SpecError(
+                f"{where}: input bindings for unknown program inputs "
+                f"{sorted(unknown)}; program {ir.spec.name!r} takes "
+                f"{sorted(ir.io.input_kinds)}")
+        unknown = set(st.outputs) - set(ir.io.output_kinds)
+        if unknown:
+            raise SpecError(
+                f"{where}: output bindings for unknown program outputs "
+                f"{sorted(unknown)}; program {ir.spec.name!r} produces "
+                f"{sorted(ir.io.output_kinds)}")
+
+        in_bind = {}
+        for pub, kind in ir.io.input_kinds.items():
+            env_name = st.inputs.get(pub, pub)
+            _no_forward_ref(env_name, kinds,
+                            f"{where} input {pub!r}")
+            have = kinds[env_name]
+            if have != kind:
+                if kind in ("vector", "matrix") and have == "scalar":
+                    raise SpecError(
+                        f"{where}: scalar value {env_name!r} cannot "
+                        f"feed window port {pub!r} of program "
+                        f"{ir.spec.name!r} (scalars travel on streams, "
+                        f"windows carry {kind}s)")
+                raise SpecError(
+                    f"{where}: {env_name!r} is a {have} but program "
+                    f"input {pub!r} wants a {kind}")
+            in_bind[pub] = env_name
+
+        out_bind = {}
+        for pub, kind in ir.io.output_kinds.items():
+            env_name = st.outputs.get(pub, pub)
+            if not spec_mod._IDENT.match(env_name):
+                raise SpecError(
+                    f"{where}: program output {pub!r} needs an "
+                    f"identifier environment name (alias it in the "
+                    f"stage's 'outputs' or the inner spec), got "
+                    f"{env_name!r}")
+            if env_name in kinds:
+                raise SpecError(
+                    f"{where}: output {pub!r} -> {env_name!r} rebinds "
+                    f"an existing name (loop values are "
+                    f"single-assignment per iteration)")
+            kinds[env_name] = kind
+            out_bind[pub] = env_name
+            produced.add(env_name)
+
+        compiled.append(CompiledStage(stage=st, ir=ir, inputs=in_bind,
+                                      outputs=out_bind))
+    return tuple(compiled), produced
+
+
+def lower_loop(raw, *, mode: str = "dataflow",
+               interpret: Optional[bool] = None) -> LoopIR:
+    """Lower a loop spec: compile every stage program through the
+    cache and type-check the loop environment end to end."""
+    lspec = raw if isinstance(raw, LoopSpec) else spec_mod.parse_loop(raw)
+
+    kinds = dict(lspec.operands)
+    setup, _ = _lower_stages(lspec.setup, kinds, "setup",
+                             mode=mode, interpret=interpret)
+    setup_kinds = dict(kinds)
+
+    # state fields: bare-name inits inherit the referenced kind;
+    # composite expressions are scalar arithmetic over scalars
+    state_kinds = {}
+    for f in lspec.state:
+        where = f"iterate.state.{f.name}"
+        bare = f.init.bare_name
+        if bare is not None:
+            _no_forward_ref(bare, setup_kinds, where)
+            inferred = setup_kinds[bare]
+        else:
+            for n in sorted(f.init.names):
+                _no_forward_ref(n, setup_kinds, where)
+                if setup_kinds[n] != "scalar":
+                    raise SpecError(
+                        f"{where}: init expression {f.init.src!r} uses "
+                        f"{n!r} which is a {setup_kinds[n]}, not a "
+                        f"scalar")
+            inferred = "scalar"
+        if f.kind is not None and f.kind != inferred:
+            raise SpecError(
+                f"{where}: declared kind {f.kind!r} but init "
+                f"{f.init.src!r} is a {inferred}")
+        state_kinds[f.name] = inferred
+
+    body_env = dict(setup_kinds)
+    for sname, skind in state_kinds.items():
+        body_env[sname] = skind
+    body, produced = _lower_stages(lspec.body, body_env, "iterate.body",
+                                   mode=mode, interpret=interpret)
+
+    for fname, src in lspec.feedback.items():
+        where = f"iterate.feedback.{fname}"
+        _no_forward_ref(src, body_env, where)
+        if body_env[src] != state_kinds[fname]:
+            raise SpecError(
+                f"{where}: cannot feed a {body_env[src]} back into "
+                f"{state_kinds[fname]} state field {fname!r}")
+
+    stop = lspec.stop
+    if stop.metric not in produced:
+        raise SpecError(
+            f"iterate.while.metric: {stop.metric!r} is not produced by "
+            f"the loop body")
+    if body_env[stop.metric] != "scalar":
+        raise SpecError(
+            f"iterate.while.metric: {stop.metric!r} is a "
+            f"{body_env[stop.metric]}, not a scalar")
+    _no_forward_ref(stop.init_metric, setup_kinds, "iterate.while.init")
+    if setup_kinds[stop.init_metric] != "scalar":
+        raise SpecError(
+            f"iterate.while.init: {stop.init_metric!r} is a "
+            f"{setup_kinds[stop.init_metric]}, not a scalar")
+    if isinstance(stop.scale, str):
+        _no_forward_ref(stop.scale, setup_kinds, "iterate.while.scale")
+        if setup_kinds[stop.scale] != "scalar":
+            raise SpecError(
+                f"iterate.while.scale: {stop.scale!r} is a "
+                f"{setup_kinds[stop.scale]}, not a scalar")
+
+    return LoopIR(lspec=lspec, mode=mode, interpret=interpret,
+                  setup=setup, body=body, setup_kinds=setup_kinds,
+                  state_kinds=state_kinds, body_kinds=body_env)

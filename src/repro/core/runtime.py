@@ -11,15 +11,13 @@ Modes (paper Fig. 3 matrix):
 from __future__ import annotations
 
 import dataclasses
-import functools
-import json
 import pathlib
 from typing import Dict, Mapping, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from . import codegen, fusion, spec as spec_mod
+from . import lowering, spec as spec_mod
 from .graph import DataflowGraph
 
 
@@ -43,6 +41,7 @@ class Program:
     mode: str
     interpret: Optional[bool]
     _fn: object = None
+    ir: Optional[lowering.ProgramIR] = None
 
     # -- construction ---------------------------------------------------
 
@@ -50,16 +49,19 @@ class Program:
     def from_spec(cls, raw: Union[str, Mapping, pathlib.Path], *,
                   mode: str = "dataflow", fuse: Optional[bool] = None,
                   interpret: Optional[bool] = None) -> "Program":
-        pspec = spec_mod.parse(raw)
-        graph = DataflowGraph(pspec)
-        if fuse is None:
-            fuse = mode == "dataflow"
-        groups = fusion.plan(graph, enable=fuse)
-        fn = codegen.emit_program(graph, groups, mode,
-                                  interpret=interpret)
-        prog = cls(spec=pspec, graph=graph, mode=mode,
-                   interpret=interpret, _fn=fn)
-        prog.groups = groups
+        """Lower a spec through the pass pipeline (parse -> graph ->
+        infer -> fuse -> place -> emit; see core.lowering). Lowered
+        programs are cached by (spec digest, mode, fuse, interpret), so
+        constructing the same program twice compiles once."""
+        ir = lowering.compile_cached(raw, mode=mode, fuse=fuse,
+                                     interpret=interpret)
+        return cls.from_ir(ir)
+
+    @classmethod
+    def from_ir(cls, ir: lowering.ProgramIR) -> "Program":
+        prog = cls(spec=ir.spec, graph=ir.graph, mode=ir.mode,
+                   interpret=ir.interpret, _fn=ir.fn, ir=ir)
+        prog.groups = ir.groups
         return prog
 
     # -- introspection ----------------------------------------------------

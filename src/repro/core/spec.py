@@ -31,17 +31,25 @@ Unconnected routine inputs become *program inputs* named
 "<routine>.<port>" (aliasable via `"inputs": {"x": "w"}`); unconnected
 outputs become program outputs. Scalars default to program inputs named
 "<routine>.<scalar>".
+
+A spec may instead describe a *loop program*: operands, setup stages,
+and an `"iterate"` section with state fields, feedback edges (vectors
+AND scalars), scalar update expressions, and a stop rule — see
+`parse_loop` and docs/spec.md. Loop programs are executed by
+`repro.solvers.LoopProgram`.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import pathlib
-from typing import Mapping, Optional, Union
+import re
+from typing import Mapping, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
 from . import routines as R
+from .expr import Expr, ExprError, parse_expr
 
 _DTYPES = {
     "float32": jnp.float32,
@@ -218,3 +226,286 @@ def parse(spec: Union[str, Mapping, pathlib.Path]) -> ProgramSpec:
     return ProgramSpec(
         name=name, dtype=_DTYPES[dtype_name], routines=tuple(parsed),
         window_size=g_window, vector_width=g_vw)
+
+
+# ---------------------------------------------------------------------------
+# Loop specs: JSON-described iteration ("iterate" section)
+# ---------------------------------------------------------------------------
+
+OPERAND_KINDS = ("vector", "matrix", "scalar")
+
+_IDENT = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class StateField:
+    """One loop-carried value. `init` is an expression over operands
+    and setup-produced values; a bare name may reference a vector or
+    matrix, a composite expression is scalar arithmetic."""
+    name: str
+    init: Expr
+    kind: Optional[str] = None   # declared kind; inferred when None
+
+
+@dataclasses.dataclass(frozen=True)
+class LetStage:
+    """Scalar update expressions, evaluated in order (`alpha = rz/pq`).
+    These are the spec-level scalar feedback edges that used to live in
+    per-solver Python glue."""
+    bindings: Tuple   # ((name, Expr), ...) in spec order
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramStage:
+    """One dataflow program invocation inside a loop. `inputs` maps the
+    inner program's public input names to loop-environment names
+    (operands, state, or values produced earlier this iteration);
+    `outputs` maps program outputs to fresh environment names. Both
+    default to the identity."""
+    program: ProgramSpec
+    raw_program: Mapping   # the raw dict, kept for digest-keyed caching
+    inputs: Mapping
+    outputs: Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class StopRule:
+    """`while` section: iterate until metric <= rtol * scale or
+    max_iters. `metric` names a body-produced scalar; `init_metric`
+    (default: same name) must be produced by setup and seeds the
+    residual history; `scale` is a setup-produced scalar name or a
+    literal."""
+    metric: str
+    init_metric: str
+    scale: Union[str, float]
+    rtol: float
+    max_iters: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopSpec:
+    """A parsed loop program: the spec-level analogue of an iterative
+    solver, executable by `repro.solvers.LoopProgram`."""
+    name: str
+    dtype: "jnp.dtype"
+    operands: Mapping[str, str]       # name -> vector|matrix|scalar
+    setup: Tuple                      # (LetStage|ProgramStage, ...)
+    state: Tuple                      # (StateField, ...)
+    body: Tuple                       # (LetStage|ProgramStage, ...)
+    feedback: Mapping[str, str]       # state field -> env value name
+    stop: StopRule
+    solution: Mapping[str, str]       # public output -> state field
+
+    def state_field(self, name: str) -> StateField:
+        for f in self.state:
+            if f.name == name:
+                return f
+        raise KeyError(name)
+
+
+def is_loop_spec(raw) -> bool:
+    """True if the raw mapping describes a loop program."""
+    return isinstance(raw, Mapping) and "iterate" in raw
+
+
+def _parse_ident(name, where) -> str:
+    if not isinstance(name, str) or not _IDENT.match(name):
+        raise SpecError(
+            f"{where}: {name!r} is not a valid identifier (loop names "
+            f"must be expression-referencable)")
+    return name
+
+
+def _parse_expr(src, where) -> Expr:
+    try:
+        return parse_expr(src)
+    except ExprError as e:
+        raise SpecError(f"{where}: {e}") from None
+
+
+def _parse_stage(raw, where, *, dtype_name):
+    if not isinstance(raw, Mapping):
+        raise SpecError(f"{where}: stage must be a mapping, got {raw!r}")
+    has_let, has_prog = "let" in raw, "program" in raw
+    if has_let == has_prog:
+        raise SpecError(
+            f"{where}: stage must have exactly one of 'let' or "
+            f"'program', got keys {sorted(raw)}")
+    if has_let:
+        unknown = set(raw) - {"let"}
+        if unknown:
+            raise SpecError(f"{where}: unknown stage keys {sorted(unknown)}")
+        if not isinstance(raw["let"], Mapping) or not raw["let"]:
+            raise SpecError(f"{where}: 'let' must be a non-empty mapping")
+        bindings = tuple(
+            (_parse_ident(n, where), _parse_expr(e, f"{where}.{n}"))
+            for n, e in raw["let"].items())
+        return LetStage(bindings=bindings)
+
+    unknown = set(raw) - {"program", "inputs", "outputs"}
+    if unknown:
+        raise SpecError(f"{where}: unknown stage keys {sorted(unknown)}")
+    raw_prog = raw["program"]
+    if not isinstance(raw_prog, Mapping):
+        raise SpecError(f"{where}: 'program' must be a spec mapping")
+    if "dtype" not in raw_prog and dtype_name != "float32":
+        # inner programs inherit a non-default loop dtype unless they
+        # pin one; the float32 default is left implicit so the spec
+        # digest — and therefore the program cache entry — stays
+        # identical to the same body dict compiled outside a loop
+        raw_prog = {**raw_prog, "dtype": dtype_name}
+    pspec = parse(raw_prog)
+    ins = dict(raw.get("inputs", {}))
+    outs = dict(raw.get("outputs", {}))
+    for m, label in ((ins, "inputs"), (outs, "outputs")):
+        for k, v in m.items():
+            if not isinstance(v, str):
+                raise SpecError(
+                    f"{where}.{label}[{k!r}]: binding must be an "
+                    f"environment name string, got {v!r}")
+    return ProgramStage(program=pspec, raw_program=raw_prog,
+                        inputs=ins, outputs=outs)
+
+
+def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
+    """Parse and structurally validate a loop-program spec.
+
+    Kind inference and def-use validation across stages (scalar fed to
+    a window port, forward references, feedback typing) happen in
+    `core.lowering.lower_loop`, where the inner programs' IO is known.
+    """
+    if isinstance(raw, pathlib.Path):
+        raw = json.loads(raw.read_text())
+    elif isinstance(raw, str):
+        raw = json.loads(raw)
+    if not isinstance(raw, Mapping):
+        raise SpecError(f"loop spec must be a mapping, got {type(raw)}")
+    if "iterate" not in raw:
+        raise SpecError("loop spec has no 'iterate' section")
+    unknown = set(raw) - {"name", "dtype", "operands", "setup",
+                          "iterate"}
+    if unknown:
+        raise SpecError(
+            f"loop spec: unknown top-level keys {sorted(unknown)} "
+            f"(did a section escape 'iterate'?)")
+
+    name = raw.get("name", "loop")
+    dtype_name = raw.get("dtype", "float32")
+    if dtype_name not in _DTYPES:
+        raise SpecError(f"unsupported dtype {dtype_name!r}")
+
+    raw_ops = raw.get("operands")
+    if not isinstance(raw_ops, Mapping) or not raw_ops:
+        raise SpecError(
+            "loop spec needs an 'operands' mapping of name -> "
+            f"{'|'.join(OPERAND_KINDS)}")
+    operands = {}
+    for oname, okind in raw_ops.items():
+        _parse_ident(oname, "operands")
+        if okind not in OPERAND_KINDS:
+            raise SpecError(
+                f"operand {oname!r}: unknown kind {okind!r}; expected "
+                f"one of {OPERAND_KINDS}")
+        operands[oname] = okind
+
+    setup = tuple(
+        _parse_stage(s, f"setup[{i}]", dtype_name=dtype_name)
+        for i, s in enumerate(raw.get("setup", [])))
+
+    it = raw["iterate"]
+    if not isinstance(it, Mapping):
+        raise SpecError("'iterate' must be a mapping")
+    unknown = set(it) - {"state", "body", "feedback", "while", "solution"}
+    if unknown:
+        raise SpecError(f"iterate: unknown keys {sorted(unknown)}")
+
+    raw_state = it.get("state")
+    if not isinstance(raw_state, Mapping) or not raw_state:
+        raise SpecError("iterate.state must be a non-empty mapping")
+    state = []
+    for sname, sraw in raw_state.items():
+        _parse_ident(sname, "iterate.state")
+        if sname in operands:
+            raise SpecError(
+                f"iterate.state: {sname!r} shadows an operand")
+        if isinstance(sraw, str):
+            sraw = {"init": sraw}
+        if not isinstance(sraw, Mapping) or "init" not in sraw:
+            raise SpecError(
+                f"iterate.state.{sname}: needs an 'init' binding")
+        kind = sraw.get("kind")
+        if kind is not None and kind not in OPERAND_KINDS:
+            raise SpecError(
+                f"iterate.state.{sname}: unknown kind {kind!r}")
+        state.append(StateField(
+            name=sname,
+            init=_parse_expr(sraw["init"], f"iterate.state.{sname}.init"),
+            kind=kind))
+    state = tuple(state)
+    state_names = {f.name for f in state}
+
+    raw_body = it.get("body")
+    if not isinstance(raw_body, (list, tuple)) or not raw_body:
+        raise SpecError("iterate.body must be a non-empty stage list")
+    body = tuple(
+        _parse_stage(s, f"iterate.body[{i}]", dtype_name=dtype_name)
+        for i, s in enumerate(raw_body))
+
+    feedback = dict(it.get("feedback", {}))
+    for fname, src in feedback.items():
+        if fname not in state_names:
+            raise SpecError(
+                f"iterate.feedback: unknown state field {fname!r}; "
+                f"declared state: {sorted(state_names)}")
+        if not isinstance(src, str) or not _IDENT.match(src):
+            raise SpecError(
+                f"iterate.feedback.{fname}: source must be an "
+                f"environment name, got {src!r}")
+    if not feedback:
+        raise SpecError(
+            "iterate.feedback is empty: a loop with no feedback edge "
+            "computes the same iterate forever")
+
+    raw_stop = it.get("while")
+    if not isinstance(raw_stop, Mapping):
+        raise SpecError("iterate.while stop rule is required")
+    unknown = set(raw_stop) - {"metric", "init", "scale", "rtol",
+                               "max_iters"}
+    if unknown:
+        raise SpecError(f"iterate.while: unknown keys {sorted(unknown)}")
+    metric = raw_stop.get("metric")
+    if not isinstance(metric, str) or not _IDENT.match(metric):
+        raise SpecError(
+            "iterate.while.metric must name a body-produced scalar")
+    init_metric = raw_stop.get("init", metric)
+    _parse_ident(init_metric, "iterate.while.init")
+    scale = raw_stop.get("scale", 1.0)
+    if isinstance(scale, str):
+        _parse_ident(scale, "iterate.while.scale")
+    elif isinstance(scale, (int, float)):
+        scale = float(scale)
+    else:
+        raise SpecError(
+            f"iterate.while.scale must be a setup value name or a "
+            f"number, got {scale!r}")
+    stop = StopRule(
+        metric=metric, init_metric=init_metric, scale=scale,
+        rtol=float(raw_stop.get("rtol", 1e-6)),
+        max_iters=int(raw_stop.get("max_iters", 100)))
+    if stop.max_iters <= 0:
+        raise SpecError("iterate.while.max_iters must be positive")
+
+    solution = dict(it.get("solution", {"x": "x"}))
+    if not solution:
+        raise SpecError("iterate.solution must not be empty")
+    for pub, src in solution.items():
+        if src not in state_names:
+            raise SpecError(
+                f"iterate.solution.{pub}: source {src!r} is not a "
+                f"state field (solutions are read from the final "
+                f"loop state)")
+
+    return LoopSpec(
+        name=name, dtype=_DTYPES[dtype_name], operands=operands,
+        setup=setup, state=state, body=body, feedback=feedback,
+        stop=stop, solution=solution)

@@ -50,45 +50,45 @@ def _sumsq_kernel(x_ref, o_ref):
     o_ref[0, 0] += jnp.sum(x * x)
 
 
-# indices ride in an f32 lane beside the running max: exact only while
-# they fit the 24-bit mantissa
-IAMAX_MAX_LEN = 1 << 24
-
-
 def iamax_block(x, step):
     """Block-local (max |x|, global flat index) pair for an
     index-carrying reduction. Shared by the standalone kernel below and
     the fused-kernel generator (core.codegen), so the dataflow and
     nodataflow paths cannot diverge. Ties keep the first occurrence
     (BLAS isamax semantics) via the min-index select; `step` is the
-    sequential grid position supplying the block's global offset.
+    sequential grid position supplying the block's global offset. The
+    index rides in int32 (exact through the full int32 range — the old
+    f32 lane carry was exact only to 2^24).
     """
     absx = jnp.abs(x.astype(jnp.float32))
     rows, lanes = absx.shape
     local_max = jnp.max(absx)
-    flat = (jax.lax.broadcasted_iota(jnp.float32, absx.shape, 0) * lanes
-            + jax.lax.broadcasted_iota(jnp.float32, absx.shape, 1))
-    local_idx = jnp.min(jnp.where(absx == local_max, flat, jnp.inf))
-    return local_max, step * rows * lanes + local_idx
+    flat = (jax.lax.broadcasted_iota(jnp.int32, absx.shape, 0) * lanes
+            + jax.lax.broadcasted_iota(jnp.int32, absx.shape, 1))
+    sentinel = jnp.int32(jnp.iinfo(jnp.int32).max)
+    local_idx = jnp.min(jnp.where(absx == local_max, flat, sentinel))
+    return local_max, step * (rows * lanes) + local_idx
 
 
-def _iamax_kernel(x_ref, o_ref):
-    """o = [running max |x|, its flat index]; cross-block ties keep the
-    first occurrence via the strictly-greater compare."""
+def _iamax_kernel(x_ref, m_ref, i_ref):
+    """m = running max |x|, i = its flat index (separate f32/int32
+    accumulators); cross-block ties keep the first occurrence via the
+    strictly-greater compare."""
     step = pl.program_id(0)
 
     @pl.when(step == 0)
     def _init():
-        o_ref[0, 0] = -1.0
-        o_ref[0, 1] = 0.0
+        m_ref[0, 0] = -1.0   # any |x| >= 0 beats the seed
+        i_ref[0, 0] = jnp.int32(0)
 
     local_max, gidx = iamax_block(x_ref[...], step)
-    better = local_max > o_ref[0, 0]
-    o_ref[0, 1] = jnp.where(better, gidx, o_ref[0, 1])
-    o_ref[0, 0] = jnp.where(better, local_max, o_ref[0, 0])
+    better = local_max > m_ref[0, 0]
+    i_ref[0, 0] = jnp.where(better, gidx, i_ref[0, 0])
+    m_ref[0, 0] = jnp.where(better, local_max, m_ref[0, 0])
 
 
-def _reduce_call(kernel, vectors, *, block_rows, interpret, acc_cols=1):
+def _reduce_call(kernel, vectors, *, block_rows, interpret,
+                 out_shape=None):
     from .common import pad_to
     x2ds = []
     for v in vectors:
@@ -102,16 +102,20 @@ def _reduce_call(kernel, vectors, *, block_rows, interpret, acc_cols=1):
     rows = x2ds[0].shape[0]
     grid = (cdiv(rows, block_rows),)
     vec_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    single = out_shape is None
+    if single:
+        out_shape = [jax.ShapeDtypeStruct((1, 1), jnp.float32)]
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[vec_spec] * len(x2ds),
-        # every grid step maps to the same accumulator block
-        out_specs=pl.BlockSpec((1, acc_cols), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, acc_cols), jnp.float32),
+        # every grid step maps to the same accumulator block(s)
+        out_specs=[pl.BlockSpec(s.shape, lambda i: (0, 0))
+                   for s in out_shape],
+        out_shape=out_shape,
         interpret=interpret,
     )(*x2ds)
-    return out[0, 0] if acc_cols == 1 else out[0]
+    return out[0][0, 0] if single else out
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -138,13 +142,12 @@ def nrm2(x, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def iamax(x, *, block_rows=DEFAULT_BLOCK_ROWS, interpret=None):
-    """Index of the first element with maximal |x_i| (BLAS isamax)."""
-    if x.shape[0] > IAMAX_MAX_LEN:
-        raise ValueError(
-            f"iamax index carry is f32 and exact only up to "
-            f"{IAMAX_MAX_LEN} elements, got {x.shape[0]}; use "
-            f"ref.iamax for longer vectors")
+    """Index of the first element with maximal |x_i| (BLAS isamax).
+    The index accumulates in a dedicated int32 ref, exact for any
+    int32-addressable vector (no 2^24 f32-mantissa cap)."""
     interpret = default_interpret() if interpret is None else interpret
-    acc = _reduce_call(_iamax_kernel, [x], block_rows=block_rows,
-                       interpret=interpret, acc_cols=2)
-    return acc[1].astype(jnp.int32)
+    _, idx = _reduce_call(
+        _iamax_kernel, [x], block_rows=block_rows, interpret=interpret,
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)])
+    return idx[0, 0]

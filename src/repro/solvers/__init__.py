@@ -11,7 +11,8 @@ never leave the accelerator.
     result = cg(A, b, tol=1e-8)
     result.x, result.iterations, result.history
 """
-from .driver import SolverProgram, SolverResult  # noqa: F401
+from .driver import LoopProgram, SolverProgram, SolverResult  # noqa: F401
 from .iterative import (BiCGStab, CG, Jacobi, PowerIteration,  # noqa: F401
-                        bicgstab, cg, jacobi, power_iteration)
+                        bicgstab, cg, cg_from_spec, jacobi,
+                        jacobi_from_spec, power_iteration)
 from . import specs  # noqa: F401

@@ -1,46 +1,52 @@
-"""SolverProgram: run a dataflow-composed iteration body fully
-on-device.
+"""Drivers that run dataflow-composed iteration bodies fully on-device.
 
-A solver subclass supplies three pieces built from compiled
-`core.runtime.Program` bodies:
+Two ways to describe an iteration, one driver underneath:
 
-  _init_state(operands) -> (state, res0, scale)
-  _step(operands, state) -> (state, res)
-  _solution(state)      -> {"x": ..., **aux}
+* `SolverProgram` — subclass hooks written in Python
+  (`_init_state` / `_step` / `_solution`) built from compiled
+  `core.runtime.Program` bodies. BiCGStab and power iteration use this.
+* `LoopProgram` — the iteration itself is *described in the JSON
+  spec* (`iterate` section: state fields, feedback edges for vectors
+  AND scalars, scalar update expressions, stop rule) and executed
+  generically. CG and Jacobi run this way — zero per-solver Python.
 
-and the driver wraps them in a single `jax.lax.while_loop` under one
-`jax.jit`, so the entire solve — matvecs, vector updates, and the
-convergence test — compiles once and never leaves the device. The loop
-stops when `res <= tol * scale` or after `max_iters` iterations, and a
+Either way the driver wraps the iteration in a single
+`jax.lax.while_loop` under one `jax.jit`, so the entire solve —
+matvecs, vector updates, scalar feedback, and the convergence test —
+compiles once and never leaves the device. The loop stops when
+`res <= tol * scale` or after `max_iters` iterations, and a
 per-iteration residual history rides along in the carry for telemetry
 (NaN past the stopping point).
 
 `trace_count` counts how many times the loop body is *traced* (not
 executed): it must be 1 after a solve, which is how the tests pin down
 "the iteration body compiles once, no per-iteration retracing".
+
+`batched()` (LoopProgram) / `solve_batched()` vmap the same jitted
+solve over a leading right-hand-side axis: one compiled loop serves a
+whole block of systems, with per-lane stopping handled by JAX's
+while-loop batching rule.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import lowering
+from repro.core.expr import sdiv as _sdiv  # noqa: F401  (re-export)
 from repro.core.runtime import Program
+from repro.core.spec import SpecError
 
 _TINY = 1e-30
 
 
-def _sdiv(a, b):
-    """a / b that yields 0 instead of inf/NaN on a zero denominator —
-    keeps a converged-in-body iteration from poisoning the carry."""
-    return jnp.where(b == 0, 0.0, a / jnp.where(b == 0, 1.0, b))
-
-
 @dataclasses.dataclass
 class SolverResult:
-    """Outcome of one on-device solve."""
+    """Outcome of one on-device solve (batched fields carry a leading
+    right-hand-side axis when produced by a batched solve)."""
     x: jax.Array            # solution (eigvec for eigen-solvers)
     iterations: jax.Array   # int32 — iterations actually run
     residual: jax.Array     # final convergence metric
@@ -49,6 +55,11 @@ class SolverResult:
     aux: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
 
     def __repr__(self):
+        it = jnp.asarray(self.iterations)
+        if it.ndim:   # batched result
+            return (f"SolverResult(batch={it.shape[0]}, "
+                    f"iterations={it.tolist()}, "
+                    f"converged={jnp.asarray(self.converged).tolist()})")
         return (f"SolverResult(iterations={int(self.iterations)}, "
                 f"residual={float(self.residual):.3e}, "
                 f"converged={bool(self.converged)})")
@@ -68,13 +79,14 @@ class SolverProgram:
         self.interpret = interpret
         self.trace_count = 0
         self._solve_fn = None
+        self._batched_fns = {}
 
     # -- subclass hooks -------------------------------------------------
 
     def _init_state(self, operands):
         raise NotImplementedError
 
-    def _step(self, operands, state):
+    def _step(self, operands, state, threshold):
         raise NotImplementedError
 
     def _solution(self, state):
@@ -83,12 +95,15 @@ class SolverProgram:
     # -- plumbing -------------------------------------------------------
 
     def _program(self, spec) -> Program:
-        """Compile one iteration-body piece through the full pipeline
-        (spec parse → graph → fusion plan → Pallas codegen)."""
+        """Compile one iteration-body piece through the full lowering
+        pipeline (parse -> graph -> infer -> fuse -> place -> emit);
+        repeated bodies hit the program cache and compile once."""
         return Program.from_spec(spec, mode=self.mode,
                                  interpret=self.interpret)
 
-    def _build(self):
+    def _build_raw(self):
+        """The solve closure, before jit — also the vmap target for
+        batched solves."""
         max_iters = self.max_iters
 
         def solve(operands, tol):
@@ -106,7 +121,7 @@ class SolverProgram:
             def body(carry):
                 self.trace_count += 1  # python side effect: counts traces
                 k, _, st, h = carry
-                st, res = self._step(operands, st)
+                st, res = self._step(operands, st, threshold)
                 res = jnp.asarray(res, jnp.float32)
                 h = h.at[k + 1].set(res)
                 return (k + 1, res, st, h)
@@ -116,13 +131,12 @@ class SolverProgram:
             return dict(state=state, iterations=k, residual=res,
                         history=hist, converged=res <= threshold)
 
-        return jax.jit(solve)
+        return solve
 
-    def _run(self, operands: Dict[str, jax.Array],
-             tol: float) -> SolverResult:
-        if self._solve_fn is None:
-            self._solve_fn = self._build()
-        out = self._solve_fn(operands, jnp.float32(tol))
+    def _build(self):
+        return jax.jit(self._build_raw())
+
+    def _package(self, out) -> SolverResult:
         sol = dict(self._solution(out["state"]))
         return SolverResult(
             x=sol.pop("x"),
@@ -133,6 +147,26 @@ class SolverProgram:
             aux=sol,
         )
 
+    def _run(self, operands: Dict[str, jax.Array],
+             tol: float) -> SolverResult:
+        if self._solve_fn is None:
+            self._solve_fn = self._build()
+        out = self._solve_fn(operands, jnp.float32(tol))
+        return self._package(out)
+
+    def _run_batched(self, operands: Dict[str, jax.Array], tol: float,
+                     in_axes: Mapping[str, Optional[int]]) -> SolverResult:
+        """vmap the jitted solve over the given per-operand axes; the
+        vmapped program is cached per axes signature."""
+        key = tuple(sorted(in_axes.items()))
+        fn = self._batched_fns.get(key)
+        if fn is None:
+            fn = jax.jit(jax.vmap(self._build_raw(),
+                                  in_axes=(dict(in_axes), None)))
+            self._batched_fns[key] = fn
+        out = fn(operands, jnp.float32(tol))
+        return self._package(out)
+
     def describe(self) -> str:
         """Fusion-plan report for every compiled iteration-body piece."""
         lines = [f"solver {self.name!r} mode={self.mode} "
@@ -141,4 +175,162 @@ class SolverProgram:
             prog = getattr(self, attr)
             if isinstance(prog, Program):
                 lines.append(prog.describe())
+        return "\n".join(lines)
+
+
+class LoopProgram(SolverProgram):
+    """Generic executor for JSON-described loop programs.
+
+    The spec's `iterate` section IS the solver: state init, the staged
+    dataflow body, scalar update expressions, vector/scalar feedback
+    edges, and the stop rule all come from JSON (`core.spec.parse_loop`
+    + `core.lowering.lower_loop`); this class only threads values
+    between compiled stage programs inside the shared while-loop
+    driver. Stage programs are compiled through the digest-keyed
+    program cache, so bodies shared between loop specs (or with the
+    class-based solvers) compile once per mode.
+    """
+
+    def __init__(self, spec, *, mode: Optional[str] = None,
+                 max_iters: Optional[int] = None,
+                 interpret: Optional[bool] = None):
+        if isinstance(spec, lowering.LoopIR):
+            # a pre-lowered IR fixes mode/interpret: its stage kernels
+            # are already compiled for that configuration
+            lir = spec
+            if mode is not None and mode != lir.mode:
+                raise ValueError(
+                    f"LoopIR was lowered for mode={lir.mode!r}; "
+                    f"cannot run it as mode={mode!r}")
+            if interpret is not None and interpret != lir.interpret:
+                raise ValueError(
+                    f"LoopIR was lowered with "
+                    f"interpret={lir.interpret!r}; cannot run it with "
+                    f"interpret={interpret!r}")
+            mode, interpret = lir.mode, lir.interpret
+        else:
+            mode = "dataflow" if mode is None else mode
+            lir = lowering.lower_loop(spec, mode=mode,
+                                      interpret=interpret)
+        self.lir = lir
+        self.name = lir.lspec.name
+        if "x" not in lir.lspec.solution:
+            raise SpecError(
+                f"loop {self.name!r}: iterate.solution must bind 'x' "
+                f"(the primary solution the driver reports)")
+        super().__init__(
+            mode=mode,
+            max_iters=(lir.lspec.stop.max_iters
+                       if max_iters is None else max_iters),
+            interpret=interpret)
+        self._setup_env = None
+
+    # -- spec-driven driver hooks ---------------------------------------
+
+    @staticmethod
+    def _run_stages(stages, env):
+        for cs in stages:
+            if cs.is_let:
+                for name, expr in cs.stage.bindings:
+                    env[name] = expr.evaluate(env)
+            else:
+                ins = {pub: env[src] for pub, src in cs.inputs.items()}
+                out = cs.ir.fn(ins)
+                for pub, dst in cs.outputs.items():
+                    env[dst] = out[pub]
+        return env
+
+    def _init_state(self, operands):
+        env = self._run_stages(self.lir.setup, dict(operands))
+        # loop-invariant setup values are closed over by the body trace
+        # (they become implicit while_loop operands, not carry entries)
+        self._setup_env = env
+        state = {}
+        for f in self.lir.lspec.state:
+            bare = f.init.bare_name
+            state[f.name] = (env[bare] if bare is not None
+                             else f.init.evaluate(env))
+        stop = self.lir.lspec.stop
+        scale = (env[stop.scale] if isinstance(stop.scale, str)
+                 else jnp.float32(stop.scale))
+        return state, env[stop.init_metric], scale
+
+    def _step(self, operands, state, threshold):
+        env = dict(self._setup_env)
+        env.update(state)
+        env = self._run_stages(self.lir.body, env)
+        lspec = self.lir.lspec
+        new_state = {
+            f.name: (env[lspec.feedback[f.name]]
+                     if f.name in lspec.feedback else state[f.name])
+            for f in lspec.state}
+        return new_state, env[lspec.stop.metric]
+
+    def _solution(self, state):
+        return {pub: state[src]
+                for pub, src in self.lir.lspec.solution.items()}
+
+    # -- public API -----------------------------------------------------
+
+    def _check_operands(self, operands):
+        want = set(self.lir.lspec.operands)
+        missing = sorted(want - set(operands))
+        extra = sorted(set(operands) - want)
+        if missing or extra:
+            raise ValueError(
+                f"loop {self.name!r}: operand mismatch "
+                f"(missing {missing}, unexpected {extra}); declared "
+                f"operands: {sorted(want)}")
+
+    def solve(self, *, tol: Optional[float] = None,
+              **operands) -> SolverResult:
+        """One on-device solve; operands are the spec's declared
+        operand names. `tol` overrides the spec's `while.rtol`."""
+        self._check_operands(operands)
+        rtol = self.lir.lspec.stop.rtol if tol is None else tol
+        return self._run(operands, rtol)
+
+    def batched(self, *, tol: Optional[float] = None,
+                axes: Optional[Mapping[str, Optional[int]]] = None,
+                **operands) -> SolverResult:
+        """Multi-RHS solve: vmap over the jitted solve. By default
+        vector operands batch over a leading axis and matrix/scalar
+        operands broadcast (the multi-right-hand-side convention);
+        `axes` overrides per operand. Every result field gains a
+        leading batch axis."""
+        self._check_operands(operands)
+        kinds = self.lir.lspec.operands
+        in_axes = {n: (0 if kinds[n] == "vector" else None)
+                   for n in kinds}
+        if axes:
+            unknown = sorted(set(axes) - set(in_axes))
+            if unknown:
+                raise ValueError(
+                    f"loop {self.name!r}: axes for unknown operands "
+                    f"{unknown}")
+            in_axes.update(axes)
+        rtol = self.lir.lspec.stop.rtol if tol is None else tol
+        return self._run_batched(operands, rtol, in_axes)
+
+    def describe(self) -> str:
+        """Stage-by-stage report: fusion plans of every compiled stage
+        program plus the scalar-expression stages."""
+        lspec = self.lir.lspec
+        lines = [f"loop program {self.name!r} mode={self.mode} "
+                 f"max_iters={self.max_iters} "
+                 f"stop: {lspec.stop.metric} <= rtol * "
+                 f"{lspec.stop.scale!r}"]
+        for label, stages in (("setup", self.lir.setup),
+                              ("body", self.lir.body)):
+            for cs in stages:
+                if cs.is_let:
+                    exprs = ", ".join(f"{n} = {e.src}"
+                                      for n, e in cs.stage.bindings)
+                    lines.append(f"  {label} let: {exprs}")
+                else:
+                    desc = Program.from_ir(cs.ir).describe()
+                    lines.append("  " + desc.replace("\n", "\n  "))
+        feedback = ", ".join(f"{k} <- {v}"
+                             for k, v in lspec.feedback.items())
+        lines.append(f"  feedback: {feedback}")
         return "\n".join(lines)

@@ -3,15 +3,23 @@
 Every linear-algebra statement in these solvers executes through
 registry routines composed in ProgramSpec JSON (`solvers.specs`), so
 each iteration exercises the real fusion planner and Pallas code
-generator. The only work outside the dataflow programs is O(1) scalar
-glue (step lengths, Gram-Schmidt-style coefficients), which stays
-jitted inside the `lax.while_loop` body.
+generator.
 
-  CG             — symmetric positive definite systems
-  BiCGStab       — general square systems
-  Jacobi         — diagonally dominant systems (omega=1) /
-                   Richardson with a preconditioner-free identity scale
-  PowerIteration — dominant eigenpair
+Two coexisting styles on the same while-loop driver:
+
+  CG, Jacobi      — *pure JSON loop specs* (`specs.CG_LOOP`,
+                    `specs.JACOBI_LOOP`) executed by `LoopProgram`;
+                    scalar updates (alpha/beta) and feedback edges are
+                    described in the spec, not in Python. The classes
+                    below remain as the hand-written reference
+                    implementations the loop specs are tested against.
+  BiCGStab,       — class-based `SolverProgram` subclasses, for logic
+  PowerIteration    beyond the spec grammar (BiCGStab's ‖s‖-based
+                    early exit under `lax.cond`, power iteration's
+                    Rayleigh-quotient metric).
+
+  cg_from_spec / jacobi_from_spec — functional wrappers over the JSON
+  path, mirroring cg / jacobi.
 """
 from __future__ import annotations
 
@@ -21,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from . import specs
-from .driver import SolverProgram, SolverResult, _sdiv, _TINY
+from .driver import (LoopProgram, SolverProgram, SolverResult, _sdiv,
+                     _TINY)
 
 
 class _LinearSolver(SolverProgram):
@@ -37,6 +46,16 @@ class _LinearSolver(SolverProgram):
             x0 = jnp.zeros_like(b)
         return self._run({"A": A, "b": b, "x0": x0}, tol)
 
+    def solve_batched(self, A, B, X0=None, *,
+                      tol: float = 1e-6) -> SolverResult:
+        """Multi-RHS solve: B is (nrhs, n); one vmapped compiled loop
+        solves every column with per-lane stopping."""
+        if X0 is None:
+            X0 = jnp.zeros_like(B)
+        return self._run_batched(
+            {"A": A, "b": B, "x0": X0}, tol,
+            {"A": None, "b": 0, "x0": 0})
+
     def _residual(self, A, b, x):
         o = self._resid(A=A, b=b, x=x)
         return o["r"], o["rnorm"]
@@ -46,7 +65,8 @@ class _LinearSolver(SolverProgram):
 
 
 class CG(_LinearSolver):
-    """Conjugate gradient for SPD systems."""
+    """Conjugate gradient for SPD systems (hand-written reference for
+    the JSON loop spec `specs.CG_LOOP`)."""
 
     name = "cg"
 
@@ -61,7 +81,7 @@ class CG(_LinearSolver):
         state = dict(x=ops_["x0"], r=r, p=r, rz=rnorm * rnorm)
         return state, rnorm, self._scale(ops_["b"])
 
-    def _step(self, ops_, st):
+    def _step(self, ops_, st, threshold):
         o1 = self._mv(A=ops_["A"], p=st["p"])
         alpha = _sdiv(st["rz"], o1["pq"])
         o2 = self._upd(alpha=alpha, neg_alpha=-alpha, p=st["p"],
@@ -78,7 +98,14 @@ class CG(_LinearSolver):
 
 
 class BiCGStab(_LinearSolver):
-    """Stabilized bi-conjugate gradient for general square systems."""
+    """Stabilized bi-conjugate gradient for general square systems.
+
+    Implements the classic ‖s‖-based early exit: after s = r - alpha v,
+    if ‖s‖ is already below the convergence threshold the step finishes
+    with x += alpha p under a `jax.lax.cond` — skipping the second
+    matvec and the omega stage entirely — and reports ‖s‖ as the
+    residual (r' = s exactly in that branch).
+    """
 
     name = "bicgstab"
 
@@ -86,6 +113,7 @@ class BiCGStab(_LinearSolver):
         super().__init__(**kw)
         self._mv1 = self._program(specs.BICG_MATVEC1)
         self._sup = self._program(specs.BICG_SUPDATE)
+        self._xh = self._program(specs.BICG_XHALF)
         self._mv2 = self._program(specs.BICG_MATVEC2)
         self._xrup = self._program(specs.BICG_XRUPDATE)
         self._pupd = self._program(specs.BICG_PUPDATE)
@@ -96,22 +124,36 @@ class BiCGStab(_LinearSolver):
                      rho=rnorm * rnorm)
         return state, rnorm, self._scale(ops_["b"])
 
-    def _step(self, ops_, st):
+    def _step(self, ops_, st, threshold):
         A = ops_["A"]
         o1 = self._mv1(A=A, p=st["p"], rhat=st["rhat"])
         alpha = _sdiv(st["rho"], o1["rv"])
         o2 = self._sup(neg_alpha=-alpha, v=o1["v"], r=st["r"])
-        o3 = self._mv2(A=A, s=o2["s"])
-        omega = _sdiv(o3["ts"], o3["tt"])
-        o4 = self._xrup(alpha=alpha, omega=omega, neg_omega=-omega,
-                        p=st["p"], x=st["x"], s=o2["s"], t=o3["t"],
-                        rhat=st["rhat"])
-        beta = _sdiv(o4["rho_next"], st["rho"]) * _sdiv(alpha, omega)
-        o5 = self._pupd(neg_omega=-omega, v=o1["v"], p=st["p"],
-                        beta=beta, r=o4["r_next"])
-        state = dict(x=o4["x_next"], r=o4["r_next"], rhat=st["rhat"],
-                     p=o5["p_next"], rho=o4["rho_next"])
-        return state, o4["rnorm"]
+        s, snorm = o2["s"], o2["snorm"]
+
+        def early(_):
+            # ‖s‖ already converged: x' = x + alpha p, r' = s; p/rho
+            # carry over unchanged (the loop exits on snorm).
+            o = self._xh(alpha=alpha, p=st["p"], x=st["x"])
+            state = dict(x=o["x_half"], r=s, rhat=st["rhat"],
+                         p=st["p"], rho=st["rho"])
+            return state, snorm
+
+        def full(_):
+            o3 = self._mv2(A=A, s=s)
+            omega = _sdiv(o3["ts"], o3["tt"])
+            o4 = self._xrup(alpha=alpha, omega=omega, neg_omega=-omega,
+                            p=st["p"], x=st["x"], s=s, t=o3["t"],
+                            rhat=st["rhat"])
+            beta = _sdiv(o4["rho_next"], st["rho"]) * _sdiv(alpha, omega)
+            o5 = self._pupd(neg_omega=-omega, v=o1["v"], p=st["p"],
+                            beta=beta, r=o4["r_next"])
+            state = dict(x=o4["x_next"], r=o4["r_next"],
+                         rhat=st["rhat"], p=o5["p_next"],
+                         rho=o4["rho_next"])
+            return state, o4["rnorm"]
+
+        return jax.lax.cond(snorm <= threshold, early, full, None)
 
     def _solution(self, st):
         return {"x": st["x"]}
@@ -121,6 +163,7 @@ class Jacobi(_LinearSolver):
     """Weighted Jacobi: x' = x + omega D⁻¹ (b - A x). With
     `richardson=True` the diagonal scaling is skipped (D⁻¹ = I).
 
+    Hand-written reference for the JSON loop spec `specs.JACOBI_LOOP`.
     Each iteration runs two dataflow programs: the fused vmul → axpy
     update, then RESIDUAL (gemv + fused vsub → nrm2) on the updated
     iterate — so the residual telemetry always describes the returned
@@ -141,14 +184,11 @@ class Jacobi(_LinearSolver):
         if self.richardson:
             dinv = jnp.ones_like(ops_["b"])
         else:
-            diag = jnp.diagonal(ops_["A"])
-            dinv = jnp.where(diag == 0, 1.0,
-                             1.0 / jnp.where(diag == 0, 1.0, diag))
-        state = dict(x=ops_["x0"], r=r,
-                     dinv=dinv.astype(ops_["b"].dtype))
+            dinv = jacobi_dinv(ops_["A"], ops_["b"].dtype)
+        state = dict(x=ops_["x0"], r=r, dinv=dinv)
         return state, rnorm, self._scale(ops_["b"])
 
-    def _step(self, ops_, st):
+    def _step(self, ops_, st, threshold):
         o = self._upd(r=st["r"], dinv=st["dinv"], x=st["x"],
                       omega=jnp.float32(self.omega))
         # residual of the *updated* iterate, so the reported
@@ -187,7 +227,7 @@ class PowerIteration(SolverProgram):
         state = dict(v=v, lam=jnp.float32(0.0))
         return state, jnp.float32(jnp.inf), jnp.float32(1.0)
 
-    def _step(self, ops_, st):
+    def _step(self, ops_, st, threshold):
         o = self._stp(A=ops_["A"], v=st["v"])
         lam = o["lambda"]
         v_next = self._nrmlz(inv_norm=_sdiv(1.0, o["norm"]),
@@ -204,10 +244,30 @@ class PowerIteration(SolverProgram):
 # ---------------------------------------------------------------------------
 
 
+def jacobi_dinv(A, dtype=None):
+    """Inverse-diagonal operand for Jacobi (zero diagonals pass
+    through unscaled)."""
+    diag = jnp.diagonal(A)
+    dinv = jnp.where(diag == 0, 1.0,
+                     1.0 / jnp.where(diag == 0, 1.0, diag))
+    return dinv.astype(dtype or A.dtype)
+
+
 def cg(A, b, x0=None, *, tol=1e-6, max_iters=500, mode="dataflow",
        interpret: Optional[bool] = None) -> SolverResult:
     return CG(mode=mode, max_iters=max_iters,
               interpret=interpret).solve(A, b, x0, tol=tol)
+
+
+def cg_from_spec(A, b, x0=None, *, tol=1e-6, max_iters=500,
+                 mode="dataflow",
+                 interpret: Optional[bool] = None) -> SolverResult:
+    """CG run entirely from the `specs.CG_LOOP` JSON description."""
+    lp = LoopProgram(specs.CG_LOOP, mode=mode, max_iters=max_iters,
+                     interpret=interpret)
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    return lp.solve(A=A, b=b, x0=x0, tol=tol)
 
 
 def bicgstab(A, b, x0=None, *, tol=1e-6, max_iters=500, mode="dataflow",
@@ -222,6 +282,21 @@ def jacobi(A, b, x0=None, *, tol=1e-6, max_iters=1000, omega=1.0,
     return Jacobi(mode=mode, max_iters=max_iters, omega=omega,
                   richardson=richardson,
                   interpret=interpret).solve(A, b, x0, tol=tol)
+
+
+def jacobi_from_spec(A, b, x0=None, *, tol=1e-6, max_iters=1000,
+                     omega=1.0, richardson=False, mode="dataflow",
+                     interpret: Optional[bool] = None) -> SolverResult:
+    """Jacobi/Richardson run entirely from the `specs.JACOBI_LOOP`
+    JSON description; D⁻¹ is passed as a data operand."""
+    lp = LoopProgram(specs.JACOBI_LOOP, mode=mode, max_iters=max_iters,
+                     interpret=interpret)
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    dinv = (jnp.ones_like(b) if richardson
+            else jacobi_dinv(A, b.dtype))
+    return lp.solve(A=A, b=b, x0=x0, dinv=dinv,
+                    omega=jnp.float32(omega), tol=tol)
 
 
 def power_iteration(A, v0=None, *, tol=1e-6, max_iters=1000,

@@ -1,4 +1,5 @@
-"""ProgramSpec JSON for every solver iteration body.
+"""ProgramSpec JSON for every solver iteration body — plus whole
+solvers as JSON loop specs (CG_LOOP / JACOBI_LOOP at the bottom).
 
 Each spec below is a plain AIEBLAS-style JSON dict assembled from
 registry routines (gemv/dot/axpy/vsub/vmul/scal/waxpby/nrm2), so every
@@ -117,16 +118,28 @@ BICG_MATVEC1 = {
     ],
 }
 
-# s = r - alpha v
-# (A ‖s‖-based early exit — x += alpha p, stop when s is tiny — is the
-#  classic refinement; it needs a lax.cond in the driver body, left as
-#  a follow-up, so no nrm2 rides along that nobody consumes.)
+# s = r - alpha v ; snorm = ‖s‖    (sup → sn fuse into one kernel)
+# snorm drives the ‖s‖-based early exit in the driver: when s is
+# already tiny the step finishes with x += alpha p under a lax.cond
+# and skips the second matvec entirely.
 BICG_SUPDATE = {
     "name": "bicg_supdate",
     "routines": [
         {"blas": "axpy", "name": "sup",
          "scalars": {"alpha": {"input": "neg_alpha"}},
-         "inputs": {"x": "v", "y": "r"}, "outputs": {"out": "s"}},
+         "inputs": {"x": "v", "y": "r"},
+         "connections": {"out": "sn.x"}, "outputs": {"out": "s"}},
+        {"blas": "nrm2", "name": "sn", "outputs": {"out": "snorm"}},
+    ],
+}
+
+# x' = x + alpha p — the ‖s‖-early-exit half step
+BICG_XHALF = {
+    "name": "bicg_xhalf",
+    "routines": [
+        {"blas": "axpy", "name": "xh",
+         "scalars": {"alpha": {"input": "alpha"}},
+         "inputs": {"x": "p", "y": "x"}, "outputs": {"out": "x_half"}},
     ],
 }
 
@@ -209,4 +222,82 @@ NORMALIZE = {
          "scalars": {"alpha": {"input": "inv_norm"}},
          "inputs": {"x": "av"}, "outputs": {"out": "v_next"}},
     ],
+}
+
+# --------------------------------------------------------------------
+# Loop programs: whole solvers as JSON (`iterate` section)
+# --------------------------------------------------------------------
+# These are complete solver descriptions — state, feedback edges for
+# vectors AND scalars, scalar update expressions, and the stop rule —
+# executed generically by `solvers.LoopProgram`. No per-solver Python:
+# the ~230 lines of scalar/state glue the class-based solvers carry
+# live in the spec instead. The nested stage programs are the same
+# dicts as above, so the program cache compiles each body once per
+# mode whichever path (class or loop spec) runs it.
+
+CG_LOOP = {
+    "name": "cg",
+    "dtype": "float32",
+    "operands": {"A": "matrix", "b": "vector", "x0": "vector"},
+    "setup": [
+        {"program": NRM2, "inputs": {"x": "b"},
+         "outputs": {"norm": "bnorm"}},
+        {"program": RESIDUAL, "inputs": {"x": "x0"},
+         "outputs": {"r": "r0", "rnorm": "rnorm0"}},
+    ],
+    "iterate": {
+        "state": {
+            "x": {"init": "x0"},
+            "r": {"init": "r0"},
+            "p": {"init": "r0"},
+            "rz": {"init": "rnorm0 * rnorm0", "kind": "scalar"},
+        },
+        "body": [
+            {"program": CG_MATVEC},                      # q = A p ; pq
+            {"let": {"alpha": "rz / pq",                 # step length
+                     "neg_alpha": "-alpha"}},
+            {"program": CG_UPDATE},          # x', r', ‖r'‖ (fused)
+            {"let": {"rz_next": "rnorm * rnorm",
+                     "beta": "rz_next / rz"}},
+            {"program": CG_PUPDATE, "inputs": {"r": "r_next"}},
+        ],
+        "feedback": {
+            "x": "x_next", "r": "r_next", "p": "p_next",
+            "rz": "rz_next",               # scalar feedback edge
+        },
+        "while": {"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
+                  "rtol": 1e-6, "max_iters": 200},
+        "solution": {"x": "x"},
+    },
+}
+
+JACOBI_LOOP = {
+    "name": "jacobi",
+    "dtype": "float32",
+    "operands": {"A": "matrix", "b": "vector", "x0": "vector",
+                 "dinv": "vector", "omega": "scalar"},
+    "setup": [
+        {"program": NRM2, "inputs": {"x": "b"},
+         "outputs": {"norm": "bnorm"}},
+        {"program": RESIDUAL, "inputs": {"x": "x0"},
+         "outputs": {"r": "r0", "rnorm": "rnorm0"}},
+    ],
+    "iterate": {
+        "state": {
+            "x": {"init": "x0"},
+            "r": {"init": "r0"},
+        },
+        "body": [
+            # x' = x + omega (dinv ⊙ r)    (vmul → axpy fuse)
+            {"program": JACOBI_UPDATE},
+            # residual of the *updated* iterate, so telemetry always
+            # describes the returned x (same semantics as the class)
+            {"program": RESIDUAL, "inputs": {"x": "x_next"},
+             "outputs": {"r": "r_next", "rnorm": "rnorm"}},
+        ],
+        "feedback": {"x": "x_next", "r": "r_next"},
+        "while": {"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
+                  "rtol": 1e-6, "max_iters": 1000},
+        "solution": {"x": "x"},
+    },
 }

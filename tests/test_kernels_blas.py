@@ -208,6 +208,20 @@ def test_iamax_ties_and_edges():
     assert int(ops.iamax(x)) == 999
 
 
+def test_iamax_beyond_f32_mantissa_range():
+    """The index accumulator is int32: positions past 2^24 (where f32
+    lane carries stop being exact — the old cap) must round-trip
+    exactly, including a decoy maximum below the boundary."""
+    n = (1 << 24) + 4097
+    target = n - 14      # odd and > 2^24: not exactly f32-representable
+    assert float(np.float32(target)) != target
+    x = jnp.zeros(n, jnp.float32).at[target].set(3.5).at[123].set(3.25)
+    assert int(ops.iamax(x, block_rows=8192)) == target
+    # tie across the 2^24 boundary: the first (small-index) wins
+    x = jnp.zeros(n, jnp.float32).at[target].set(2.0).at[77].set(2.0)
+    assert int(ops.iamax(x, block_rows=8192)) == 77
+
+
 @pytest.mark.parametrize("n", [8, 100, 257, 512])
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_symv(n, dtype):

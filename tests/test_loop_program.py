@@ -1,0 +1,246 @@
+"""LoopProgram acceptance: CG and Jacobi as pure JSON loop specs match
+the class-based solvers, compile once, and batch over multiple RHS."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lowering
+from repro.solvers import (BiCGStab, CG, Jacobi, LoopProgram,
+                           cg_from_spec, jacobi_from_spec, specs)
+from repro.solvers.iterative import jacobi_dinv
+
+MODES = ["dataflow", "nodataflow"]
+
+
+def _spd(n, seed=0):
+    k = jax.random.PRNGKey(seed)
+    m = jax.random.normal(k, (n, n), jnp.float32)
+    return m @ m.T / n + jnp.eye(n, dtype=jnp.float32)
+
+
+def _diag_dominant(n, seed=0):
+    a = _spd(n, seed)
+    return a + 2.0 * jnp.diag(jnp.sum(jnp.abs(a), axis=1))
+
+
+def _rhs(n, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# JSON loop spec vs class-based solver: identical iterates + telemetry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_cg_loop_spec_matches_class(mode):
+    n = 128
+    A, b = _spd(n), _rhs(n)
+    lp = LoopProgram(specs.CG_LOOP, mode=mode, max_iters=100)
+    got = lp.solve(A=A, b=b, x0=jnp.zeros(n), tol=1e-6)
+    want = CG(mode=mode, max_iters=100).solve(A, b, tol=1e-6)
+    assert int(got.iterations) == int(want.iterations)
+    assert bool(got.converged)
+    np.testing.assert_allclose(got.x, want.x, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got.history, want.history,
+                               rtol=1e-4, atol=1e-6)
+    assert lp.trace_count == 1
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_jacobi_loop_spec_matches_class(mode):
+    n = 96
+    A, b = _diag_dominant(n), _rhs(n)
+    lp = LoopProgram(specs.JACOBI_LOOP, mode=mode, max_iters=400)
+    got = lp.solve(A=A, b=b, x0=jnp.zeros(n), dinv=jacobi_dinv(A),
+                   omega=jnp.float32(1.0), tol=1e-6)
+    want = Jacobi(mode=mode, max_iters=400).solve(A, b, tol=1e-6)
+    assert int(got.iterations) == int(want.iterations)
+    assert bool(got.converged)
+    np.testing.assert_allclose(got.x, want.x, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got.history, want.history,
+                               rtol=1e-4, atol=1e-6)
+    assert lp.trace_count == 1
+
+
+def test_from_spec_wrappers_solve():
+    n = 80
+    A, b = _spd(n), _rhs(n)
+    res = cg_from_spec(A, b, tol=1e-6, max_iters=200)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b),
+                               rtol=1e-3, atol=1e-4)
+    Ad = _diag_dominant(n)
+    res = jacobi_from_spec(Ad, b, tol=1e-6, max_iters=500)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(Ad, b),
+                               rtol=1e-4, atol=1e-5)
+    # Richardson flavour: identity scaling still converges on a
+    # well-conditioned diagonally dominant system
+    res = jacobi_from_spec(jnp.eye(n) + 0.01 * _spd(n), b,
+                           richardson=True, tol=1e-6, max_iters=500)
+    assert bool(res.converged)
+
+
+def test_loop_compiles_once_and_caches_shapes():
+    n = 64
+    A, b = _spd(n), _rhs(n)
+    lp = LoopProgram(specs.CG_LOOP, max_iters=60)
+    lp.solve(A=A, b=b, x0=jnp.zeros(n), tol=1e-6)
+    assert lp.trace_count == 1
+    # same shapes, new values: jit cache hit, no retrace
+    lp.solve(A=A + 0.1 * jnp.eye(n), b=2.0 * b, x0=jnp.zeros(n),
+             tol=1e-5)
+    assert lp.trace_count == 1
+    # new shape: exactly one more trace
+    m = 2 * n
+    lp.solve(A=_spd(m), b=_rhs(m), x0=jnp.zeros(m), tol=1e-6)
+    assert lp.trace_count == 2
+
+
+def test_loop_spec_stop_rule_defaults():
+    """rtol/max_iters come from the spec's while rule when not
+    overridden at solve time."""
+    n = 64
+    A, b = _spd(n), _rhs(n)
+    lp = LoopProgram(specs.CG_LOOP)   # max_iters=200, rtol=1e-6
+    assert lp.max_iters == 200
+    res = lp.solve(A=A, b=b, x0=jnp.zeros(n))
+    assert bool(res.converged)
+    relres = float(jnp.linalg.norm(b - A @ res.x) / jnp.linalg.norm(b))
+    assert relres <= 1e-5
+
+
+def test_loop_program_describe_reports_stages():
+    lp = LoopProgram(specs.CG_LOOP)
+    desc = lp.describe()
+    assert "loop program 'cg'" in desc
+    assert "alpha = rz / pq" in desc
+    assert "FUSED on-chip group" in desc
+    assert "rz <- rz_next" in desc          # scalar feedback edge
+    nodesc = LoopProgram(specs.CG_LOOP, mode="nodataflow").describe()
+    assert "FUSED" not in nodesc
+
+
+def test_stage_programs_hit_the_cache():
+    """RESIDUAL/NRM2 appear in both loop specs and the class solvers:
+    repeated construction must reuse lowered programs, not recompile."""
+    LoopProgram(specs.CG_LOOP)
+    before = lowering.cache_stats()
+    LoopProgram(specs.CG_LOOP)           # every stage ir cached
+    after = lowering.cache_stats()
+    assert after["misses"] == before["misses"]
+    assert after["hits"] > before["hits"]
+
+
+# ---------------------------------------------------------------------------
+# batched(): multi-RHS via vmap over the jitted solve
+# ---------------------------------------------------------------------------
+
+
+def test_batched_matches_per_rhs_solves():
+    n, nrhs = 72, 3
+    A = _spd(n)
+    B = jnp.stack([_rhs(n, s) for s in range(1, nrhs + 1)])
+    lp = LoopProgram(specs.CG_LOOP, max_iters=100)
+    batched = lp.batched(A=A, b=B, x0=jnp.zeros_like(B),
+                         axes={"A": None}, tol=1e-6)
+    assert batched.x.shape == (nrhs, n)
+    assert batched.history.shape == (nrhs, lp.max_iters + 1)
+    for i in range(nrhs):
+        single = lp.solve(A=A, b=B[i], x0=jnp.zeros(n), tol=1e-6)
+        assert int(batched.iterations[i]) == int(single.iterations)
+        assert bool(batched.converged[i])
+        np.testing.assert_allclose(batched.x[i], single.x,
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(
+            batched.history[i], single.history,
+            rtol=1e-6, atol=1e-7)
+
+
+def test_batched_default_axes_batch_vectors():
+    """Without an axes override every vector operand batches; matrix
+    and scalar operands broadcast."""
+    n, nrhs = 48, 2
+    A = _diag_dominant(n)
+    B = jnp.stack([_rhs(n, s) for s in (5, 6)])
+    lp = LoopProgram(specs.JACOBI_LOOP, max_iters=300)
+    dinv = jnp.broadcast_to(jacobi_dinv(A), (nrhs, n))
+    batched = lp.batched(A=A, b=B, x0=jnp.zeros_like(B), dinv=dinv,
+                         omega=jnp.float32(1.0), tol=1e-6)
+    for i in range(nrhs):
+        np.testing.assert_allclose(
+            batched.x[i], jnp.linalg.solve(A, B[i]),
+            rtol=1e-4, atol=1e-5)
+
+
+def test_class_solver_batched():
+    n, nrhs = 64, 3
+    A = _spd(n)
+    B = jnp.stack([_rhs(n, s) for s in range(7, 7 + nrhs)])
+    solver = CG(max_iters=100)
+    batched = solver.solve_batched(A, B, tol=1e-6)
+    for i in range(nrhs):
+        single = CG(max_iters=100).solve(A, B[i], tol=1e-6)
+        assert int(batched.iterations[i]) == int(single.iterations)
+        np.testing.assert_allclose(batched.x[i], single.x,
+                                   rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# BiCGStab ‖s‖-based early exit
+# ---------------------------------------------------------------------------
+
+
+def test_bicgstab_s_early_exit_on_identity():
+    """On A = I the first half-step is exact: s = 0, so the lax.cond
+    branch finishes with x += alpha p and the loop stops after one
+    iteration."""
+    n = 48
+    b = _rhs(n)
+    res = BiCGStab(max_iters=50).solve(jnp.eye(n), b, tol=1e-6)
+    assert int(res.iterations) == 1
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, b, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_bicgstab_still_converges_with_early_exit(mode):
+    n = 96
+    k = jax.random.PRNGKey(3)
+    A = jax.random.normal(k, (n, n), jnp.float32) / jnp.sqrt(n) \
+        + 3.0 * jnp.eye(n)
+    b = _rhs(n)
+    res = BiCGStab(mode=mode, max_iters=300).solve(A, b, tol=1e-7)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Operand validation
+# ---------------------------------------------------------------------------
+
+
+def test_loop_ir_pins_mode_and_interpret():
+    """A pre-lowered LoopIR carries its compilation mode; LoopProgram
+    must adopt it and reject a conflicting override."""
+    lir = lowering.lower_loop(specs.CG_LOOP, mode="nodataflow")
+    lp = LoopProgram(lir)
+    assert lp.mode == "nodataflow"
+    assert "FUSED" not in lp.describe()
+    with pytest.raises(ValueError, match="lowered for mode"):
+        LoopProgram(lir, mode="dataflow")
+
+
+def test_loop_operand_mismatch_raises():
+    lp = LoopProgram(specs.CG_LOOP)
+    with pytest.raises(ValueError, match="operand mismatch"):
+        lp.solve(A=jnp.eye(8), b=jnp.ones(8))          # missing x0
+    with pytest.raises(ValueError, match="operand mismatch"):
+        lp.solve(A=jnp.eye(8), b=jnp.ones(8), x0=jnp.zeros(8),
+                 extra=jnp.ones(8))
+    with pytest.raises(ValueError, match="unknown operands"):
+        lp.batched(A=jnp.eye(8), b=jnp.ones((2, 8)),
+                   x0=jnp.zeros((2, 8)), axes={"nope": 0})

@@ -1,0 +1,103 @@
+"""Lowering pipeline: named passes over ProgramIR, partial lowering,
+digest stability, and the (digest, mode, fuse, interpret) program
+cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lowering
+from repro.core.runtime import AXPYDOT_SPEC, Program
+from repro.kernels import ref
+
+SPEC = AXPYDOT_SPEC
+
+
+def test_full_pipeline_populates_ir():
+    ir = lowering.lower(SPEC)
+    assert ir.passes_run == ["parse", "graph", "infer", "fuse",
+                             "place", "emit"]
+    assert ir.spec.name == "axpydot"
+    assert ir.graph.order == ["zcalc", "zdot"]
+    assert ir.io.input_kinds == {"neg_alpha": "scalar", "v": "vector",
+                                 "w": "vector", "u": "vector"}
+    assert ir.io.output_kinds == {"beta": "scalar"}
+    assert len(ir.groups) == 1 and ir.groups[0].fused
+    assert callable(ir.fn)
+
+
+def test_partial_lowering_upto():
+    ir = lowering.lower(SPEC, upto="infer")
+    assert ir.passes_run == ["parse", "graph", "infer"]
+    assert ir.io is not None
+    assert ir.groups is None and ir.fn is None
+
+
+def test_emitted_fn_matches_reference():
+    ir = lowering.lower(SPEC)
+    n = 384
+    w = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(3), (n,), jnp.float32)
+    out = ir.fn({"neg_alpha": -0.7, "w": w, "v": v, "u": u})
+    want = ref.axpydot(jnp.float32(0.7), w, v, u)
+    np.testing.assert_allclose(out["beta"], want, rtol=1e-4, atol=1e-3)
+
+
+def test_digest_is_key_order_independent():
+    a = {"name": "p", "routines": [{"blas": "axpy", "name": "a0"}]}
+    b = {"routines": [{"name": "a0", "blas": "axpy"}], "name": "p"}
+    assert lowering.spec_digest(a) == lowering.spec_digest(b)
+    c = {"name": "q", "routines": [{"blas": "axpy", "name": "a0"}]}
+    assert lowering.spec_digest(a) != lowering.spec_digest(c)
+
+
+def test_cache_hits_same_key_misses_new_mode():
+    before = lowering.cache_stats()
+    ir1 = lowering.compile_cached(SPEC, mode="dataflow")
+    ir2 = lowering.compile_cached(SPEC, mode="dataflow")
+    assert ir1 is ir2
+    mid = lowering.cache_stats()
+    assert mid["hits"] >= before["hits"] + 1
+    ir3 = lowering.compile_cached(SPEC, mode="nodataflow")
+    assert ir3 is not ir1
+    assert lowering.cache_stats()["misses"] >= mid["misses"]
+
+
+def test_program_from_spec_shares_cached_ir():
+    p1 = Program.from_spec(SPEC)
+    p2 = Program.from_spec(SPEC)
+    assert p1.ir is p2.ir
+    # distinct Program wrappers still behave independently
+    assert p1.describe() == p2.describe()
+
+
+def test_place_pass_collects_hints():
+    spec = {"routines": [
+        {"blas": "axpy", "name": "a0",
+         "inputs": {"x": "x", "y": "y"},
+         "placement": {"x": ["data"], "y": ["data"]}}]}
+    ir = lowering.lower(spec, upto="place")
+    assert ir.placements == {"x": ("data",), "y": ("data",)}
+
+
+def test_lower_loop_compiles_stage_programs_once():
+    from repro.solvers import specs
+    lowering.lower_loop(specs.JACOBI_LOOP)   # populate
+    before = lowering.cache_stats()
+    lir = lowering.lower_loop(specs.JACOBI_LOOP)
+    after = lowering.cache_stats()
+    assert after["misses"] == before["misses"]
+    # RESIDUAL is shared by setup and body: same ProgramIR object
+    setup_res = lir.setup[1].ir
+    body_res = lir.body[1].ir
+    assert setup_res is body_res
+
+
+def test_loop_and_class_paths_share_cache_entries():
+    """The float32 default must not perturb the digest: a body dict
+    compiled inside a loop spec and directly via Program.from_spec is
+    one cache entry."""
+    from repro.solvers import specs
+    lir = lowering.lower_loop(specs.JACOBI_LOOP)
+    direct = Program.from_spec(specs.RESIDUAL)
+    assert lir.body[1].ir is direct.ir

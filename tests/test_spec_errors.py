@@ -1,0 +1,261 @@
+"""Spec error paths: bad `iterate` sections, the scalar-expression
+grammar, and duplicate-drive / fan-out validation in the graph layer."""
+import pytest
+
+from repro.core import lowering, spec as spec_mod
+from repro.core.expr import ExprError, parse_expr
+from repro.core.graph import DataflowGraph
+from repro.core.spec import SpecError
+from repro.solvers import specs
+
+# ---------------------------------------------------------------------------
+# Expression grammar: validated, no eval
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("src", [
+    "__import__('os')", "a.b", "f(x)", "a ** b", "a ^ b", "a +", "(a",
+    "a b", "", "x[0]", "lambda: 1",
+])
+def test_expression_grammar_rejects(src):
+    with pytest.raises(ExprError):
+        parse_expr(src)
+
+
+def test_expression_division_is_safe():
+    import jax.numpy as jnp
+    e = parse_expr("rz / pq")
+    assert float(e.evaluate({"rz": jnp.float32(1.0),
+                             "pq": jnp.float32(0.0)})) == 0.0
+
+
+def test_expression_undefined_name():
+    with pytest.raises(ExprError, match="undefined"):
+        parse_expr("a + b").evaluate({"a": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# iterate-section validation
+# ---------------------------------------------------------------------------
+
+
+def _loop(**over):
+    """A minimal valid loop spec (Richardson on A) to mutate."""
+    base = {
+        "name": "mini",
+        "operands": {"A": "matrix", "b": "vector", "x0": "vector"},
+        "setup": [
+            {"program": specs.NRM2, "inputs": {"x": "b"},
+             "outputs": {"norm": "bnorm"}},
+            {"program": specs.RESIDUAL, "inputs": {"x": "x0"},
+             "outputs": {"r": "r0", "rnorm": "rnorm0"}},
+        ],
+        "iterate": {
+            "state": {"x": {"init": "x0"}, "r": {"init": "r0"}},
+            "body": [
+                {"program": specs.RESIDUAL, "inputs": {"x": "x"},
+                 "outputs": {"r": "r_next", "rnorm": "rnorm"}},
+            ],
+            "feedback": {"x": "x", "r": "r_next"},
+            "while": {"metric": "rnorm", "init": "rnorm0",
+                      "scale": "bnorm", "max_iters": 5},
+            "solution": {"x": "x"},
+        },
+    }
+    base.update(over)
+    return base
+
+
+def test_minimal_loop_spec_parses():
+    lir = lowering.lower_loop(_loop())
+    assert lir.state_kinds == {"x": "vector", "r": "vector"}
+    assert lir.body_kinds["rnorm"] == "scalar"
+
+
+def test_feedback_unknown_state_field():
+    bad = _loop()
+    bad["iterate"] = {**bad["iterate"],
+                      "feedback": {"q": "r_next", "x": "x"}}
+    with pytest.raises(SpecError, match="unknown state field"):
+        spec_mod.parse_loop(bad)
+
+
+def test_feedback_source_must_exist():
+    bad = _loop()
+    bad["iterate"] = {**bad["iterate"],
+                      "feedback": {"r": "nosuch", "x": "x"}}
+    with pytest.raises(SpecError, match="not defined"):
+        lowering.lower_loop(bad)
+
+
+def test_feedback_kind_mismatch_scalar_into_vector():
+    bad = _loop()
+    bad["iterate"] = {**bad["iterate"],
+                      "feedback": {"r": "rnorm", "x": "x"}}
+    with pytest.raises(SpecError, match="cannot feed a scalar"):
+        lowering.lower_loop(bad)
+
+
+def test_scalar_cannot_feed_window_port():
+    bad = _loop()
+    # bind the residual program's vector input x to a scalar state
+    bad["iterate"] = {
+        **bad["iterate"],
+        "state": {**bad["iterate"]["state"],
+                  "t": {"init": "rnorm0 * 2"}},
+        "body": [{"program": specs.RESIDUAL, "inputs": {"x": "t"},
+                  "outputs": {"r": "r_next", "rnorm": "rnorm"}}],
+    }
+    with pytest.raises(SpecError, match="window port"):
+        lowering.lower_loop(bad)
+
+
+def test_cyclic_body_reference_needs_state():
+    """A stage consuming a value only produced by a later stage is a
+    spec error pointing at state-routed feedback."""
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "body": [
+            # consumes r_next2, which only the NEXT stage produces
+            {"program": specs.NRM2, "inputs": {"x": "r_next2"},
+             "outputs": {"norm": "rnorm"}},
+            {"program": specs.RESIDUAL, "inputs": {"x": "x"},
+             "outputs": {"r": "r_next2", "rnorm": "rn2"}},
+        ],
+        "feedback": {"r": "r_next2", "x": "x"},
+    }
+    with pytest.raises(SpecError, match="cyclic feedback"):
+        lowering.lower_loop(bad)
+
+
+def test_rebinding_env_name_rejected():
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "body": [
+            {"program": specs.RESIDUAL, "inputs": {"x": "x"},
+             "outputs": {"r": "r_next", "rnorm": "rnorm"}},
+            # rebinds r_next
+            {"program": specs.RESIDUAL, "inputs": {"x": "x"},
+             "outputs": {"r": "r_next", "rnorm": "rn2"}},
+        ],
+    }
+    with pytest.raises(SpecError, match="rebinds"):
+        lowering.lower_loop(bad)
+
+
+def test_let_expression_over_vector_rejected():
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "body": [{"let": {"bad": "r * 2"}}] + bad["iterate"]["body"],
+    }
+    with pytest.raises(SpecError, match="not a scalar"):
+        lowering.lower_loop(bad)
+
+
+def test_metric_must_be_body_produced():
+    bad = _loop()
+    bad["iterate"] = {**bad["iterate"],
+                      "while": {"metric": "bnorm", "init": "rnorm0",
+                                "max_iters": 5}}
+    with pytest.raises(SpecError, match="not produced by"):
+        lowering.lower_loop(bad)
+
+
+def test_solution_must_read_state():
+    bad = _loop()
+    bad["iterate"] = {**bad["iterate"], "solution": {"x": "r_next"}}
+    with pytest.raises(SpecError, match="not a\\s+state field"):
+        spec_mod.parse_loop(bad)
+
+
+def test_unknown_operand_kind():
+    with pytest.raises(SpecError, match="unknown kind"):
+        spec_mod.parse_loop(_loop(operands={"A": "tensor"}))
+
+
+def test_unknown_top_level_key_rejected():
+    """A section that escaped `iterate` (e.g. a top-level 'solution')
+    must error, not be silently dropped."""
+    with pytest.raises(SpecError, match="unknown top-level"):
+        spec_mod.parse_loop(_loop(solution={"x": "x"}))
+
+
+def test_empty_feedback_rejected():
+    bad = _loop()
+    bad["iterate"] = {**bad["iterate"], "feedback": {}}
+    with pytest.raises(SpecError, match="no feedback edge"):
+        spec_mod.parse_loop(bad)
+
+
+def test_stage_needs_let_or_program():
+    bad = _loop(setup=[{"nonsense": 1}])
+    with pytest.raises(SpecError, match="'let' or\\s+'program'"):
+        spec_mod.parse_loop(bad)
+
+
+def test_bad_expression_inside_spec_is_spec_error():
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "body": [{"let": {"z": "__import__('os')"}}]
+        + bad["iterate"]["body"],
+    }
+    with pytest.raises(SpecError, match="invalid token"):
+        spec_mod.parse_loop(bad)
+
+
+def test_stage_binding_unknown_program_port():
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "body": [{"program": specs.RESIDUAL,
+                  "inputs": {"nope": "x"},
+                  "outputs": {"r": "r_next", "rnorm": "rnorm"}}],
+    }
+    with pytest.raises(SpecError, match="unknown program inputs"):
+        lowering.lower_loop(bad)
+
+
+# ---------------------------------------------------------------------------
+# Graph-layer validation: duplicate drive + fan-out
+# ---------------------------------------------------------------------------
+
+
+def test_fanout_list_duplicate_drive_rejected():
+    bad = {"routines": [
+        {"blas": "scal", "name": "sc",
+         "connections": {"out": ["d.x", "d.x"]}},   # same port twice
+        {"blas": "dot", "name": "d"}]}
+    with pytest.raises(SpecError, match="driven twice"):
+        DataflowGraph(spec_mod.parse(bad))
+
+
+def test_fanout_list_bad_target_port():
+    bad = {"routines": [
+        {"blas": "scal", "name": "sc",
+         "connections": {"out": ["d.x", "d.nope"]}},
+        {"blas": "dot", "name": "d"}]}
+    with pytest.raises(SpecError, match="no\\s+input port"):
+        spec_mod.parse(bad)
+
+
+def test_fanout_list_non_string_target():
+    bad = {"routines": [
+        {"blas": "scal", "name": "sc", "connections": {"out": [3]}},
+        {"blas": "dot", "name": "d"}]}
+    with pytest.raises(SpecError, match="must be a"):
+        spec_mod.parse(bad)
+
+
+def test_conflicting_public_input_kinds_rejected():
+    """One public name bound as both a vector window and a scalar
+    stream must be rejected at IO inference."""
+    bad = {"routines": [
+        {"blas": "axpy", "name": "a",
+         "scalars": {"alpha": {"input": "v"}},
+         "inputs": {"x": "v"}}]}
+    with pytest.raises(SpecError, match="conflicting kinds"):
+        lowering.lower(bad, upto="infer")
