@@ -4,6 +4,8 @@
               on-chip, CPU baseline)           [the paper's only figure]
   kernels   — per-kernel microbenchmarks
   solvers   — iterative-solver iteration throughput, DF vs no-DF
+  api       — repro.blas front-door dispatch overhead vs raw jitted
+              kernels (the public-API tax must stay negligible)
   roofline  — the (arch x shape) roofline table from the dry-run
               artifacts (run `python -m repro.launch.dryrun --all`
               first; skipped gracefully if absent)
@@ -17,8 +19,8 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
 
-from benchmarks import (fig3_routines, kernel_bench, roofline_table,
-                        solver_bench)
+from benchmarks import (api_overhead, fig3_routines, kernel_bench,
+                        roofline_table, solver_bench)
 
 
 def main() -> None:
@@ -30,6 +32,9 @@ def main() -> None:
     print()
     print("== solver benchmarks (dataflow-composed iteration loops) ==")
     solver_bench.main(sizes=(256, 1024), max_iters=10)
+    print()
+    print("== public-API dispatch overhead (repro.blas) ==")
+    api_overhead.main()
     print()
     print("== roofline table (from dry-run artifacts) ==")
     if roofline_table.RESULTS.exists():

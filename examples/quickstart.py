@@ -5,6 +5,9 @@ the dataflow graph, fuses them into one generated Pallas kernel (the
 on-chip edge), and executes. Run:
 
     PYTHONPATH=src python examples/quickstart.py
+
+This is the raw-JSON tier; see examples/api_tour.py for the
+`repro.blas` front door (routine calls, fluent builder, Executable).
 """
 import jax
 import jax.numpy as jnp

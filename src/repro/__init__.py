@@ -1,0 +1,23 @@
+"""AIEBLAS-on-TPU reproduction. `repro.blas` is the public front door;
+`repro.core` / `repro.solvers` / `repro.kernels` are the layers
+underneath. Subpackages import lazily so `import repro` stays cheap.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+_SUBPACKAGES = ("blas", "checkpoint", "configs", "core", "data", "ft",
+                "kernels", "launch", "models", "optim", "serve",
+                "solvers", "train")
+
+
+def __getattr__(name):
+    if name in _SUBPACKAGES:
+        mod = import_module(f"repro.{name}")
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBPACKAGES))

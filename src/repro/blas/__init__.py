@@ -1,0 +1,69 @@
+"""`repro.blas` — the library's public front door.
+
+Three tiers, lowest friction first:
+
+1. **Routine calls** (SciPy-style, registry-generated): one function
+   per `core.routines` entry —
+
+       from repro import blas
+       beta = blas.dot(x, y)
+       z = blas.axpy(0.5, x, y)
+
+   Each is backed by a digest-cached single-routine spec: repeated
+   calls compile once. `python -m repro.blas --list` prints the table.
+
+2. **ProgramBuilder** (fluent composition):
+
+       b = blas.program("axpydot")
+       z = b.axpy(alpha=b.input("neg_alpha"), x="v", y="w")
+       b.dot(x=z, y="u", out="beta")
+       exe = blas.compile(b)
+       beta = exe.one(neg_alpha=-0.7, v=v, w=w, u=u)
+
+   Builders round-trip losslessly to/from the raw JSON spec
+   (`ProgramBuilder.from_spec(x).to_spec()` is digest-identical to x)
+   and cover loop programs via `b.operand(...)` / `b.iterate(...)`.
+
+3. **Raw JSON specs** — the AIEBLAS-style dicts everything lowers
+   from remain first-class: `blas.compile(spec_dict)` accepts them
+   directly, as do all pre-existing entrypoints.
+
+`blas.compile(...)` returns an `Executable` whatever the input kind:
+`.run() / .one() / .batched() / .describe() / .cost_report() /
+.save()`, with `blas.load(path)` compiling a saved spec back. The
+solver convenience functions (`cg`, `bicgstab`, `jacobi`,
+`power_iteration`) run on the same path.
+"""
+from __future__ import annotations
+
+from . import functional as _functional
+from .builder import (BuilderError, InputRef, Port,  # noqa: F401
+                      ProgramBuilder, let, program, stage)
+from .executable import (CostReport, Executable, compile,  # noqa: F401
+                         load)
+from .solvers import (bicgstab, cg, jacobi,  # noqa: F401
+                      power_iteration)
+
+__all__ = [
+    "BuilderError", "CostReport", "Executable", "InputRef", "Port",
+    "ProgramBuilder", "api_table", "bicgstab", "cg", "compile",
+    "jacobi", "let", "load", "power_iteration", "program", "routines",
+    "stage",
+]
+
+api_table = _functional.api_table
+
+
+def routines() -> list:
+    """Registry routine names — each is also a `blas.<name>` callable."""
+    from repro.core import routines as R
+    return list(R.names())
+
+
+# the registry-generated routine layer: one module attribute per
+# routine (axpy, dot, gemv, gemm, ...). New registry entries appear
+# here — and in __all__ — for free.
+_ROUTINE_FNS = _functional.build_namespace()
+globals().update(_ROUTINE_FNS)
+__all__ += sorted(_ROUTINE_FNS)
+del _functional

@@ -1,0 +1,480 @@
+"""`blas.compile(...)` -> `Executable`: one handle over both program
+kinds.
+
+A fused dataflow spec lowers to a `core.runtime.Program`; a spec with
+an `iterate` section lowers to a `solvers.LoopProgram`; a class-based
+solver (BiCGStab, PowerIteration) can be wrapped too. Whichever is
+underneath, the handle exposes:
+
+    exe.run(**inputs)        -> Results (dataflow) / SolverResult (loop)
+    exe.one(**inputs)        -> the single output / the solution vector
+    exe.batched(**inputs)    -> vmapped multi-RHS execution
+    exe.describe()           -> fusion-plan / stage report
+    exe.cost_report(shapes)  -> roofline-model flops/bytes table
+    exe.save(path)           -> canonical spec JSON
+    blas.load(path)          -> compile it back
+
+`compile` accepts raw JSON (dict / string / path), a ProgramBuilder,
+or a parsed ProgramSpec/LoopSpec, and routes dataflow programs through
+the digest-keyed lowering cache so recompiling the same spec is free.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import json
+import pathlib
+from typing import Mapping, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core import lowering, spec as spec_mod
+from repro.core.runtime import Program, Results
+from repro.core.spec import LoopSpec, ProgramSpec, SpecError
+from repro.solvers.driver import LoopProgram, SolverProgram, SolverResult
+
+from .builder import ProgramBuilder
+
+# Roofline hardware constants (TPU v5e, per chip) — fallback copies of
+# repro.launch.roofline's values. The import must stay lazy AND
+# guarded: repro.launch pulls in the model-serving stack, which needs
+# newer-jax sharding APIs (jax.sharding.AxisType) than the BLAS layer
+# requires and is unimportable under older jax.
+_PEAK_FLOPS = 197e12
+_HBM_BW = 819e9
+
+
+def _hw_constants() -> Tuple[float, float]:
+    try:
+        from repro.launch import roofline
+        return roofline.PEAK_FLOPS, roofline.HBM_BW
+    except ImportError:
+        return _PEAK_FLOPS, _HBM_BW
+
+
+# ---------------------------------------------------------------------------
+# Cost model: shape propagation over the dataflow graph
+# ---------------------------------------------------------------------------
+
+
+def _norm_shape(s) -> tuple:
+    if isinstance(s, int):
+        return (s,)
+    return tuple(int(d) for d in s)
+
+
+def _out_shape(rdef, blas: str, kind: str, sh: Mapping) -> tuple:
+    from repro.core import routines as R
+    if kind == R.OUT_SCALAR:
+        return ()
+    if kind == R.OUT_VEC:
+        mats = [p for p, k in rdef.inputs.items() if k == R.MAT]
+        if mats:
+            return (sh[mats[0]][0],)
+        vecs = [p for p, k in rdef.inputs.items() if k == R.VEC]
+        return sh[vecs[0]]
+    # OUT_MAT
+    if blas == "gemm":
+        return (sh["A"][0], sh["B"][1])
+    mats = [p for p, k in rdef.inputs.items() if k == R.MAT]
+    return sh[mats[0]]
+
+
+def _program_cost(ir, shapes: Mapping, scope: str = ""):
+    """Per-routine (flops, bytes) rows for one lowered program, plus
+    fused-group HBM savings and public-output shapes."""
+    port_shape = {}
+    for pi in ir.io.inputs:
+        if pi.kind == "scalar":
+            continue
+        if pi.name not in shapes:
+            raise ValueError(
+                f"cost_report: missing shape for program input "
+                f"{pi.name!r} (a {pi.kind})")
+        port_shape[(pi.routine, pi.port)] = _norm_shape(shapes[pi.name])
+
+    dtype_bytes = np.dtype(ir.spec.dtype).itemsize
+    rows, out_port_shape = [], {}
+    for name in ir.graph.order:
+        r = ir.graph.nodes[name]
+        rdef = r.rdef
+        sh = {port: port_shape[(name, port)] for port in rdef.inputs}
+        flops, nbytes = rdef.cost(sh) if rdef.cost else (0, 0)
+        rows.append((f"{scope}{name}", r.blas, int(flops), int(nbytes)))
+        for port, kind in rdef.outputs.items():
+            oshape = _out_shape(rdef, r.blas, kind, sh)
+            out_port_shape[(name, port)] = oshape
+            for e in ir.graph.consumers_of(name, port):
+                port_shape[(e.dst, e.dst_port)] = oshape
+
+    # on-chip edges inside a fused group never round-trip through HBM:
+    # one avoided write + one avoided read per intermediate element
+    savings = 0
+    for g in ir.groups or ():
+        if not g.fused or len(g.nodes) < 2:
+            continue
+        members = set(g.nodes)
+        for e in ir.graph.edges:
+            if e.src in members and e.dst in members:
+                elems = int(np.prod(out_port_shape[(e.src, e.src_port)],
+                                    dtype=np.int64))
+                savings += 2 * elems * dtype_bytes
+    out_shapes = {po.name: out_port_shape[(po.routine, po.port)]
+                  for po in ir.io.outputs}
+    return rows, savings, out_shapes
+
+
+@dataclasses.dataclass
+class CostReport:
+    """Roofline-model accounting for one executable, from the registry
+    cost models (`core.routines.RoutineDef.cost`). For loop programs
+    the totals describe ONE body iteration; setup rows are listed but
+    kept out of the per-iteration totals."""
+    program: str
+    mode: str
+    kind: str                       # "dataflow" | "loop"
+    rows: tuple                     # (label, blas, flops, bytes)
+    flops: int                      # per call / per iteration
+    bytes_naive: int                # per-routine HBM traffic
+    fused_savings: int              # bytes kept on-chip by fusion
+
+    @property
+    def bytes(self) -> int:
+        if self.mode == "dataflow":
+            return self.bytes_naive - self.fused_savings
+        return self.bytes_naive
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / self.bytes if self.bytes else 0.0
+
+    @property
+    def t_compute(self) -> float:
+        peak, _ = _hw_constants()
+        return self.flops / peak
+
+    @property
+    def t_memory(self) -> float:
+        _, bw = _hw_constants()
+        return self.bytes / bw
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.t_compute >= self.t_memory else "memory"
+
+    def __str__(self):
+        unit = "iteration" if self.kind == "loop" else "call"
+        lines = [f"cost report: {self.program!r} mode={self.mode} "
+                 f"(per {unit})"]
+        for label, blas, flops, nbytes in self.rows:
+            lines.append(f"  {label:<28} {blas:<8} "
+                         f"{flops:>12,} flop {nbytes:>12,} B")
+        lines.append(
+            f"  total: {self.flops:,} flop, {self.bytes:,} B HBM "
+            f"({self.fused_savings:,} B kept on-chip by fusion)")
+        lines.append(
+            f"  arithmetic intensity {self.intensity:.3f} flop/B -> "
+            f"{self.bound}-bound "
+            f"(t_compute {self.t_compute:.3e}s, "
+            f"t_memory {self.t_memory:.3e}s)")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Executable
+# ---------------------------------------------------------------------------
+
+
+class Executable:
+    """One handle over a compiled dataflow Program, a JSON loop
+    program, or a wrapped class-based solver."""
+
+    def __init__(self, impl, raw: Optional[Mapping], kind: str,
+                 mode: str, interpret: Optional[bool]):
+        self._impl = impl
+        self._raw = raw
+        self.kind = kind            # "dataflow" | "loop"
+        self.mode = mode
+        self.interpret = interpret
+        self._jit_run = None        # dataflow: lazily jitted program
+        self._batched_fns = {}
+
+    # -- construction (see also module-level compile/load) ---------------
+
+    @classmethod
+    def from_solver(cls, solver: SolverProgram,
+                    raw: Optional[Mapping] = None) -> "Executable":
+        """Wrap a class-based SolverProgram (logic beyond the loop-spec
+        grammar, e.g. BiCGStab's early exit) behind the same handle."""
+        return cls(impl=solver, raw=raw, kind="loop",
+                   mode=solver.mode, interpret=solver.interpret)
+
+    # -- introspection ---------------------------------------------------
+
+    @property
+    def name(self) -> str:
+        if isinstance(self._impl, Program):
+            return self._impl.spec.name
+        return self._impl.name
+
+    @property
+    def spec(self) -> Optional[Mapping]:
+        """The canonical raw spec dict (None for wrapped class-based
+        solvers, which have no JSON form)."""
+        return self._raw
+
+    @property
+    def input_names(self):
+        if self.kind == "dataflow":
+            return list(self._impl.input_names)
+        if isinstance(self._impl, LoopProgram):
+            return sorted(self._impl.lir.lspec.operands)
+        return None    # class-based solver: see its solve() signature
+
+    @property
+    def output_names(self):
+        if self.kind == "dataflow":
+            return list(self._impl.output_names)
+        if isinstance(self._impl, LoopProgram):
+            return sorted(self._impl.lir.lspec.solution)
+        return ["x"]
+
+    def builder(self) -> ProgramBuilder:
+        """Reconstruct a ProgramBuilder from this executable's spec."""
+        if self._raw is None:
+            raise ValueError(
+                f"{self.name!r} wraps a class-based solver with no "
+                f"JSON spec; there is nothing to rebuild")
+        return ProgramBuilder.from_spec(self._raw)
+
+    def describe(self) -> str:
+        return self._impl.describe()
+
+    def __repr__(self):
+        return (f"Executable({self.name!r}, kind={self.kind}, "
+                f"mode={self.mode})")
+
+    # -- execution -------------------------------------------------------
+
+    def run(self, *, tol: Optional[float] = None, **inputs
+            ) -> Union[Results, SolverResult]:
+        """Execute. Dataflow: keyword inputs are the program's public
+        inputs, returns a Results mapping. Loop: keyword inputs are the
+        declared operands (plus optional `tol`), returns a
+        SolverResult.
+
+        `tol` (and `axes` on batched()) are reserved keywords of this
+        handle; a spec that names a public input or operand `tol` must
+        run through `Program`/`LoopProgram` directly."""
+        if self.kind == "dataflow":
+            if tol is not None:
+                raise TypeError(
+                    "tol is a loop-program knob; this is a dataflow "
+                    "program")
+            if self._jit_run is None:
+                # the jitted wrapper is memoized on the (digest-cached)
+                # IR, so every Executable of the same spec shares one
+                # trace/XLA compile, not one per handle
+                ir = self._impl.ir
+                fn = getattr(ir, "_jit_fn", None)
+                if fn is None:
+                    fn = jax.jit(ir.fn)
+                    ir._jit_fn = fn
+                self._jit_run = fn
+            return Results(self._jit_run(inputs))
+        if isinstance(self._impl, LoopProgram):
+            return self._impl.solve(tol=tol, **inputs)
+        if tol is not None:
+            inputs["tol"] = tol
+        return self._impl.solve(**inputs)
+
+    __call__ = run
+
+    def one(self, *, tol: Optional[float] = None, **inputs) -> jax.Array:
+        """Single-result sugar: the lone output of a one-output
+        dataflow program, or the solution vector of a loop program."""
+        out = self.run(tol=tol, **inputs)
+        if isinstance(out, Results):
+            return out.one()
+        return out.x
+
+    def batched(self, *, tol: Optional[float] = None,
+                axes: Optional[Mapping] = None, **inputs):
+        """vmap over a leading batch axis. Convention (overridable via
+        `axes`): vector inputs batch on axis 0, matrices and scalars
+        broadcast — the multi-right-hand-side convention shared with
+        LoopProgram.batched()."""
+        if self.kind != "dataflow":
+            if isinstance(self._impl, LoopProgram):
+                return self._impl.batched(tol=tol, axes=axes, **inputs)
+            raise TypeError(
+                f"{self.name!r}: batched() on a class-based solver "
+                f"goes through its solve_batched() method")
+        if tol is not None:
+            raise TypeError(
+                "tol is a loop-program knob; this is a dataflow "
+                "program")
+        kinds = self._impl.ir.io.input_kinds
+        unknown = sorted(set(inputs) - set(kinds))
+        if unknown:
+            raise ValueError(
+                f"{self.name!r}: unknown inputs {unknown}; declared: "
+                f"{sorted(kinds)}")
+        in_axes = {n: (0 if kinds[n] == "vector" else None)
+                   for n in kinds}
+        if axes:
+            unknown = sorted(set(axes) - set(in_axes))
+            if unknown:
+                raise ValueError(
+                    f"{self.name!r}: axes for unknown inputs {unknown}")
+            in_axes.update(axes)
+        key = tuple(sorted(in_axes.items()))
+        fn = self._batched_fns.get(key)
+        if fn is None:
+            raw_fn = self._impl.ir.fn
+            fn = jax.jit(jax.vmap(raw_fn, in_axes=(dict(in_axes),)))
+            self._batched_fns[key] = fn
+        return Results(fn(inputs))
+
+    # -- analysis --------------------------------------------------------
+
+    def cost_report(self, shapes: Mapping) -> CostReport:
+        """Roofline-model cost from the registry cost models. `shapes`
+        maps public input / operand names to shape tuples (ints are
+        one-element vector shapes; scalars may be omitted)."""
+        if self.kind == "dataflow":
+            rows, savings, _ = _program_cost(self._impl.ir, shapes)
+            flops = sum(r[2] for r in rows)
+            nbytes = sum(r[3] for r in rows)
+            return CostReport(program=self.name, mode=self.mode,
+                              kind="dataflow", rows=tuple(rows),
+                              flops=flops, bytes_naive=nbytes,
+                              fused_savings=savings)
+        if not isinstance(self._impl, LoopProgram):
+            raise TypeError(
+                f"{self.name!r}: cost_report needs a spec-described "
+                f"program; class-based solvers carry no registry cost "
+                f"model")
+        lir = self._impl.lir
+        env = {}
+        for oname, okind in lir.lspec.operands.items():
+            if okind == "scalar":
+                env[oname] = ()
+            else:
+                if oname not in shapes:
+                    raise ValueError(
+                        f"cost_report: missing shape for operand "
+                        f"{oname!r} (a {okind})")
+                env[oname] = _norm_shape(shapes[oname])
+
+        def walk(stages, scope):
+            rows, savings = [], 0
+            for cs in stages:
+                if cs.is_let:
+                    for n, _ in cs.stage.bindings:
+                        env[n] = ()
+                    continue
+                inner = {pub: env[src] for pub, src in cs.inputs.items()}
+                r, s, outs = _program_cost(
+                    cs.ir, inner, scope=f"{scope}{cs.ir.spec.name}.")
+                rows.extend(r)
+                savings += s
+                for pub, dst in cs.outputs.items():
+                    env[dst] = outs[pub]
+            return rows, savings
+
+        setup_rows, _ = walk(lir.setup, "setup:")
+        # state fields adopt their init value's shape (bare names) or
+        # are scalars (composite expressions)
+        for f in lir.lspec.state:
+            bare = f.init.bare_name
+            env[f.name] = env[bare] if bare is not None else ()
+        body_rows, body_savings = walk(lir.body, "body:")
+        flops = sum(r[2] for r in body_rows)
+        nbytes = sum(r[3] for r in body_rows)
+        return CostReport(program=self.name, mode=self.mode,
+                          kind="loop",
+                          rows=tuple(setup_rows + body_rows),
+                          flops=flops, bytes_naive=nbytes,
+                          fused_savings=body_savings)
+
+    # -- persistence -----------------------------------------------------
+
+    def save(self, path) -> pathlib.Path:
+        """Write the canonical spec JSON. `blas.load(path)` (or any
+        pre-existing entrypoint — it is a plain spec file) compiles it
+        back."""
+        if self._raw is None:
+            raise ValueError(
+                f"{self.name!r} wraps a class-based solver with no "
+                f"canonical JSON form")
+        path = pathlib.Path(path)
+        # insertion order is semantic for `let` stages (bindings are
+        # evaluated in order), so keys are written as-is, not sorted
+        path.write_text(json.dumps(self._raw, indent=2) + "\n")
+        return path
+
+
+# ---------------------------------------------------------------------------
+# compile / load
+# ---------------------------------------------------------------------------
+
+
+def _to_raw(obj) -> Mapping:
+    # only the parsed-spec branches are local; everything else (dict /
+    # JSON string / path / to_spec-protocol builders) normalizes
+    # through the same helper the lowering layer uses, so anything
+    # that lowers also compiles here
+    if isinstance(obj, ProgramSpec):
+        return spec_mod.unparse(obj)
+    if isinstance(obj, LoopSpec):
+        return spec_mod.unparse_loop(obj)
+    try:
+        return lowering._canonical_raw(obj)
+    except SpecError:
+        raise SpecError(
+            f"compile() needs a spec dict, JSON string, path, "
+            f"ProgramBuilder, or parsed spec; got "
+            f"{type(obj).__name__}") from None
+
+
+def compile(spec_or_builder, *, mode: str = "dataflow",
+            fuse: Optional[bool] = None,
+            interpret: Optional[bool] = None,
+            max_iters: Optional[int] = None) -> Executable:
+    """The one front door: lower anything spec-shaped to an Executable.
+
+    Dataflow specs go through the digest-keyed program cache
+    (`core.lowering.compile_cached`); loop specs (an `iterate`
+    section) lower to a generic LoopProgram whose stage programs hit
+    the same cache. `fuse` and `max_iters` apply to the respective
+    kind only."""
+    raw = _to_raw(spec_or_builder)
+    # the handle keeps its own copy: later caller-side mutation of the
+    # spec dict must not make save()/spec/builder() disagree with the
+    # already-compiled program
+    raw = copy.deepcopy(raw)
+    if spec_mod.is_loop_spec(raw):
+        if fuse is not None:
+            raise ValueError(
+                "fuse applies to dataflow programs; loop-program "
+                "stages fuse according to the mode")
+        impl = LoopProgram(raw, mode=mode, max_iters=max_iters,
+                           interpret=interpret)
+        return Executable(impl=impl, raw=raw, kind="loop", mode=mode,
+                          interpret=interpret)
+    if max_iters is not None:
+        raise ValueError(
+            "max_iters applies to loop programs; this spec has no "
+            "iterate section")
+    ir = lowering.compile_cached(raw, mode=mode, fuse=fuse,
+                                 interpret=interpret)
+    return Executable(impl=Program.from_ir(ir), raw=raw,
+                      kind="dataflow", mode=mode, interpret=interpret)
+
+
+def load(path, **compile_kwargs) -> Executable:
+    """Compile a spec JSON file saved by `Executable.save` (or written
+    by hand — it is the ordinary spec format)."""
+    return compile(pathlib.Path(path), **compile_kwargs)

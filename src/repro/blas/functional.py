@@ -1,0 +1,146 @@
+"""SciPy-style routine function layer: one callable per registry
+routine, auto-generated from `core.routines` metadata.
+
+    from repro import blas
+    beta = blas.dot(x, y)
+    z = blas.axpy(0.5, x, y)
+    out = blas.gemv(alpha, beta, A, x, y)
+
+Argument order is derived from the registry signature: scalar
+('stream') parameters first in declaration order, then window
+(vector/matrix) ports in declaration order — `axpy(alpha, x, y)`,
+`gemv(alpha, beta, A, x, y)` — with keyword-only `mode` / `interpret`
+/ `dtype` knobs. Single-output routines return the array; multi-output
+routines (`rot`) return a tuple in port order.
+
+Each function is backed by a digest-cached single-routine spec, so
+repeated calls lower/compile once per (dtype, mode, interpret)
+configuration and per-call dispatch is a dict lookup + the program
+call itself (measured by `benchmarks/api_overhead.py`).
+
+Because functions are generated from `core.routines.names()` at import
+time, registering a new routine makes it appear in `repro.blas` for
+free.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Dict
+
+from repro.core import lowering, routines as R
+from repro.core.spec import _DTYPES
+
+_KIND_WORD = {R.VEC: "vector", R.MAT: "matrix"}
+
+
+def routine_spec(name: str, dtype: str = "float32") -> dict:
+    """The canonical single-routine spec behind `blas.<name>`: every
+    scalar is a public input stream, every port keeps its own name."""
+    rdef = R.get(name)
+    entry = {
+        "blas": name,
+        "name": name,
+        "inputs": {p: p for p in rdef.inputs},
+        "outputs": {p: p for p in rdef.outputs},
+    }
+    if rdef.scalars:
+        entry["scalars"] = {s: {"input": s} for s in rdef.scalars}
+    return {"name": name, "dtype": dtype, "routines": [entry]}
+
+
+def make_routine_fn(name: str) -> Callable:
+    """Build the public function for one registry routine."""
+    rdef = R.get(name)
+    arg_names = list(rdef.scalars) + list(rdef.inputs)
+    out_ports = list(rdef.outputs)
+
+    params = [inspect.Parameter(a, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+              for a in arg_names]
+    params += [
+        inspect.Parameter("mode", inspect.Parameter.KEYWORD_ONLY,
+                          default="dataflow"),
+        inspect.Parameter("interpret", inspect.Parameter.KEYWORD_ONLY,
+                          default=None),
+        inspect.Parameter("dtype", inspect.Parameter.KEYWORD_ONLY,
+                          default="float32"),
+    ]
+    sig = inspect.Signature(params)
+
+    # compiled-program cache: the digest-keyed lowering cache already
+    # dedupes across the process, but hashing the spec dict per call is
+    # exactly the dispatch cost this layer promises to avoid — so the
+    # jitted program is memoized here per configuration.
+    compiled: Dict[tuple, object] = {}
+
+    def fn(*args, **kwargs):
+        bound = sig.bind(*args, **kwargs)
+        bound.apply_defaults()
+        a = bound.arguments
+        mode = a.pop("mode")
+        interpret = a.pop("interpret")
+        dtype = a.pop("dtype")
+        key = (mode, interpret, dtype)
+        run = compiled.get(key)
+        if run is None:
+            if dtype not in _DTYPES:
+                raise ValueError(
+                    f"blas.{name}: unsupported dtype {dtype!r}; "
+                    f"expected one of {sorted(_DTYPES)}")
+            import jax
+            ir = lowering.compile_cached(routine_spec(name, dtype),
+                                         mode=mode, interpret=interpret)
+            run = jax.jit(ir.fn)
+            compiled[key] = run
+        out = run(dict(a))
+        if len(out_ports) == 1:
+            return out[out_ports[0]]
+        return tuple(out[p] for p in out_ports)
+
+    ports = ", ".join(f"{p}: {_KIND_WORD[k]}"
+                      for p, k in rdef.inputs.items())
+    scalars = ", ".join(rdef.scalars) or "none"
+    outs = ", ".join(out_ports)
+    fn.__name__ = name
+    fn.__qualname__ = f"blas.{name}"
+    fn.__signature__ = sig
+    fn.__doc__ = (
+        f"BLAS level-{rdef.level} routine ``{name}`` "
+        f"(registry-generated).\n\n"
+        f"Scalars: {scalars}. Windows: {ports}. Returns: {outs}.\n"
+        f"Keyword-only: mode='dataflow'|'nodataflow'|'reference', "
+        f"interpret, dtype.\n\n"
+        f"Backed by a digest-cached single-routine spec — repeated "
+        f"calls compile once per (dtype, mode, interpret).")
+    return fn
+
+
+def build_namespace() -> Dict[str, Callable]:
+    """All routine functions, keyed by routine name."""
+    return {name: make_routine_fn(name) for name in R.names()}
+
+
+def api_table() -> str:
+    """Human-readable registry-derived API table (the --list CLI)."""
+    rows = [("routine", "level", "class", "signature", "returns")]
+    for name in R.names():
+        rdef = R.get(name)
+        if rdef.eltwise:
+            klass = "eltwise"
+        elif rdef.index_reduction:
+            klass = "index-reduction"
+        elif rdef.reduction:
+            klass = "reduction"
+        else:
+            klass = f"level-{rdef.level} kernel"
+        args = ", ".join(list(rdef.scalars) + list(rdef.inputs))
+        rows.append((name, str(rdef.level), klass,
+                     f"blas.{name}({args})",
+                     ", ".join(rdef.outputs)))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    lines = []
+    for i, r in enumerate(rows):
+        lines.append("  ".join(c.ljust(w) for c, w in zip(r, widths))
+                     .rstrip())
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)

@@ -1,0 +1,100 @@
+"""Solver convenience functions, reimplemented on the unified
+`blas.compile` -> `Executable` path.
+
+`cg` and `jacobi` execute the pure-JSON loop specs (`solvers.specs
+.CG_LOOP` / `JACOBI_LOOP`) through `compile()`; `bicgstab` and
+`power_iteration` wrap the class-based SolverPrograms (their logic —
+the ‖s‖ early exit, the Rayleigh-quotient metric — is beyond the loop
+grammar) behind the same Executable handle. All return the standard
+`SolverResult`.
+
+Executables are memoized per (solver, mode, interpret, max_iters), so
+repeated calls reuse the jitted while-loop instead of re-tracing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.solvers import iterative, specs
+from repro.solvers.driver import SolverResult
+
+from .executable import Executable, compile as _compile
+
+_EXECUTABLES: dict = {}
+
+
+def _loop_executable(name: str, raw, mode: str,
+                     interpret: Optional[bool],
+                     max_iters: Optional[int]) -> Executable:
+    key = ("loop", name, mode, interpret, max_iters)
+    exe = _EXECUTABLES.get(key)
+    if exe is None:
+        exe = _compile(raw, mode=mode, interpret=interpret,
+                       max_iters=max_iters)
+        _EXECUTABLES[key] = exe
+    return exe
+
+
+def _solver_executable(name: str, factory, mode: str,
+                       interpret: Optional[bool],
+                       max_iters: int) -> Executable:
+    key = ("class", name, mode, interpret, max_iters)
+    exe = _EXECUTABLES.get(key)
+    if exe is None:
+        exe = Executable.from_solver(
+            factory(mode=mode, interpret=interpret,
+                    max_iters=max_iters))
+        _EXECUTABLES[key] = exe
+    return exe
+
+
+def cg(A, b, x0=None, *, tol: float = 1e-6, max_iters: int = 500,
+       mode: str = "dataflow",
+       interpret: Optional[bool] = None) -> SolverResult:
+    """Conjugate gradient for SPD systems — the `specs.CG_LOOP` JSON
+    loop program on the unified Executable path."""
+    exe = _loop_executable("cg", specs.CG_LOOP, mode, interpret,
+                           max_iters)
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    return exe.run(A=A, b=b, x0=x0, tol=tol)
+
+
+def jacobi(A, b, x0=None, *, tol: float = 1e-6, max_iters: int = 1000,
+           omega: float = 1.0, richardson: bool = False,
+           mode: str = "dataflow",
+           interpret: Optional[bool] = None) -> SolverResult:
+    """Weighted Jacobi / Richardson — the `specs.JACOBI_LOOP` JSON
+    loop program; D⁻¹ rides along as a data operand."""
+    exe = _loop_executable("jacobi", specs.JACOBI_LOOP, mode,
+                           interpret, max_iters)
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    dinv = (jnp.ones_like(b) if richardson
+            else iterative.jacobi_dinv(A, b.dtype))
+    return exe.run(A=A, b=b, x0=x0, dinv=dinv,
+                   omega=jnp.float32(omega), tol=tol)
+
+
+def bicgstab(A, b, x0=None, *, tol: float = 1e-6, max_iters: int = 500,
+             mode: str = "dataflow",
+             interpret: Optional[bool] = None) -> SolverResult:
+    """Stabilized bi-CG for general square systems — the class-based
+    SolverProgram (‖s‖ early exit under lax.cond) wrapped as an
+    Executable."""
+    exe = _solver_executable("bicgstab", iterative.BiCGStab, mode,
+                             interpret, max_iters)
+    return exe.run(A=A, b=b, x0=x0, tol=tol)
+
+
+def power_iteration(A, v0=None, *, tol: float = 1e-6,
+                    max_iters: int = 1000, mode: str = "dataflow",
+                    interpret: Optional[bool] = None) -> SolverResult:
+    """Dominant eigenpair via power iteration, wrapped as an
+    Executable. The eigenvalue is `result.aux["eigenvalue"]`."""
+    exe = _solver_executable("power_iteration",
+                             iterative.PowerIteration, mode,
+                             interpret, max_iters)
+    return exe.run(A=A, v0=v0, tol=tol)

@@ -7,4 +7,5 @@ reference. Distributed ("multi-AIE") routines live in .distributed.
 from . import codegen, distributed, expr, fusion, graph  # noqa: F401
 from . import lowering, placement, routines, spec  # noqa: F401
 from .runtime import (AXPY_SPEC, AXPYDOT_SPEC, GEMV_SPEC, Program,  # noqa
-                      axpy_program, axpydot_program, gemv_program)
+                      Results, axpy_program, axpydot_program,
+                      gemv_program)

@@ -33,6 +33,20 @@ def _synth_matrix(m, n, dtype, seed):
     return (jnp.sin(i * 1e-4 + seed) * 0.1).astype(dtype)
 
 
+class Results(dict):
+    """Program results: a plain mapping of public output name -> array
+    with single-output sugar, so one-output programs don't force users
+    through `out["my_dot.out"]`."""
+
+    def one(self) -> jax.Array:
+        """The single output value; raises if the program has more."""
+        if len(self) != 1:
+            raise ValueError(
+                f"one() needs a single-output program; this one "
+                f"produced {sorted(self)} — index the result instead")
+        return next(iter(self.values()))
+
+
 @dataclasses.dataclass
 class Program:
     """A compiled AIEBLAS-TPU program."""
@@ -85,8 +99,8 @@ class Program:
 
     # -- execution --------------------------------------------------------
 
-    def __call__(self, **inputs) -> Dict[str, jax.Array]:
-        return self._fn(inputs)
+    def __call__(self, **inputs) -> Results:
+        return Results(self._fn(inputs))
 
     def jitted(self):
         fn = self._fn
@@ -94,7 +108,7 @@ class Program:
         @jax.jit
         def run(inputs):
             return fn(inputs)
-        return lambda **inputs: run(inputs)
+        return lambda **inputs: Results(run(inputs))
 
     def synthetic_inputs(self, sizes: Mapping[str, tuple],
                          seed: float = 0.0) -> Dict[str, jax.Array]:

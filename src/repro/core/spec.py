@@ -229,6 +229,105 @@ def parse(spec: Union[str, Mapping, pathlib.Path]) -> ProgramSpec:
 
 
 # ---------------------------------------------------------------------------
+# Unparse: parsed spec -> canonical raw JSON (spec -> builder path)
+# ---------------------------------------------------------------------------
+#
+# `unparse` is the inverse of `parse` up to canonicalization: defaulted
+# scalars, window sizes, and dtype become explicit, scalar literals are
+# always `{"value": v}` mappings, and single-target connections stay
+# strings. `parse(unparse(s))` reproduces `s` exactly; the raw dict is
+# what `repro.blas.ProgramBuilder.from_spec` reconstructs its state
+# from when handed a parsed spec instead of raw JSON.
+
+
+def dtype_name(dtype) -> str:
+    """The JSON name of a spec dtype (inverse of the parse mapping)."""
+    for name, dt in _DTYPES.items():
+        if dt == dtype:
+            return name
+    raise SpecError(f"unknown spec dtype {dtype!r}")
+
+
+def _unparse_scalar(binding: ScalarBinding):
+    if binding.kind == "value":
+        return {"value": binding.value}
+    return {"input": binding.input_name}
+
+
+def unparse(spec: ProgramSpec) -> dict:
+    """Serialize a parsed ProgramSpec back to a raw JSON-able dict."""
+    routines = []
+    for r in spec.routines:
+        raw = {"blas": r.blas, "name": r.name}
+        if r.scalars:
+            raw["scalars"] = {s: _unparse_scalar(b)
+                              for s, b in r.scalars.items()}
+        if r.connections:
+            raw["connections"] = {
+                port: (targets[0] if len(targets) == 1
+                       else list(targets))
+                for port, targets in r.connections.items()}
+        if r.input_aliases:
+            raw["inputs"] = dict(r.input_aliases)
+        if r.output_aliases:
+            raw["outputs"] = dict(r.output_aliases)
+        if r.window_size != spec.window_size:
+            raw["window_size"] = r.window_size
+        if r.vector_width != spec.vector_width:
+            raw["vector_width"] = r.vector_width
+        if r.placement:
+            raw["placement"] = {k: list(v)
+                                for k, v in r.placement.items()}
+        routines.append(raw)
+    return {
+        "name": spec.name,
+        "dtype": dtype_name(spec.dtype),
+        "window_size": spec.window_size,
+        "vector_width": spec.vector_width,
+        "routines": routines,
+    }
+
+
+def _unparse_stage(stage) -> dict:
+    if isinstance(stage, LetStage):
+        return {"let": {n: e.src for n, e in stage.bindings}}
+    raw = {"program": dict(stage.raw_program)}
+    if stage.inputs:
+        raw["inputs"] = dict(stage.inputs)
+    if stage.outputs:
+        raw["outputs"] = dict(stage.outputs)
+    return raw
+
+
+def unparse_loop(lspec: "LoopSpec") -> dict:
+    """Serialize a parsed LoopSpec back to a raw JSON-able dict."""
+    raw = {
+        "name": lspec.name,
+        "dtype": dtype_name(lspec.dtype),
+        "operands": dict(lspec.operands),
+    }
+    if lspec.setup:
+        raw["setup"] = [_unparse_stage(s) for s in lspec.setup]
+    state = {}
+    for f in lspec.state:
+        field = {"init": f.init.src}
+        if f.kind is not None:
+            field["kind"] = f.kind
+        state[f.name] = field
+    stop = {"metric": lspec.stop.metric, "init": lspec.stop.init_metric,
+            "scale": lspec.stop.scale, "rtol": lspec.stop.rtol,
+            "max_iters": lspec.stop.max_iters}
+    raw["iterate"] = {
+        "state": state,
+        "body": [_unparse_stage(s) for s in lspec.body],
+        "feedback": dict(lspec.feedback),
+        "while": stop,
+        "solution": dict(lspec.solution),
+    }
+    return raw
+
+
+# ---------------------------------------------------------------------------
 # Loop specs: JSON-described iteration ("iterate" section)
 # ---------------------------------------------------------------------------
 

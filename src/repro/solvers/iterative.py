@@ -19,18 +19,20 @@ Two coexisting styles on the same while-loop driver:
                     Rayleigh-quotient metric).
 
   cg_from_spec / jacobi_from_spec — functional wrappers over the JSON
-  path, mirroring cg / jacobi.
+  path, mirroring cg / jacobi. These are now deprecation shims over
+  `repro.blas.cg` / `repro.blas.jacobi`, which run the identical loop
+  specs through the unified `blas.compile` -> Executable front door.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import specs
-from .driver import (LoopProgram, SolverProgram, SolverResult, _sdiv,
-                     _TINY)
+from .driver import SolverProgram, SolverResult, _sdiv, _TINY
 
 
 class _LinearSolver(SolverProgram):
@@ -262,12 +264,16 @@ def cg(A, b, x0=None, *, tol=1e-6, max_iters=500, mode="dataflow",
 def cg_from_spec(A, b, x0=None, *, tol=1e-6, max_iters=500,
                  mode="dataflow",
                  interpret: Optional[bool] = None) -> SolverResult:
-    """CG run entirely from the `specs.CG_LOOP` JSON description."""
-    lp = LoopProgram(specs.CG_LOOP, mode=mode, max_iters=max_iters,
-                     interpret=interpret)
-    if x0 is None:
-        x0 = jnp.zeros_like(b)
-    return lp.solve(A=A, b=b, x0=x0, tol=tol)
+    """CG run entirely from the `specs.CG_LOOP` JSON description.
+
+    Deprecated shim: `repro.blas.cg` is the same loop spec on the
+    unified Executable path (and memoizes the compiled loop)."""
+    warnings.warn(
+        "repro.solvers.cg_from_spec is deprecated; use repro.blas.cg",
+        DeprecationWarning, stacklevel=2)
+    from repro import blas
+    return blas.cg(A, b, x0, tol=tol, max_iters=max_iters, mode=mode,
+                   interpret=interpret)
 
 
 def bicgstab(A, b, x0=None, *, tol=1e-6, max_iters=500, mode="dataflow",
@@ -288,15 +294,17 @@ def jacobi_from_spec(A, b, x0=None, *, tol=1e-6, max_iters=1000,
                      omega=1.0, richardson=False, mode="dataflow",
                      interpret: Optional[bool] = None) -> SolverResult:
     """Jacobi/Richardson run entirely from the `specs.JACOBI_LOOP`
-    JSON description; D⁻¹ is passed as a data operand."""
-    lp = LoopProgram(specs.JACOBI_LOOP, mode=mode, max_iters=max_iters,
-                     interpret=interpret)
-    if x0 is None:
-        x0 = jnp.zeros_like(b)
-    dinv = (jnp.ones_like(b) if richardson
-            else jacobi_dinv(A, b.dtype))
-    return lp.solve(A=A, b=b, x0=x0, dinv=dinv,
-                    omega=jnp.float32(omega), tol=tol)
+    JSON description; D⁻¹ is passed as a data operand.
+
+    Deprecated shim: `repro.blas.jacobi` is the same loop spec on the
+    unified Executable path (and memoizes the compiled loop)."""
+    warnings.warn(
+        "repro.solvers.jacobi_from_spec is deprecated; use "
+        "repro.blas.jacobi", DeprecationWarning, stacklevel=2)
+    from repro import blas
+    return blas.jacobi(A, b, x0, tol=tol, max_iters=max_iters,
+                       omega=omega, richardson=richardson, mode=mode,
+                       interpret=interpret)
 
 
 def power_iteration(A, v0=None, *, tol=1e-6, max_iters=1000,

@@ -1,0 +1,381 @@
+"""The `repro.blas` front door: registry-generated routine functions,
+the unified compile() -> Executable handle over both program kinds,
+result ergonomics, persistence, the CLI, and the deprecation shims."""
+import json
+import pathlib
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import blas
+from repro.core import routines as R, runtime
+from repro.core.runtime import Results
+from repro.kernels import ref
+from repro.solvers import specs
+from repro.solvers.driver import SolverResult
+
+SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+
+def _spd(n, seed=0):
+    k = jax.random.PRNGKey(seed)
+    m = jax.random.normal(k, (n, n), jnp.float32)
+    return m @ m.T / n + jnp.eye(n, dtype=jnp.float32)
+
+
+def _rhs(n, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,),
+                             jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Function layer
+# ---------------------------------------------------------------------------
+
+
+def test_every_registry_routine_is_a_blas_callable():
+    for name in R.names():
+        fn = getattr(blas, name)
+        assert callable(fn), name
+        assert name in blas.__all__
+    assert blas.routines() == list(R.names())
+
+
+def test_function_layer_matches_references():
+    n = 384
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (n,), jnp.float32)
+    y = jax.random.normal(k2, (n,), jnp.float32)
+    np.testing.assert_allclose(blas.dot(x, y), ref.dot(x, y),
+                               rtol=1e-4)
+    np.testing.assert_allclose(blas.axpy(0.5, x, y),
+                               ref.axpy(jnp.float32(0.5), x, y),
+                               rtol=1e-5)
+    np.testing.assert_allclose(blas.nrm2(x), ref.nrm2(x), rtol=1e-4)
+    A = jax.random.normal(jax.random.PRNGKey(3), (64, 128), jnp.float32)
+    xv = jax.random.normal(jax.random.PRNGKey(4), (128,), jnp.float32)
+    yv = jax.random.normal(jax.random.PRNGKey(5), (64,), jnp.float32)
+    np.testing.assert_allclose(
+        blas.gemv(1.5, 0.5, A, xv, yv),
+        ref.gemv(jnp.float32(1.5), A, xv, jnp.float32(0.5), yv),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_multi_output_routine_returns_port_ordered_tuple():
+    x = jnp.arange(8.0)
+    y = jnp.ones(8)
+    out_x, out_y = blas.rot(0.6, 0.8, x, y)
+    np.testing.assert_allclose(out_x, 0.6 * x + 0.8 * y, rtol=1e-6)
+    np.testing.assert_allclose(out_y, 0.6 * y - 0.8 * x, rtol=1e-6)
+
+
+def test_function_layer_compiles_once_per_configuration():
+    from repro.core import lowering
+    x = jnp.arange(16.0)
+    y = jnp.ones(16)
+    blas.asum(x)                      # warm the memos
+    blas.axpy(2.0, x, y)
+    before = lowering.cache_stats()
+    for _ in range(5):
+        blas.asum(x)
+        blas.axpy(2.0, x, y)
+    after = lowering.cache_stats()
+    # repeated calls never consult the digest cache, let alone miss it
+    assert after["misses"] == before["misses"]
+    assert after["hits"] == before["hits"]
+
+
+def test_function_layer_keyword_args_and_modes():
+    x = jnp.arange(32.0)
+    y = jnp.ones(32)
+    df = blas.waxpby(alpha=2.0, beta=3.0, x=x, y=y)
+    nodf = blas.waxpby(2.0, 3.0, x, y, mode="nodataflow")
+    ref_ = blas.waxpby(2.0, 3.0, x, y, mode="reference")
+    np.testing.assert_allclose(df, nodf, rtol=1e-6)
+    np.testing.assert_allclose(df, ref_, rtol=1e-6)
+
+
+def test_signatures_are_registry_derived():
+    import inspect
+    sig = inspect.signature(blas.gemv)
+    assert list(sig.parameters)[:5] == ["alpha", "beta", "A", "x", "y"]
+    assert sig.parameters["mode"].kind is inspect.Parameter.KEYWORD_ONLY
+
+
+# ---------------------------------------------------------------------------
+# compile() -> Executable, both kinds
+# ---------------------------------------------------------------------------
+
+
+def test_compile_dataflow_spec_runs_and_unwraps():
+    exe = blas.compile(runtime.AXPYDOT_SPEC)
+    assert exe.kind == "dataflow"
+    n = 256
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    w, v, u = (jax.random.normal(k, (n,), jnp.float32)
+               for k in (k1, k2, k3))
+    out = exe.run(neg_alpha=-0.7, v=v, w=w, u=u)
+    assert isinstance(out, Results)
+    np.testing.assert_allclose(out.one(), out["beta"])
+    np.testing.assert_allclose(exe.one(neg_alpha=-0.7, v=v, w=w, u=u),
+                               ref.axpydot(jnp.float32(0.7), w, v, u),
+                               rtol=1e-4, atol=1e-3)
+    assert "FUSED" in exe.describe()
+
+
+def test_compile_loop_spec_runs_and_converges():
+    n = 96
+    A, b = _spd(n), _rhs(n)
+    exe = blas.compile(specs.CG_LOOP, max_iters=300)
+    assert exe.kind == "loop"
+    res = exe.run(A=A, b=b, x0=jnp.zeros_like(b), tol=1e-6)
+    assert isinstance(res, SolverResult)
+    assert bool(res.converged)
+    np.testing.assert_allclose(exe.one(A=A, b=b, x0=jnp.zeros_like(b)),
+                               res.x, rtol=1e-5, atol=1e-6)
+    assert exe.input_names == ["A", "b", "x0"]
+    assert exe.output_names == ["x"]
+
+
+def test_compile_accepts_json_string_and_shares_the_cache():
+    exe1 = blas.compile(runtime.AXPY_SPEC)
+    exe2 = blas.compile(json.dumps(runtime.AXPY_SPEC))
+    assert exe1._impl.ir is exe2._impl.ir     # digest-keyed cache hit
+
+
+def test_one_raises_on_multi_output_program():
+    exe = blas.compile(specs.CG_MATVEC)
+    n = 32
+    A = _spd(n)
+    p = _rhs(n)
+    with pytest.raises(ValueError, match="single-output"):
+        exe.run(A=A, p=p).one()
+
+
+def test_results_one_on_plain_program_call():
+    prog = runtime.Program.from_spec(specs.NRM2)
+    out = prog(x=jnp.arange(64.0))
+    assert isinstance(out, Results)
+    np.testing.assert_allclose(out.one(), out["norm"])
+
+
+def test_executable_batched_dataflow():
+    exe = blas.compile(runtime.AXPY_SPEC)
+    x = jnp.arange(24.0).reshape(4, 6)
+    y = jnp.ones((4, 6))
+    out = exe.batched(alpha=0.5, x=x, y=y, axes={"alpha": None})
+    assert out["out"].shape == (4, 6)
+    np.testing.assert_allclose(out["out"], 0.5 * x + y, rtol=1e-6)
+    with pytest.raises(ValueError, match="unknown inputs"):
+        exe.batched(alpha=0.5, x=x, y=y, nope=x)
+
+
+def test_executable_batched_loop_multi_rhs():
+    n, nrhs = 64, 3
+    A = _spd(n)
+    B = jax.random.normal(jax.random.PRNGKey(7), (nrhs, n), jnp.float32)
+    exe = blas.compile(specs.CG_LOOP, max_iters=300)
+    res = exe.batched(A=A, b=B, x0=jnp.zeros_like(B), tol=1e-6)
+    assert res.x.shape == (nrhs, n)
+    assert bool(jnp.all(res.converged))
+
+
+def test_save_load_roundtrip(tmp_path):
+    n = 64
+    A, b = _spd(n), _rhs(n)
+    exe = blas.compile(specs.CG_LOOP, max_iters=300)
+    path = exe.save(tmp_path / "cg.json")
+    exe2 = blas.load(path, max_iters=300)
+    r1 = exe.run(A=A, b=b, x0=jnp.zeros_like(b))
+    r2 = exe2.run(A=A, b=b, x0=jnp.zeros_like(b))
+    assert int(r1.iterations) == int(r2.iterations)
+    np.testing.assert_allclose(r1.x, r2.x, rtol=1e-6)
+    # saved artifact is a plain spec: pre-existing entrypoints read it
+    from repro.solvers import LoopProgram
+    lp = LoopProgram(json.loads(path.read_text()), max_iters=300)
+    r3 = lp.solve(A=A, b=b, x0=jnp.zeros_like(b))
+    assert int(r3.iterations) == int(r1.iterations)
+
+
+def test_save_preserves_let_binding_order(tmp_path):
+    exe = blas.compile(specs.CG_LOOP, max_iters=5)
+    raw = json.loads(exe.save(tmp_path / "cg.json").read_text())
+    lets = [s["let"] for s in raw["iterate"]["body"] if "let" in s]
+    assert list(lets[0]) == ["alpha", "neg_alpha"]
+    assert list(lets[1]) == ["rz_next", "beta"]
+
+
+def test_cost_report_dataflow_counts_fusion_savings():
+    exe = blas.compile(runtime.AXPYDOT_SPEC)
+    n = 4096
+    rep = exe.cost_report({"v": n, "w": n, "u": n})
+    # axpy: 2n flops, dot: 2n flops
+    assert rep.flops == 4 * n
+    # the fused on-chip edge saves one write + one read of z
+    assert rep.fused_savings == 2 * n * 4
+    assert rep.bytes == rep.bytes_naive - rep.fused_savings
+    assert rep.bound in ("compute", "memory")
+    assert "kept on-chip by fusion" in str(rep)
+
+
+def test_cost_report_loop_per_iteration():
+    exe = blas.compile(specs.CG_LOOP, max_iters=5)
+    n = 1024
+    rep = exe.cost_report({"A": (n, n), "b": n, "x0": n})
+    # per-iteration flops are dominated by the gemv matvec (2 n^2)
+    assert rep.flops > 2 * n * n
+    assert any(label.startswith("body:") for label, *_ in rep.rows)
+    assert any(label.startswith("setup:") for label, *_ in rep.rows)
+    with pytest.raises(ValueError, match="missing shape"):
+        exe.cost_report({"A": (n, n)})
+
+
+def test_executable_spec_is_isolated_from_caller_mutation(tmp_path):
+    spec = json.loads(json.dumps(runtime.AXPY_SPEC))
+    exe = blas.compile(spec)
+    spec["routines"][0]["scalars"]["alpha"] = {"value": 99.0}
+    assert exe.spec["routines"][0]["scalars"]["alpha"] == \
+        {"input": "alpha"}
+    saved = json.loads(exe.save(tmp_path / "axpy.json").read_text())
+    assert saved["routines"][0]["scalars"]["alpha"] == \
+        {"input": "alpha"}
+
+
+def test_executables_of_same_spec_share_one_jitted_program():
+    exe1 = blas.compile(runtime.AXPY_SPEC)
+    exe2 = blas.compile(runtime.AXPY_SPEC)
+    x = jnp.arange(16.0)
+    exe1.run(alpha=1.0, x=x, y=x)
+    exe2.run(alpha=2.0, x=x, y=x)
+    assert exe1._jit_run is exe2._jit_run
+
+
+def test_compile_rejects_mismatched_knobs():
+    with pytest.raises(ValueError, match="loop program"):
+        blas.compile(runtime.AXPY_SPEC, max_iters=5)
+    with pytest.raises(ValueError, match="fuse"):
+        blas.compile(specs.CG_LOOP, fuse=True)
+
+
+# ---------------------------------------------------------------------------
+# Solver convenience functions on the unified path
+# ---------------------------------------------------------------------------
+
+
+def test_blas_cg_matches_class_solver():
+    from repro.solvers import CG
+    n = 128
+    A, b = _spd(n), _rhs(n)
+    got = blas.cg(A, b, tol=1e-7, max_iters=300)
+    want = CG(max_iters=300).solve(A, b, tol=1e-7)
+    assert int(got.iterations) == int(want.iterations)
+    np.testing.assert_allclose(got.x, want.x, rtol=1e-5, atol=1e-6)
+
+
+def test_blas_bicgstab_and_power_iteration():
+    n = 96
+    k = jax.random.PRNGKey(3)
+    A = jax.random.normal(k, (n, n), jnp.float32) / jnp.sqrt(n) \
+        + 3.0 * jnp.eye(n)
+    b = _rhs(n)
+    res = blas.bicgstab(A, b, tol=1e-7, max_iters=300)
+    assert bool(res.converged)
+    spd = _spd(n)
+    eig = blas.power_iteration(spd, tol=1e-9, max_iters=2000)
+    np.testing.assert_allclose(eig.aux["eigenvalue"],
+                               jnp.linalg.eigvalsh(spd)[-1], rtol=1e-4)
+
+
+def test_blas_jacobi_converges():
+    n = 96
+    A = _spd(n)
+    A = A + 2.0 * jnp.diag(jnp.sum(jnp.abs(A), axis=1))
+    b = _rhs(n)
+    res = blas.jacobi(A, b, tol=1e-6, max_iters=500)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_solver_executables_are_memoized():
+    n = 48
+    A, b = _spd(n), _rhs(n)
+    from repro.blas import solvers as bs
+    bs._EXECUTABLES.clear()
+    blas.cg(A, b, max_iters=200)
+    size = len(bs._EXECUTABLES)
+    blas.cg(A, b, max_iters=200)
+    assert len(bs._EXECUTABLES) == size
+
+
+# ---------------------------------------------------------------------------
+# Back-compat: every pre-existing entrypoint still works
+# ---------------------------------------------------------------------------
+
+
+def test_old_entrypoints_still_work():
+    n = 64
+    A, b = _spd(n), _rhs(n)
+    prog = runtime.Program.from_spec(runtime.AXPY_SPEC)
+    out = prog(alpha=1.0, x=b, y=b)
+    assert out["out"].shape == (n,)
+    from repro.solvers import LoopProgram, cg
+    res = cg(A, b, tol=1e-6, max_iters=300)
+    assert bool(res.converged)
+    lp = LoopProgram(specs.CG_LOOP, max_iters=300)
+    res2 = lp.solve(A=A, b=b, x0=jnp.zeros_like(b))
+    assert bool(res2.converged)
+
+
+def test_from_spec_shims_warn_and_delegate():
+    n = 64
+    A, b = _spd(n), _rhs(n)
+    from repro.solvers import cg_from_spec, jacobi_from_spec
+    with pytest.warns(DeprecationWarning, match="repro.blas.cg"):
+        res = cg_from_spec(A, b, tol=1e-6, max_iters=300)
+    assert bool(res.converged)
+    want = blas.cg(A, b, tol=1e-6, max_iters=300)
+    assert int(res.iterations) == int(want.iterations)
+    Ad = A + 2.0 * jnp.diag(jnp.sum(jnp.abs(A), axis=1))
+    with pytest.warns(DeprecationWarning, match="repro.blas.jacobi"):
+        res = jacobi_from_spec(Ad, b, tol=1e-6, max_iters=500)
+    assert bool(res.converged)
+
+
+def test_import_repro_exposes_blas_lazily():
+    import os
+    code = ("import repro, sys; "
+            "assert 'repro.blas' not in sys.modules; "
+            "repro.blas.dot; "
+            "assert 'repro.blas' in sys.modules")
+    subprocess.run([sys.executable, "-c", code], check=True,
+                   env=dict(os.environ, PYTHONPATH=SRC))
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_list_prints_registry_table():
+    from repro.blas.__main__ import main
+    assert main(["--list"]) == 0
+    out = blas.api_table()
+    for name in R.names():
+        assert f"blas.{name}(" in out
+
+
+def test_cli_spec_roundtrips_through_compile(capsys):
+    from repro.blas.__main__ import main
+    assert main(["--spec", "dot"]) == 0
+    raw = json.loads(capsys.readouterr().out)
+    exe = blas.compile(raw)
+    x = jnp.arange(16.0)
+    np.testing.assert_allclose(exe.one(x=x, y=x),
+                               jnp.sum(x * x), rtol=1e-5)
+    assert main(["--spec", "nosuch"]) == 2

@@ -1,0 +1,278 @@
+"""ProgramBuilder: digest-lossless spec round-trips for every shipped
+spec, fluent construction (dataflow AND loop), and builder-misuse
+error messages."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import blas
+from repro.core import lowering, runtime, spec as spec_mod
+from repro.solvers import specs
+
+# every shipped spec: the runtime's canned programs plus every
+# UPPER_CASE spec dict in solvers.specs (dataflow bodies + loop specs)
+SHIPPED = {
+    "AXPYDOT_SPEC": runtime.AXPYDOT_SPEC,
+    "AXPY_SPEC": runtime.AXPY_SPEC,
+    "GEMV_SPEC": runtime.GEMV_SPEC,
+}
+SHIPPED.update({n: getattr(specs, n) for n in dir(specs)
+                if n.isupper() and isinstance(getattr(specs, n), dict)})
+
+
+# ---------------------------------------------------------------------------
+# Round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SHIPPED))
+def test_roundtrip_digest_identical(name):
+    raw = SHIPPED[name]
+    rt = blas.ProgramBuilder.from_spec(raw).to_spec()
+    assert lowering.spec_digest(rt) == lowering.spec_digest(raw)
+
+
+@pytest.mark.parametrize("name", sorted(SHIPPED))
+def test_double_roundtrip_stable(name):
+    raw = SHIPPED[name]
+    once = blas.ProgramBuilder.from_spec(raw).to_spec()
+    twice = blas.ProgramBuilder.from_spec(once).to_spec()
+    assert lowering.spec_digest(twice) == lowering.spec_digest(raw)
+
+
+def test_roundtrip_does_not_alias_the_original():
+    b = blas.ProgramBuilder.from_spec(specs.CG_UPDATE)
+    rt = b.to_spec()
+    rt["routines"][0]["name"] = "mutated"
+    assert specs.CG_UPDATE["routines"][0]["name"] == "xup"
+    assert b.to_spec()["routines"][0]["name"] == "xup"
+
+
+def test_unparse_reparse_fixpoint():
+    """spec.unparse is parse's inverse up to canonicalization: the
+    canonical form re-parses to an identical canonical form."""
+    for raw in (runtime.AXPYDOT_SPEC, specs.BICG_XRUPDATE,
+                specs.RESIDUAL):
+        ps = spec_mod.parse(raw)
+        canon = spec_mod.unparse(ps)
+        assert spec_mod.unparse(spec_mod.parse(canon)) == canon
+
+
+def test_unparse_loop_reparse_fixpoint():
+    for raw in (specs.CG_LOOP, specs.JACOBI_LOOP):
+        ls = spec_mod.parse_loop(raw)
+        canon = spec_mod.unparse_loop(ls)
+        assert spec_mod.unparse_loop(spec_mod.parse_loop(canon)) == canon
+
+
+def test_from_spec_accepts_parsed_specs():
+    ps = spec_mod.parse(specs.CG_MATVEC)
+    b = blas.ProgramBuilder.from_spec(ps)
+    exe = blas.compile(b)
+    assert sorted(exe.output_names) == ["pq", "q"]
+    ls = spec_mod.parse_loop(specs.CG_LOOP)
+    bl = blas.ProgramBuilder.from_spec(ls)
+    assert bl.is_loop
+    assert spec_mod.is_loop_spec(bl.to_spec())
+
+
+# ---------------------------------------------------------------------------
+# Fluent dataflow construction
+# ---------------------------------------------------------------------------
+
+
+def test_fluent_axpydot_matches_canned_program():
+    b = blas.program("axpydot")
+    z = b.axpy(name="zcalc", alpha=b.input("neg_alpha"), x="v", y="w")
+    b.dot(name="zdot", x=z, y="u", out="beta")
+    exe = blas.compile(b)
+
+    n = 512
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    w, v, u = (jax.random.normal(k, (n,), jnp.float32)
+               for k in (k1, k2, k3))
+    got = exe.one(neg_alpha=-0.7, v=v, w=w, u=u)
+    want = runtime.axpydot_program()(neg_alpha=-0.7, v=v, w=w,
+                                     u=u)["beta"]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # same routine names + wiring -> same fusion plan
+    assert [g.nodes for g in exe._impl.groups] == [["zcalc", "zdot"]]
+
+
+def test_fluent_fanout_builds_connection_list():
+    b = blas.program("fan")
+    t = b.gemv(name="mv", alpha=1.0, beta=0.0, A="A", x="s", y="s")
+    b.dot(name="tt", x=t, y=t)
+    b.dot(name="ts", x=t, y="s")
+    raw = b.to_spec()
+    conns = raw["routines"][0]["connections"]["out"]
+    assert conns == ["tt.x", "tt.y", "ts.x"]
+    exe = blas.compile(b)
+    # mv.out is consumed on-chip and unaliased, so it is not public
+    assert sorted(exe.output_names) == ["ts.out", "tt.out"]
+
+
+def test_fluent_scalar_literal_and_multi_output():
+    b = blas.program("rots")
+    outs = b.rot(c=0.6, s=0.8, x="x", y="y",
+                 out={"out_x": "xr", "out_y": "yr"})
+    assert sorted(outs) == ["out_x", "out_y"]
+    exe = blas.compile(b)
+    x = jnp.arange(8.0)
+    y = jnp.ones(8)
+    res = exe.run(x=x, y=y)
+    np.testing.assert_allclose(res["xr"], 0.6 * x + 0.8 * y, rtol=1e-6)
+    np.testing.assert_allclose(res["yr"], 0.6 * y - 0.8 * x, rtol=1e-6)
+
+
+def test_fluent_loop_program_runs():
+    b = blas.program("jac", dtype="float32")
+    b.operand("A", "matrix").operand("b", "vector")
+    b.operand("x0", "vector").operand("dinv", "vector")
+    b.operand("omega", "scalar")
+    b.setup(specs.NRM2, inputs={"x": "b"}, outputs={"norm": "bnorm"})
+    b.setup(specs.RESIDUAL, inputs={"x": "x0"},
+            outputs={"r": "r0", "rnorm": "rnorm0"})
+    b.iterate(
+        state={"x": "x0", "r": "r0"},
+        body=[blas.stage(specs.JACOBI_UPDATE),
+              blas.stage(specs.RESIDUAL, inputs={"x": "x_next"},
+                         outputs={"r": "r_next", "rnorm": "rnorm"})],
+        feedback={"x": "x_next", "r": "r_next"},
+        stop={"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
+              "rtol": 1e-6, "max_iters": 1000},
+        solution={"x": "x"})
+    # fluent loop builder == the shipped JACOBI_LOOP up to its name
+    raw = b.to_spec()
+    ref = dict(specs.JACOBI_LOOP, name="jac")
+    assert lowering.spec_digest(raw) == lowering.spec_digest(ref)
+
+    n = 48
+    k = jax.random.PRNGKey(0)
+    m = jax.random.normal(k, (n, n), jnp.float32)
+    A = m @ m.T / n + jnp.eye(n)
+    A = A + 2.0 * jnp.diag(jnp.sum(jnp.abs(A), axis=1))
+    rhs = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    from repro.solvers.iterative import jacobi_dinv
+    res = blas.compile(b).run(A=A, b=rhs, x0=jnp.zeros_like(rhs),
+                              dinv=jacobi_dinv(A),
+                              omega=jnp.float32(1.0))
+    assert bool(res.converged)
+
+
+def test_let_preserves_binding_order():
+    st = blas.let(rz_next="rnorm * rnorm", beta="rz_next / rz")
+    assert list(st["let"]) == ["rz_next", "beta"]
+
+
+def test_builder_digest_matches_lowering_digest():
+    b = blas.ProgramBuilder.from_spec(specs.RESIDUAL)
+    assert b.digest() == lowering.spec_digest(specs.RESIDUAL)
+    # the lowering layer accepts the builder itself (to_spec protocol)
+    assert lowering.spec_digest(b) == b.digest()
+    ir = lowering.compile_cached(b)
+    assert ir is lowering.compile_cached(specs.RESIDUAL)
+
+
+# ---------------------------------------------------------------------------
+# Builder misuse: error messages
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_routine_is_attribute_error_naming_registry():
+    b = blas.program("p")
+    with pytest.raises(AttributeError, match="frobnicate"):
+        b.frobnicate(x="x")
+    with pytest.raises(blas.BuilderError, match="unknown BLAS routine"):
+        b.add("frobnicate", x="x")
+
+
+def test_unknown_port_names_the_valid_ones():
+    b = blas.program("p")
+    with pytest.raises(blas.BuilderError, match=r"no port or scalar 'w'"):
+        b.dot(w="u")
+    with pytest.raises(blas.BuilderError, match=r"inputs: \['x', 'y'\]"):
+        b.dot(w="u")
+
+
+def test_duplicate_routine_name_rejected_at_call_time():
+    b = blas.program("p")
+    b.axpy(name="up", alpha=1.0, x="x", y="y")
+    with pytest.raises(blas.BuilderError, match="duplicate routine name"):
+        b.axpy(name="up", alpha=1.0, x="x", y="y")
+
+
+def test_dangling_port_from_other_builder_rejected():
+    b1 = blas.program("p1")
+    z = b1.axpy(alpha=1.0, x="x", y="y")
+    b2 = blas.program("p2")
+    with pytest.raises(blas.BuilderError, match="different builder"):
+        b2.dot(x=z, y="u")
+
+
+def test_scalar_cannot_take_a_port():
+    b = blas.program("p")
+    d = b.dot(x="x", y="y")
+    with pytest.raises(blas.BuilderError, match="scalar stream"):
+        b.axpy(alpha=d, x="x", y="y")
+
+
+def test_out_alias_on_multi_output_needs_a_dict():
+    b = blas.program("p")
+    with pytest.raises(blas.BuilderError, match="single-output"):
+        b.rot(c=1.0, s=0.0, x="x", y="y", out="rotated")
+
+
+def test_mixing_dataflow_and_loop_construction_rejected():
+    b = blas.program("p")
+    b.axpy(alpha=1.0, x="x", y="y")
+    with pytest.raises(blas.BuilderError, match="dataflow builder"):
+        b.operand("A", "matrix")
+    b2 = blas.program("q")
+    b2.operand("A", "matrix")
+    with pytest.raises(blas.BuilderError, match="loop builder"):
+        b2.axpy(alpha=1.0, x="x", y="y")
+
+
+def test_loop_builder_without_iterate_fails_to_serialize():
+    b = blas.program("q")
+    b.operand("A", "matrix")
+    with pytest.raises(blas.BuilderError, match="no iterate"):
+        b.to_spec()
+
+
+def test_failed_add_leaves_builder_unchanged():
+    b = blas.program("p")
+    z = b.axpy(alpha=1.0, x="v", y="w")
+    before = b.to_spec()
+    with pytest.raises(blas.BuilderError):
+        b.dot(x=z, y="u", out={"bogus": "beta"})
+    assert b.to_spec() == before       # no dangling connection
+    b.dot(x=z, y="u", out="beta")      # retry now succeeds...
+    exe = blas.compile(b)              # ...and compiles cleanly
+    assert exe.output_names == ["beta"]
+
+
+def test_roundtrip_preserves_unknown_toplevel_keys():
+    raw = {"name": "annotated", "comment": "kept verbatim",
+           "routines": [{"blas": "dot", "name": "d0"}]}
+    rt = blas.ProgramBuilder.from_spec(raw).to_spec()
+    assert rt["comment"] == "kept verbatim"
+    assert lowering.spec_digest(rt) == lowering.spec_digest(raw)
+
+
+def test_loop_builder_rejects_dataflow_knobs_early():
+    b = blas.program("loopy", window_size=512)
+    with pytest.raises(blas.BuilderError, match="window_size"):
+        b.operand("A", "matrix")
+
+
+def test_build_validates_through_the_spec_layer():
+    b = blas.program("p")
+    b.axpy(alpha=1.0, x="x", y="y")
+    spec = b.build()
+    assert isinstance(spec, spec_mod.ProgramSpec)
+    empty = blas.program("nothing")
+    with pytest.raises(spec_mod.SpecError, match="no routines"):
+        empty.build()
