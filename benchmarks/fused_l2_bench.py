@@ -1,0 +1,244 @@
+"""Level-2 anchored fusion benchmark: HBM bytes + wall clock, fused
+(dataflow) vs unfused (nodataflow), persisted as BENCH_fused_l2.json.
+
+Two benchmark families:
+
+* **chains** — the canonical anchored shapes (`symv -> dot`,
+  `gemv -> axpy -> nrm2`) as standalone programs;
+* **loop bodies** — the CG and Jacobi iteration bodies from
+  `solvers.specs`, whose stage programs pick up anchored groups for
+  free.
+
+For each entry we record the *modeled* per-call (or per-iteration)
+HBM bytes from `Executable.cost_report` — total and the avoidable
+vector-handoff share (`vector_bytes`; the matrix stream is identical
+in both schedules, see docs/spec.md) — in BOTH conventions the report
+carries: `vector_reduction` counts handoff round-trips kept on-chip
+(write + read per internal edge), `vector_reduction_exact` counts
+only bytes physically not moved (a public intermediate still pays its
+one write). Interpret-mode wall clock rides along where the size is
+tractable. The modeled numbers are the stable regression surface:
+this script **exits non-zero** when fused byte modeling regresses to
+(or above) the unfused baseline, or when the CG body's
+vector-traffic round-trip reduction drops below the 25% gate, so
+CI's bench-smoke job doubles as the perf-trajectory guard.
+
+`--json out.json` persists the results (the committed
+BENCH_fused_l2.json at the repo root is this script's full-size
+output); `--smoke` runs tiny sizes for CI.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.blas as blas
+from repro.solvers import specs
+
+DEFAULT_SIZES = (256, 1024, 4096)
+SMOKE_SIZES = (64, 128)
+CG_VECTOR_REDUCTION_MIN = 0.25
+# wall-clock timing in interpret mode is python-speed; skip huge grids
+MAX_TIMED_N = 1024
+
+SYMV_DOT = {
+    "name": "symv_dot",
+    "routines": [
+        {"blas": "symv", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "x", "y": "x"},
+         "connections": {"out": "d.x"}},
+        {"blas": "dot", "name": "d", "inputs": {"y": "x"},
+         "outputs": {"out": "q"}},
+    ],
+}
+
+GEMV_AXPY_NRM2 = {
+    "name": "gemv_axpy_nrm2",
+    "routines": [
+        {"blas": "gemv", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "p", "y": "y0"},
+         "connections": {"out": "up.x"}, "outputs": {"out": "q"}},
+        {"blas": "axpy", "name": "up",
+         "scalars": {"alpha": {"input": "neg_alpha"}},
+         "inputs": {"y": "r"},
+         "connections": {"out": "rn.x"}, "outputs": {"out": "r_next"}},
+        {"blas": "nrm2", "name": "rn", "outputs": {"out": "rnorm"}},
+    ],
+}
+
+
+def _sym(n, seed=0):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (n, n), jnp.float32)
+    return (a + a.T) / 2
+
+
+def _vec(n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+
+
+def _chain_inputs(name, n):
+    if name == "symv_dot":
+        return {"A": _sym(n, 0), "x": _vec(n, 1)}
+    return {"A": jax.random.normal(jax.random.PRNGKey(2), (n, n),
+                                   jnp.float32),
+            "p": _vec(n, 3), "r": _vec(n, 4),
+            "y0": jnp.zeros(n, jnp.float32), "neg_alpha": -0.5}
+
+
+def _chain_shapes(name, n):
+    if name == "symv_dot":
+        return {"A": (n, n), "x": n}
+    return {"A": (n, n), "p": n, "r": n, "y0": n}
+
+
+def _time_call(exe, inputs, iters=3):
+    out = exe.run(**inputs)
+    jax.block_until_ready(list(out.values()))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = exe.run(**inputs)
+    jax.block_until_ready(list(out.values()))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _cost_entry(name, kind, n, reports, times=None):
+    fused, unfused = reports["dataflow"], reports["nodataflow"]
+    entry = {
+        "name": name, "kind": kind, "n": n,
+        "bytes_fused": int(fused.bytes),
+        "bytes_unfused": int(unfused.bytes),
+        "bytes_reduction": (1.0 - fused.bytes / unfused.bytes
+                            if unfused.bytes else 0.0),
+        # physical view: public intermediates still pay their write
+        "bytes_fused_exact": int(fused.bytes_exact),
+        "vector_bytes_fused": int(fused.vector_bytes),
+        "vector_bytes_unfused": int(unfused.vector_bytes),
+        "vector_reduction": float(fused.vector_reduction),
+        "vector_reduction_exact": float(fused.vector_reduction_exact),
+        "matrix_bytes": int(fused.matrix_bytes),
+    }
+    if times is not None:
+        entry["us_fused"] = times["dataflow"]
+        entry["us_unfused"] = times["nodataflow"]
+        entry["wallclock_speedup"] = (times["nodataflow"]
+                                      / max(times["dataflow"], 1e-9))
+    return entry
+
+
+def bench_chain(name, spec, n, *, timed=True):
+    reports, times = {}, {}
+    for mode in ("dataflow", "nodataflow"):
+        exe = blas.compile(spec, mode=mode)
+        reports[mode] = exe.cost_report(_chain_shapes(name, n))
+        if timed and n <= MAX_TIMED_N:
+            times[mode] = _time_call(exe, _chain_inputs(name, n))
+    return _cost_entry(name, "chain", n, reports,
+                       times if times else None)
+
+
+def bench_loop_body(name, loop_spec, n):
+    """Per-iteration modeled bytes for a loop spec's body, fused vs
+    unfused. Window shapes come from the spec's declared operands, so
+    any loop spec works (solver_bench reuses this for its
+    modeled-bytes section)."""
+    shapes = {op: ((n, n) if kind == "matrix" else n)
+              for op, kind in loop_spec["operands"].items()
+              if kind != "scalar"}
+    reports = {mode: blas.compile(loop_spec,
+                                  mode=mode).cost_report(shapes)
+               for mode in ("dataflow", "nodataflow")}
+    return _cost_entry(name, "loop_body", n, reports)
+
+
+def check_gates(entries):
+    """The perf-trajectory gates. Returns a list of violations."""
+    bad = []
+    for e in entries:
+        if e["bytes_fused"] >= e["bytes_unfused"]:
+            bad.append(
+                f"{e['name']} n={e['n']}: fused bytes "
+                f"{e['bytes_fused']:,} >= unfused "
+                f"{e['bytes_unfused']:,}")
+        if e["name"] == "cg_body" and \
+                e["vector_reduction"] < CG_VECTOR_REDUCTION_MIN:
+            bad.append(
+                f"cg_body n={e['n']}: vector-traffic reduction "
+                f"{e['vector_reduction']:.3f} < "
+                f"{CG_VECTOR_REDUCTION_MIN}")
+    return bad
+
+
+def main(sizes=DEFAULT_SIZES, json_path=None, timed=True):
+    entries = []
+    cols = ("name,kind,n,bytes_fused,bytes_unfused,"
+            "vector_reduction,us_fused,us_unfused")
+    print(cols)
+    for n in sizes:
+        rows = [
+            bench_chain("symv_dot", SYMV_DOT, n, timed=timed),
+            bench_chain("gemv_axpy_nrm2", GEMV_AXPY_NRM2, n,
+                        timed=timed),
+            bench_loop_body("cg_body", specs.CG_LOOP, n),
+            bench_loop_body("jacobi_body", specs.JACOBI_LOOP, n),
+        ]
+        for e in rows:
+            uf = e.get("us_fused")
+            uu = e.get("us_unfused")
+            print(f"{e['name']},{e['kind']},{e['n']},"
+                  f"{e['bytes_fused']},{e['bytes_unfused']},"
+                  f"{e['vector_reduction']:.3f},"
+                  f"{'' if uf is None else f'{uf:.1f}'},"
+                  f"{'' if uu is None else f'{uu:.1f}'}")
+        entries.extend(rows)
+
+    violations = check_gates(entries)
+    result = {
+        "bench": "fused_l2",
+        "backend": jax.default_backend(),
+        "gates": {
+            "cg_vector_reduction_min": CG_VECTOR_REDUCTION_MIN,
+            "pass": not violations,
+            "violations": violations,
+        },
+        "entries": entries,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path}")
+    if violations:
+        print("PERF GATE FAILED:", file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print(f"# gates OK (cg vector-traffic reduction >= "
+          f"{CG_VECTOR_REDUCTION_MIN:.0%} at every size)")
+    return 0
+
+
+__all__ = ["main", "bench_chain", "bench_loop_body", "check_gates"]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=list(DEFAULT_SIZES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI drift + perf-gate check)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="persist results (BENCH_fused_l2.json)")
+    ap.add_argument("--no-time", action="store_true",
+                    help="skip wall-clock timing (model-only run)")
+    args = ap.parse_args()
+    sizes = SMOKE_SIZES if args.smoke else tuple(args.sizes)
+    sys.exit(main(sizes=sizes, json_path=args.json,
+                  timed=not args.no_time))

@@ -14,10 +14,17 @@ not hardware numbers — the interesting figure is the relative cost of
 fused vs per-routine iteration bodies, the same comparison as the
 paper's w/DF vs w/o-DF bars.
 
+A second section reports the *modeled* per-iteration HBM bytes of the
+JSON loop-spec bodies (registry cost models via
+`Executable.cost_report`), fused vs unfused — the level-2 anchored
+fusion groups show up here as per-iteration byte savings.
+
 `--smoke` runs tiny sizes with few iterations — the CI drift check.
+`--json out.json` persists all rows (the BENCH_solvers.json artifact).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -26,6 +33,11 @@ import jax.numpy as jnp
 from repro.solvers import (CG, BiCGStab, Jacobi, LoopProgram,
                            PowerIteration, specs)
 from repro.solvers.iterative import jacobi_dinv
+
+try:                              # under benchmarks/run.py
+    from benchmarks import fused_l2_bench
+except ImportError:               # run directly as a script
+    import fused_l2_bench
 
 DEFAULT_SIZES = (256, 1024, 4096)
 SMOKE_SIZES = (64, 128)
@@ -112,20 +124,63 @@ def bench_one(name, make_solver, make_A, make_ops, n, max_iters):
     return rows, (name, n, speedup)
 
 
-def main(sizes=DEFAULT_SIZES, max_iters=20):
+def modeled_bytes_rows(sizes):
+    """Per-iteration modeled HBM bytes for the JSON loop-spec bodies,
+    fused (dataflow, incl. level-2 anchored groups) vs unfused —
+    delegated to fused_l2_bench so the numbers in BENCH_solvers.json
+    and BENCH_fused_l2.json come from one implementation."""
+    rows = []
+    for name, loop_spec in (("cg_spec", specs.CG_LOOP),
+                            ("jacobi_spec", specs.JACOBI_LOOP)):
+        for n in sizes:
+            e = fused_l2_bench.bench_loop_body(name, loop_spec, n)
+            rows.append({
+                "solver": name, "n": n,
+                "bytes_per_iter_fused": e["bytes_fused"],
+                "bytes_per_iter_unfused": e["bytes_unfused"],
+                "vector_reduction": e["vector_reduction"],
+            })
+    return rows
+
+
+def main(sizes=DEFAULT_SIZES, max_iters=20, json_path=None):
     print("solver,mode,n,iters,us_per_iter")
-    speedups = []
+    timing_rows, speedups = [], []
     for name, make_solver, make_A, make_ops in CONFIGS:
         for n in sizes:
             rows, sp = bench_one(name, make_solver, make_A, make_ops,
                                  n, max_iters)
             for rname, mode, nn, iters, us in rows:
                 print(f"{rname},{mode},{nn},{iters},{us:.1f}")
+                timing_rows.append({"solver": rname, "mode": mode,
+                                    "n": nn, "iters": iters,
+                                    "us_per_iter": us})
             speedups.append(sp)
     print()
     print("solver,n,df_speedup")
     for name, n, sp in speedups:
         print(f"{name},{n},{sp:.2f}")
+    print()
+    print("solver,n,bytes_per_iter_fused,bytes_per_iter_unfused,"
+          "vector_reduction")
+    byte_rows = modeled_bytes_rows(sizes)
+    for r in byte_rows:
+        print(f"{r['solver']},{r['n']},{r['bytes_per_iter_fused']},"
+              f"{r['bytes_per_iter_unfused']},"
+              f"{r['vector_reduction']:.3f}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({
+                "bench": "solvers",
+                "backend": jax.default_backend(),
+                "timing": timing_rows,
+                "df_speedups": [
+                    {"solver": s, "n": n, "df_speedup": sp}
+                    for s, n, sp in speedups],
+                "modeled_bytes_per_iter": byte_rows,
+            }, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_path}")
     return speedups
 
 
@@ -138,8 +193,11 @@ if __name__ == "__main__":
     ap.add_argument("--max-iters", type=int, default=20)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes + few iterations (CI drift check)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="persist results (BENCH_solvers.json artifact)")
     args = ap.parse_args()
     if args.smoke:
-        main(sizes=SMOKE_SIZES, max_iters=5)
+        main(sizes=SMOKE_SIZES, max_iters=5, json_path=args.json)
     else:
-        main(sizes=tuple(args.sizes), max_iters=args.max_iters)
+        main(sizes=tuple(args.sizes), max_iters=args.max_iters,
+             json_path=args.json)

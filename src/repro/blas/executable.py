@@ -83,7 +83,12 @@ def _out_shape(rdef, blas: str, kind: str, sh: Mapping) -> tuple:
 
 def _program_cost(ir, shapes: Mapping, scope: str = ""):
     """Per-routine (flops, bytes) rows for one lowered program, plus
-    fused-group HBM savings and public-output shapes."""
+    fused-group HBM savings, matrix-operand bytes, and public-output
+    shapes. `matrix_bytes` is the part of the naive traffic owed to
+    MAT-kind operands — identical in fused and unfused schedules (the
+    matrix is streamed once either way), so reports can separate it
+    from the vector handoff traffic that fusion actually removes."""
+    from repro.core import routines as R
     port_shape = {}
     for pi in ir.io.inputs:
         if pi.kind == "scalar":
@@ -95,34 +100,64 @@ def _program_cost(ir, shapes: Mapping, scope: str = ""):
         port_shape[(pi.routine, pi.port)] = _norm_shape(shapes[pi.name])
 
     dtype_bytes = np.dtype(ir.spec.dtype).itemsize
-    rows, out_port_shape = [], {}
+    rows, out_port_shape, matrix_bytes = [], {}, 0
     for name in ir.graph.order:
         r = ir.graph.nodes[name]
         rdef = r.rdef
         sh = {port: port_shape[(name, port)] for port in rdef.inputs}
         flops, nbytes = rdef.cost(sh) if rdef.cost else (0, 0)
         rows.append((f"{scope}{name}", r.blas, int(flops), int(nbytes)))
+        vec_elems = sum(
+            int(np.prod(sh[p], dtype=np.int64))
+            for p, k in rdef.inputs.items() if k == R.VEC)
         for port, kind in rdef.outputs.items():
             oshape = _out_shape(rdef, r.blas, kind, sh)
             out_port_shape[(name, port)] = oshape
+            if kind == R.OUT_VEC:
+                vec_elems += int(np.prod(oshape, dtype=np.int64))
             for e in ir.graph.consumers_of(name, port):
                 port_shape[(e.dst, e.dst_port)] = oshape
+        # whatever the cost model charges beyond the vector windows is
+        # matrix traffic (symv charges half its matrix, gemm all of it)
+        matrix_bytes += max(0, int(nbytes) - vec_elems * dtype_bytes)
 
-    # on-chip edges inside a fused group never round-trip through HBM:
-    # one avoided write + one avoided read per intermediate element
-    savings = 0
+    # On-chip edges inside a fused group never round-trip through HBM.
+    # Two conventions, both reported:
+    #   savings       — one write + one read per internal edge (the
+    #                   handoff round-trip kept on-chip; the repo's
+    #                   established fused_savings metric)
+    #   savings_exact — physical bytes the fused kernel does not move:
+    #                   the read per internal consumer, plus the write
+    #                   ONLY when the source port is not also a
+    #                   program output / externally consumed (a public
+    #                   intermediate is still written once).
+    # Level-2 anchored groups are credited by the same rules — their
+    # internal edges are always vector handoffs (the matrix never
+    # crosses a group edge).
+    savings = savings_exact = 0
     for g in ir.groups or ():
         if not g.fused or len(g.nodes) < 2:
             continue
         members = set(g.nodes)
-        for e in ir.graph.edges:
-            if e.src in members and e.dst in members:
-                elems = int(np.prod(out_port_shape[(e.src, e.src_port)],
+        for name in g.nodes:
+            r = ir.graph.nodes[name]
+            for port in r.rdef.outputs:
+                consumers = ir.graph.consumers_of(name, port)
+                internal = [e for e in consumers if e.dst in members]
+                if not internal:
+                    continue
+                elems = int(np.prod(out_port_shape[(name, port)],
                                     dtype=np.int64))
-                savings += 2 * elems * dtype_bytes
+                port_bytes = elems * dtype_bytes
+                savings += 2 * port_bytes * len(internal)
+                savings_exact += port_bytes * len(internal)
+                external = [e for e in consumers
+                            if e.dst not in members]
+                if not external and port not in r.output_aliases:
+                    savings_exact += port_bytes
     out_shapes = {po.name: out_port_shape[(po.routine, po.port)]
                   for po in ir.io.outputs}
-    return rows, savings, out_shapes
+    return rows, (savings, savings_exact), matrix_bytes, out_shapes
 
 
 @dataclasses.dataclass
@@ -137,13 +172,58 @@ class CostReport:
     rows: tuple                     # (label, blas, flops, bytes)
     flops: int                      # per call / per iteration
     bytes_naive: int                # per-routine HBM traffic
-    fused_savings: int              # bytes kept on-chip by fusion
+    fused_savings: int              # handoff round-trips kept on-chip
+    matrix_bytes: int = 0           # MAT-operand share of bytes_naive
+    # physical bytes not moved: unlike fused_savings, a public
+    # intermediate's write (still issued once) is not credited
+    fused_savings_exact: int = 0
 
     @property
     def bytes(self) -> int:
         if self.mode == "dataflow":
             return self.bytes_naive - self.fused_savings
         return self.bytes_naive
+
+    @property
+    def vector_bytes_naive(self) -> int:
+        """The vector-handoff share of the naive traffic — the part
+        dataflow fusion can actually remove (the matrix stream is
+        identical in both schedules)."""
+        return self.bytes_naive - self.matrix_bytes
+
+    @property
+    def vector_bytes(self) -> int:
+        if self.mode == "dataflow":
+            return self.vector_bytes_naive - self.fused_savings
+        return self.vector_bytes_naive
+
+    @property
+    def bytes_exact(self) -> int:
+        """Physical traffic: naive minus only the bytes the fused
+        kernels genuinely do not move."""
+        if self.mode == "dataflow":
+            return self.bytes_naive - self.fused_savings_exact
+        return self.bytes_naive
+
+    @property
+    def vector_reduction(self) -> float:
+        """Fraction of the avoidable (vector) traffic whose handoff
+        round-trips fusion keeps on-chip in dataflow mode (the
+        fused_savings convention — see vector_reduction_exact for the
+        physical-bytes view)."""
+        if not self.vector_bytes_naive:
+            return 0.0
+        if self.mode != "dataflow":
+            return 0.0
+        return self.fused_savings / self.vector_bytes_naive
+
+    @property
+    def vector_reduction_exact(self) -> float:
+        """Fraction of the avoidable (vector) traffic physically not
+        moved — public intermediates still pay their one write."""
+        if not self.vector_bytes_naive or self.mode != "dataflow":
+            return 0.0
+        return self.fused_savings_exact / self.vector_bytes_naive
 
     @property
     def intensity(self) -> float:
@@ -172,7 +252,16 @@ class CostReport:
                          f"{flops:>12,} flop {nbytes:>12,} B")
         lines.append(
             f"  total: {self.flops:,} flop, {self.bytes:,} B HBM "
-            f"({self.fused_savings:,} B kept on-chip by fusion)")
+            f"({self.fused_savings:,} B of handoff round-trips kept "
+            f"on-chip by fusion; {self.fused_savings_exact:,} B "
+            f"physically not moved)")
+        lines.append(
+            f"  vector traffic: {self.vector_bytes:,} B of "
+            f"{self.vector_bytes_naive:,} B naive "
+            f"({100 * self.vector_reduction:.1f}% of round-trips "
+            f"fused away, {100 * self.vector_reduction_exact:.1f}% "
+            f"physical; matrix stream {self.matrix_bytes:,} B is "
+            f"schedule-invariant)")
         lines.append(
             f"  arithmetic intensity {self.intensity:.3f} flop/B -> "
             f"{self.bound}-bound "
@@ -344,13 +433,16 @@ class Executable:
         maps public input / operand names to shape tuples (ints are
         one-element vector shapes; scalars may be omitted)."""
         if self.kind == "dataflow":
-            rows, savings, _ = _program_cost(self._impl.ir, shapes)
+            rows, (savings, exact), mat_bytes, _ = _program_cost(
+                self._impl.ir, shapes)
             flops = sum(r[2] for r in rows)
             nbytes = sum(r[3] for r in rows)
             return CostReport(program=self.name, mode=self.mode,
                               kind="dataflow", rows=tuple(rows),
                               flops=flops, bytes_naive=nbytes,
-                              fused_savings=savings)
+                              fused_savings=savings,
+                              fused_savings_exact=exact,
+                              matrix_bytes=mat_bytes)
         if not isinstance(self._impl, LoopProgram):
             raise TypeError(
                 f"{self.name!r}: cost_report needs a spec-described "
@@ -369,35 +461,40 @@ class Executable:
                 env[oname] = _norm_shape(shapes[oname])
 
         def walk(stages, scope):
-            rows, savings = [], 0
+            rows, savings, exact, mat_bytes = [], 0, 0, 0
             for cs in stages:
                 if cs.is_let:
                     for n, _ in cs.stage.bindings:
                         env[n] = ()
                     continue
                 inner = {pub: env[src] for pub, src in cs.inputs.items()}
-                r, s, outs = _program_cost(
+                r, (s, se), mb, outs = _program_cost(
                     cs.ir, inner, scope=f"{scope}{cs.ir.spec.name}.")
                 rows.extend(r)
                 savings += s
+                exact += se
+                mat_bytes += mb
                 for pub, dst in cs.outputs.items():
                     env[dst] = outs[pub]
-            return rows, savings
+            return rows, savings, exact, mat_bytes
 
-        setup_rows, _ = walk(lir.setup, "setup:")
+        setup_rows, _, _, _ = walk(lir.setup, "setup:")
         # state fields adopt their init value's shape (bare names) or
         # are scalars (composite expressions)
         for f in lir.lspec.state:
             bare = f.init.bare_name
             env[f.name] = env[bare] if bare is not None else ()
-        body_rows, body_savings = walk(lir.body, "body:")
+        body_rows, body_savings, body_exact, body_mat = walk(
+            lir.body, "body:")
         flops = sum(r[2] for r in body_rows)
         nbytes = sum(r[3] for r in body_rows)
         return CostReport(program=self.name, mode=self.mode,
                           kind="loop",
                           rows=tuple(setup_rows + body_rows),
                           flops=flops, bytes_naive=nbytes,
-                          fused_savings=body_savings)
+                          fused_savings=body_savings,
+                          fused_savings_exact=body_exact,
+                          matrix_bytes=body_mat)
 
     # -- persistence -----------------------------------------------------
 
@@ -441,6 +538,7 @@ def _to_raw(obj) -> Mapping:
 
 def compile(spec_or_builder, *, mode: str = "dataflow",
             fuse: Optional[bool] = None,
+            anchor: Optional[bool] = None,
             interpret: Optional[bool] = None,
             max_iters: Optional[int] = None) -> Executable:
     """The one front door: lower anything spec-shaped to an Executable.
@@ -448,17 +546,18 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
     Dataflow specs go through the digest-keyed program cache
     (`core.lowering.compile_cached`); loop specs (an `iterate`
     section) lower to a generic LoopProgram whose stage programs hit
-    the same cache. `fuse` and `max_iters` apply to the respective
-    kind only."""
+    the same cache. `fuse`/`anchor` (level-2 anchored fusion, default
+    follows `fuse`) and `max_iters` apply to the respective kind
+    only."""
     raw = _to_raw(spec_or_builder)
     # the handle keeps its own copy: later caller-side mutation of the
     # spec dict must not make save()/spec/builder() disagree with the
     # already-compiled program
     raw = copy.deepcopy(raw)
     if spec_mod.is_loop_spec(raw):
-        if fuse is not None:
+        if fuse is not None or anchor is not None:
             raise ValueError(
-                "fuse applies to dataflow programs; loop-program "
+                "fuse/anchor apply to dataflow programs; loop-program "
                 "stages fuse according to the mode")
         impl = LoopProgram(raw, mode=mode, max_iters=max_iters,
                            interpret=interpret)
@@ -469,7 +568,7 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
             "max_iters applies to loop programs; this spec has no "
             "iterate section")
     ir = lowering.compile_cached(raw, mode=mode, fuse=fuse,
-                                 interpret=interpret)
+                                 anchor=anchor, interpret=interpret)
     return Executable(impl=Program.from_ir(ir), raw=raw,
                       kind="dataflow", mode=mode, interpret=interpret)
 

@@ -7,6 +7,20 @@ internal edges becoming VMEM/VREG values (never HBM). Standalone
 level-2/3 routines dispatch to their hand-tiled kernels in
 repro.kernels.
 
+Two generated-kernel shapes:
+
+* level-1 groups — one (block_rows, 128) window walk over the vectors
+  (`make_group_callable`);
+* level-2 **anchored** groups (`make_anchored_callable`) — the matrix
+  is streamed through VMEM in (bm, bn) row-block windows exactly like
+  the standalone `kernels.gemv`/`symv` tilings (whose block bodies are
+  reused verbatim), the anchor's output row block accumulates in a
+  VMEM scratch, and the absorbed level-1 routines run in-register on
+  that block: producers of the accumulator operand in the row phase
+  (j == 0), consumers in the finish phase (j == last), with
+  reductions accumulating across row blocks. The intermediate vector
+  never touches HBM.
+
 Three modes mirror the paper's evaluation matrix:
   dataflow     — fused groups, on-chip intermediates   ("w/ DF")
   nodataflow   — one kernel per routine, HBM handoffs  ("w/o DF")
@@ -15,15 +29,17 @@ Three modes mirror the paper's evaluation matrix:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.kernels import gemv as gemv_mod, ops, symv as symv_mod
 from repro.kernels.common import (LANES, as_2d, cdiv, default_interpret,
-                                  pad_to, pl, smem_scalar_spec)
+                                  pad_to, pl, pltpu, smem_scalar_spec)
 from repro.kernels.dot import iamax_block
+from repro.kernels.gemv import gemv_block
+from repro.kernels.symv import symv_block
 
 from . import routines as R
 from .fusion import FusionGroup
@@ -107,9 +123,84 @@ def _group_signature(graph: DataflowGraph, group: FusionGroup
     return GroupSignature(scalar_keys, vec_in, elt_out, red_out)
 
 
+def _splice_routine(graph, members, name, scal_env, env, *, idx_step):
+    """Run one member routine's emitter on the current block env and
+    propagate its value(s) along internal edges (the on-chip
+    handoff). `idx_step` is the sequential block position feeding an
+    index-carrying reduction's global offset."""
+    rdef = graph.nodes[name].rdef
+    s = {sn: scal_env[(name, sn)] for sn in rdef.scalars}
+    args = [env[(name, p)] for p in rdef.inputs]
+    if rdef.index_reduction:
+        vals = (iamax_block(args[0], idx_step),)
+    else:
+        val = rdef.emitter(s, *args)
+        vals = val if isinstance(val, tuple) else (val,)
+    assert len(vals) == len(rdef.outputs), rdef.name
+    for port, v in zip(rdef.outputs, vals):
+        for e in graph.consumers_of(name, port):
+            if e.dst in members:
+                env[(e.dst, e.dst_port)] = v
+        env[(name, port)] = v
+
+
+def _red_ref_map(sig, r_refs, is_idx):
+    """Map reduction output keys to their accumulator refs: an
+    (f32 max, int32 index) pair for index-carrying reductions, a
+    single f32 accumulator for plain sums."""
+    red_refs, cursor = {}, 0
+    for key in sig.red_out_keys:
+        if is_idx(key):
+            red_refs[key] = (r_refs[cursor], r_refs[cursor + 1])
+            cursor += 2
+        else:
+            red_refs[key] = (r_refs[cursor],)
+            cursor += 1
+    return red_refs
+
+
+def _red_out_specs(graph, sig, index_map):
+    """(out_specs, out_shapes) for a signature's reduction outputs:
+    index-carrying reductions accumulate into an (f32 max, int32
+    index) ref pair, plain sums keep one (1, 1) f32 accumulator."""
+    red_specs, red_shapes = [], []
+    for k in sig.red_out_keys:
+        if graph.nodes[k[0]].rdef.index_reduction:
+            red_specs += [pl.BlockSpec((1, 1), index_map)] * 2
+            red_shapes += [jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                           jax.ShapeDtypeStruct((1, 1), jnp.int32)]
+        else:
+            red_specs.append(pl.BlockSpec((1, 1), index_map))
+            red_shapes.append(
+                jax.ShapeDtypeStruct((1, 1), jnp.float32))
+    return red_specs, red_shapes
+
+
+def _collect_results(graph, sig, outs, length):
+    """Unpack a fused kernel's pallas outputs into a {(routine, port):
+    value} map: window outputs are un-padded back to `length`,
+    reductions get their `post` hook (nrm2's sqrt) applied, and
+    index-carrying reductions return the int32 index."""
+    results = {}
+    for key, o in zip(sig.elt_out_keys, outs[:len(sig.elt_out_keys)]):
+        results[key] = o.reshape(-1)[:length]
+    cursor = len(sig.elt_out_keys)
+    for key in sig.red_out_keys:
+        rdef = graph.nodes[key[0]].rdef
+        if rdef.index_reduction:
+            results[key] = outs[cursor + 1][0, 0]
+            cursor += 2
+            continue
+        val = outs[cursor][0, 0]
+        cursor += 1
+        post = rdef.post
+        results[key] = post(val) if post is not None else val
+    return results
+
+
 def _build_fused_kernel(graph: DataflowGraph, group: FusionGroup,
                         sig: GroupSignature, out_dtype):
-    """Generate the Pallas kernel body for a fused group."""
+    """Generate the Pallas kernel body for a level-1 fused group."""
     members = set(group.nodes)
     ns, nv = len(sig.scalar_keys), len(sig.vec_in_keys)
     ne = len(sig.elt_out_keys)
@@ -124,16 +215,7 @@ def _build_fused_kernel(graph: DataflowGraph, group: FusionGroup,
         r_refs = refs[ns + nv + ne:]
         step = pl.program_id(0)
 
-        # index-carrying reductions own an (f32 max, int32 index) ref
-        # pair; plain sums own a single f32 accumulator
-        red_refs, cursor = {}, 0
-        for key in sig.red_out_keys:
-            if _is_idx(key):
-                red_refs[key] = (r_refs[cursor], r_refs[cursor + 1])
-                cursor += 2
-            else:
-                red_refs[key] = (r_refs[cursor],)
-                cursor += 1
+        red_refs = _red_ref_map(sig, r_refs, _is_idx)
 
         if r_refs:
             @pl.when(step == 0)
@@ -154,22 +236,8 @@ def _build_fused_kernel(graph: DataflowGraph, group: FusionGroup,
                     for i, key in enumerate(sig.scalar_keys)}
 
         for name in group.nodes:   # topo order inside the group
-            rspec = graph.nodes[name]
-            rdef = rspec.rdef
-            s = {sn: scal_env[(name, sn)] for sn in rdef.scalars}
-            args = [env[(name, p)] for p in rdef.inputs]
-            if rdef.index_reduction:
-                vals = (iamax_block(args[0], step),)
-            else:
-                val = rdef.emitter(s, *args)
-                vals = val if isinstance(val, tuple) else (val,)
-            assert len(vals) == len(rdef.outputs), rdef.name
-            for port, v in zip(rdef.outputs, vals):
-                # propagate along internal edges (the on-chip handoff)
-                for e in graph.consumers_of(name, port):
-                    if e.dst in members:
-                        env[(e.dst, e.dst_port)] = v
-                env[(name, port)] = v
+            _splice_routine(graph, members, name, scal_env, env,
+                            idx_step=step)
 
         for key, ref_ in zip(sig.elt_out_keys, e_refs):
             ref_[...] = env[key].astype(out_dtype)
@@ -214,18 +282,8 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
         rows = v2ds[0].shape[0]
         grid = (cdiv(rows, br),)
         vec_spec = pl.BlockSpec((br, LANES), lambda i: (i, 0))
-        # index-carrying reductions accumulate into an (f32 max, int32
-        # index) ref pair; plain sum reductions keep one (1, 1) f32
-        red_specs, red_shapes = [], []
-        for k in sig.red_out_keys:
-            if graph.nodes[k[0]].rdef.index_reduction:
-                red_specs += [pl.BlockSpec((1, 1), lambda i: (0, 0))] * 2
-                red_shapes += [jax.ShapeDtypeStruct((1, 1), jnp.float32),
-                               jax.ShapeDtypeStruct((1, 1), jnp.int32)]
-            else:
-                red_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0)))
-                red_shapes.append(
-                    jax.ShapeDtypeStruct((1, 1), jnp.float32))
+        red_specs, red_shapes = _red_out_specs(graph, sig,
+                                               lambda i: (0, 0))
         out_shapes = (
             [jax.ShapeDtypeStruct((rows, LANES), dtype)
              for _ in sig.elt_out_keys]
@@ -240,22 +298,243 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
             interpret=interpret,
         )(*[jnp.reshape(scalars[k], (1,)).astype(jnp.float32)
             for k in sig.scalar_keys], *v2ds)
+        return _collect_results(graph, sig, outs, n)
 
-        results = {}
-        for key, o in zip(sig.elt_out_keys, outs[:len(sig.elt_out_keys)]):
-            results[key] = o.reshape(-1)[:n]
-        cursor = len(sig.elt_out_keys)
-        for key in sig.red_out_keys:
-            rdef = graph.nodes[key[0]].rdef
-            if rdef.index_reduction:
-                results[key] = outs[cursor + 1][0, 0]
-                cursor += 2
-                continue
-            val = outs[cursor][0, 0]
-            cursor += 1
-            post = rdef.post
-            results[key] = post(val) if post is not None else val
-        return results
+    run.signature = sig
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Level-2 anchored group kernel generation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AnchoredSignature:
+    """Operand layout of a level-2 anchored fused kernel. vec_in_keys
+    is the driver-facing set (it includes the matrix operand, so
+    emit_program's plumbing is identical to level-1 groups);
+    win_in_keys are the streamed *vector* operands in kernel order."""
+    anchor: str
+    scalar_keys: List[tuple]
+    vec_in_keys: List[tuple]        # all external ins, incl. the matrix
+    win_in_keys: List[tuple]        # vector ins only, kernel order
+    elt_out_keys: List[tuple]
+    red_out_keys: List[tuple]
+    mat_key: tuple                  # (anchor, A)
+    cols_key: tuple                 # (anchor, x): (bn, 1) windows over j
+    rows_key: tuple                 # (anchor, y): (bm, 1) windows over i
+    pre: Tuple[str, ...]            # members emitted in the row phase
+    post: Tuple[str, ...]           # members emitted in the finish phase
+
+
+def _anchored_signature(graph: DataflowGraph, group: FusionGroup
+                        ) -> AnchoredSignature:
+    base = _group_signature(graph, group)
+    anchor = group.anchor
+    ports = graph.nodes[anchor].rdef.anchor_ports
+    mat_key = (anchor, ports["mat"])
+    cols_key = (anchor, ports["cols"])
+    rows_key = (anchor, ports["rows"])
+    win_in = [k for k in base.vec_in_keys if k != mat_key]
+    # members feeding the anchor run in the row phase. Group convexity
+    # guarantees member-to-member paths stay inside the group, so a
+    # walk back over in-group producer edges finds exactly the
+    # anchor's in-group ancestors — no whole-graph sweep needed.
+    members = set(group.nodes)
+    pre_set, stack = set(), [anchor]
+    while stack:
+        node = stack.pop()
+        for port in graph.nodes[node].rdef.inputs:
+            e = graph.producer_of(node, port)
+            if e is not None and e.src in members and \
+                    e.src != anchor and e.src not in pre_set:
+                pre_set.add(e.src)
+                stack.append(e.src)
+    pre = tuple(m for m in group.nodes if m in pre_set)
+    post = tuple(m for m in group.nodes
+                 if m != anchor and m not in pre_set)
+    return AnchoredSignature(
+        anchor=anchor, scalar_keys=base.scalar_keys,
+        vec_in_keys=base.vec_in_keys, win_in_keys=win_in,
+        elt_out_keys=base.elt_out_keys, red_out_keys=base.red_out_keys,
+        mat_key=mat_key, cols_key=cols_key, rows_key=rows_key,
+        pre=pre, post=post)
+
+
+def _build_anchored_kernel(graph: DataflowGraph, group: FusionGroup,
+                           sig: AnchoredSignature, out_dtype, nj: int):
+    """Generate the Pallas kernel body for an anchored group.
+
+    Grid is (row blocks, col blocks), col axis innermost — the same
+    schedule as the standalone gemv/symv kernels. Per step: the
+    absorbed producer chain runs on the resident (bm, 1) row windows
+    (values stay in trace scope for both phases; the recompute is a
+    few VPU ops on VMEM-resident data), the accumulator scratch picks
+    up one (bm, bn) matrix window's contribution, and at the last col
+    block the finished output window feeds the spliced consumer
+    emitters: element-wise outputs are written back, reductions
+    accumulate across row blocks. The anchor's output vector exists
+    only in the VMEM scratch unless it is itself a program output."""
+    members = set(group.nodes)
+    blas = graph.nodes[sig.anchor].blas
+    ns, nv = len(sig.scalar_keys), len(sig.win_in_keys)
+    ne = len(sig.elt_out_keys)
+    nm = 2 if blas == "symv" else 1
+
+    def _is_idx(key):
+        return graph.nodes[key[0]].rdef.index_reduction
+
+    def kernel(*refs):
+        s_refs = refs[:ns]
+        mat_refs = refs[ns:ns + nm]
+        v_refs = refs[ns + nm:ns + nm + nv]
+        e_refs = refs[ns + nm + nv:ns + nm + nv + ne]
+        r_refs = refs[ns + nm + nv + ne:-1]
+        acc = refs[-1]                       # (bm, 1) f32 VMEM scratch
+        i, j = pl.program_id(0), pl.program_id(1)
+
+        red_refs = _red_ref_map(sig, r_refs, _is_idx)
+        scal_env = {key: s_refs[k][0]
+                    for k, key in enumerate(sig.scalar_keys)}
+        env = {}
+        for key, ref_ in zip(sig.win_in_keys, v_refs):
+            env[key] = ref_[...].astype(jnp.float32)
+
+        # row phase: absorbed producers of the accumulator operand
+        for name in sig.pre:
+            _splice_routine(graph, members, name, scal_env, env,
+                            idx_step=i)
+
+        alpha = scal_env[(sig.anchor, "alpha")]
+        beta = scal_env[(sig.anchor, "beta")]
+        rows_val = env[sig.rows_key]
+
+        @pl.when(j == 0)
+        def _init_row():
+            acc[...] = beta * rows_val
+
+        if blas == "symv":
+            contrib = symv_block(mat_refs[0][...], mat_refs[1][...],
+                                 env[sig.cols_key], i, j)
+        else:
+            contrib = gemv_block(mat_refs[0][...], env[sig.cols_key])
+        acc[...] += alpha * contrib
+
+        @pl.when(j == nj - 1)
+        def _finish_row():
+            fenv = dict(env)
+            out_port = next(iter(graph.nodes[sig.anchor].rdef.outputs))
+            block = acc[...]
+            for e in graph.consumers_of(sig.anchor, out_port):
+                if e.dst in members:
+                    fenv[(e.dst, e.dst_port)] = block
+            fenv[(sig.anchor, out_port)] = block
+            for name in sig.post:
+                _splice_routine(graph, members, name, scal_env, fenv,
+                                idx_step=i)
+            for key, ref_ in zip(sig.elt_out_keys, e_refs):
+                ref_[...] = fenv[key].astype(out_dtype)
+            # reductions accumulate once per row block; the i == 0
+            # select seeds them without a separate init step
+            for key in sig.red_out_keys:
+                if _is_idx(key):
+                    val, gidx = fenv[key]
+                    m_ref, i_ref = red_refs[key]
+                    prev_m = jnp.where(i == 0, jnp.float32(-1.0),
+                                       m_ref[0, 0])
+                    prev_i = jnp.where(i == 0, jnp.int32(0),
+                                       i_ref[0, 0])
+                    better = val > prev_m
+                    i_ref[0, 0] = jnp.where(better, gidx, prev_i)
+                    m_ref[0, 0] = jnp.where(better, val, prev_m)
+                else:
+                    (r_ref,) = red_refs[key]
+                    prev = jnp.where(i == 0, jnp.float32(0.0),
+                                     r_ref[0, 0])
+                    r_ref[0, 0] = prev + fenv[key]
+
+    return kernel
+
+
+def make_anchored_callable(graph: DataflowGraph, group: FusionGroup,
+                           dtype, *, interpret=None):
+    """Returns fn(scalars: {(r,s): val}, vec_ins: {(r,p): array}) ->
+    {(r,p): value} for a level-2 anchored group. vec_ins carries the
+    matrix operand under (anchor, A) alongside the vectors."""
+    interpret = default_interpret() if interpret is None else interpret
+    sig = _anchored_signature(graph, group)
+    blas = graph.nodes[sig.anchor].blas
+
+    def run(scalars, vec_ins):
+        a = vec_ins[sig.mat_key]
+        if a.ndim != 2:
+            raise ValueError(
+                f"anchored group {sig.anchor!r}: matrix operand must "
+                f"be 2-D, got shape {a.shape}")
+        m, n = a.shape
+        if blas == "symv":
+            if m != n:
+                raise ValueError(
+                    f"symv needs a square matrix, got {a.shape}")
+            bm = bn = min(symv_mod.DEFAULT_BLOCK, max(n, 1))
+        else:
+            bm = min(gemv_mod.DEFAULT_BLOCK_M, max(m, 1))
+            bn = min(gemv_mod.DEFAULT_BLOCK_N, max(n, 1))
+        ap = pad_to(pad_to(a, bm, axis=0), bn, axis=1)
+        mp, np_ = ap.shape
+        grid = (cdiv(mp, bm), cdiv(np_, bn))
+
+        win_args, win_specs = [], []
+        for key in sig.win_in_keys:
+            v = vec_ins[key]
+            want = n if key == sig.cols_key else m
+            if v.shape[0] != want:
+                raise ValueError(
+                    f"anchored group vectors disagree on length: "
+                    f"{key} has {v.shape[0]}, the {blas} anchor "
+                    f"wants {want}")
+            if key == sig.cols_key:
+                win_args.append(
+                    pad_to(v, bn, axis=0).reshape(-1, 1))
+                win_specs.append(
+                    pl.BlockSpec((bn, 1), lambda i, j: (j, 0)))
+            else:
+                win_args.append(
+                    pad_to(v, bm, axis=0).reshape(-1, 1))
+                win_specs.append(
+                    pl.BlockSpec((bm, 1), lambda i, j: (i, 0)))
+
+        mat_args = [ap]
+        mat_specs = [pl.BlockSpec((bm, bn), lambda i, j: (i, j))]
+        if blas == "symv":
+            mat_args.append(ap)   # mirror window (j, i), transposed
+            mat_specs.append(
+                pl.BlockSpec((bn, bm), lambda i, j: (j, i)))
+
+        elt_spec = pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+        red_specs, red_shapes = _red_out_specs(graph, sig,
+                                               lambda i, j: (0, 0))
+        out_shapes = (
+            [jax.ShapeDtypeStruct((mp, 1), dtype)
+             for _ in sig.elt_out_keys]
+            + red_shapes)
+
+        kernel = _build_anchored_kernel(graph, group, sig, dtype,
+                                        grid[1])
+        outs = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[smem_scalar_spec()] * len(sig.scalar_keys)
+            + mat_specs + win_specs,
+            out_specs=[elt_spec] * len(sig.elt_out_keys) + red_specs,
+            out_shape=out_shapes,
+            scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
+            interpret=interpret,
+        )(*[jnp.reshape(scalars[k], (1,)).astype(jnp.float32)
+            for k in sig.scalar_keys], *mat_args, *win_args)
+        outs = outs if isinstance(outs, (list, tuple)) else [outs]
+        return _collect_results(graph, sig, outs, m)
 
     run.signature = sig
     return run
@@ -283,9 +562,12 @@ def emit_program(graph: DataflowGraph, groups: List[FusionGroup],
     fused_callables = {}
     if mode == "dataflow":
         for gi, g in enumerate(groups):
-            if g.fused:
-                fused_callables[gi] = make_group_callable(
-                    graph, g, dtype, interpret=interpret)
+            if not g.fused:
+                continue
+            make = (make_anchored_callable if g.anchor
+                    else make_group_callable)
+            fused_callables[gi] = make(graph, g, dtype,
+                                       interpret=interpret)
 
     def program(inputs: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
         missing = [n for n in graph.input_names() if n not in inputs]

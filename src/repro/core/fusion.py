@@ -3,20 +3,40 @@
 A *fusion group* is the TPU realization of the paper's "connected
 routines exchange data on-chip": every routine in a group executes in
 ONE generated Pallas kernel and its intermediate windows live in
-VMEM/VREGs only. Groupable routines are the level-1 element-wise
-producers and reductions (the level-2/3 routines are already single
-fused kernels of their own — their cross-routine edges go through HBM,
-like a NoC hop to a distant column on the AIE array).
+VMEM/VREGs only. Two group shapes exist:
+
+* **Level-1 groups** — chains of element-wise producers ending in (or
+  fanning into) reductions. These were the original planner's whole
+  vocabulary.
+* **Level-2 anchored groups** — a `gemv`/`symv` *anchor* plus adjacent
+  level-1 routines. The anchor's row-blocked output is produced in
+  VMEM and consumed in-register by the spliced level-1 emitters
+  (`symv → dot`, `gemv → axpy → nrm2`), and element-wise producers of
+  the anchor's accumulator operand (`y`) are applied as the row block
+  is initialised — the FBLAS observation that streaming a level-2
+  routine straight into its level-1 neighbours is where the HBM
+  savings of dataflow composition actually live. Producers of the
+  *column-aligned* operand (`x`) are never absorbed: the anchored
+  kernel re-reads x windows once per row block, so fusing an x
+  producer would multiply its input traffic instead of removing a
+  round-trip.
 
 Groups must be *convex* in the DAG (no path that leaves the group and
 re-enters), otherwise the fused kernel would deadlock its own input.
-We merge greedily over fusable edges in topological order, rejecting
-merges that would break convexity.
+We merge greedily over fusable edges, rejecting merges that would
+break convexity. The convexity test is incremental: the partition
+tracks per-group member/descendant/ancestor unions, so it costs a
+constant number of set operations per merge attempt instead of the
+old rescan of every outside node against every member (O(V·(V+E))).
+Schedulability (a merge must not make the group quotient cyclic) adds
+a Kahn sweep, run only when the candidate group has both outside
+ancestors and outside descendants — the only shape that can close a
+quotient cycle.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 from .graph import DataflowGraph
 
@@ -25,50 +45,175 @@ from .graph import DataflowGraph
 class FusionGroup:
     nodes: List[str]          # topo-ordered routine names
     fused: bool               # True if >1 routine runs in one kernel
+    anchor: Optional[str] = None   # level-2 member streaming the group
 
     def __contains__(self, name):
         return name in self.nodes
 
 
 def _reachability(graph: DataflowGraph):
-    """descendants[n] = set of nodes reachable from n (excl. n)."""
+    """descendants[n] / ancestors[n] = nodes reachable from / reaching
+    n (excl. n). Both are computed in one topo sweep each so the
+    planner's convexity bookkeeping starts from O(V + E) data."""
     desc = {n: set() for n in graph.nodes}
     for n in reversed(graph.order):
         for e in graph.adj[n]:
             desc[n].add(e.dst)
             desc[n] |= desc[e.dst]
-    return desc
+    anc = {n: set() for n in graph.nodes}
+    for n in graph.order:
+        for e in graph.adj[n]:
+            anc[e.dst].add(n)
+            anc[e.dst] |= anc[n]
+    return desc, anc
 
 
-def _convex(members: set, desc, graph: DataflowGraph) -> bool:
-    """No outside node lies on a path between two members."""
-    for outside in graph.nodes:
-        if outside in members:
-            continue
-        reaches_member = bool(desc[outside] & members)
-        reached_by_member = any(outside in desc[m] for m in members)
-        if reaches_member and reached_by_member:
-            return False
-    return True
+class _Partition:
+    """Union-find over routines with per-root member, descendant-union
+    and ancestor-union sets.
+
+    A candidate merge of groups S = A ∪ B is convex iff no outside
+    node sits on a path between two members, i.e. iff
+    `(desc_union(S) & anc_union(S)) - S` is empty: such a node is
+    reached from one member and reaches another. Tracking the unions
+    per root makes each test a constant number of set ops — the
+    incremental replacement for the old full-graph rescan.
+
+    Convexity alone is not enough: two individually-convex groups can
+    still form a CYCLE in the group quotient graph (group A feeds B
+    and B feeds A through disjoint node paths), which has no valid
+    sequential schedule — each fused kernel would wait on the other's
+    output. `try_union` therefore also rejects merges that make the
+    quotient cyclic. That check is a Kahn sweep over all edges, so it
+    is pre-filtered: a merged group with no outside ancestors or no
+    outside descendants cannot sit on a quotient cycle, which skips
+    the sweep for the common chain/sink merges."""
+
+    def __init__(self, graph: DataflowGraph):
+        desc, anc = _reachability(graph)
+        self.graph = graph
+        self.parent = {n: n for n in graph.nodes}
+        self.members = {n: {n} for n in graph.nodes}
+        self.desc = {n: set(desc[n]) for n in graph.nodes}
+        self.anc = {n: set(anc[n]) for n in graph.nodes}
+
+    def find(self, n: str) -> str:
+        while self.parent[n] != n:
+            self.parent[n] = self.parent[self.parent[n]]
+            n = self.parent[n]
+        return n
+
+    def group(self, n: str) -> set:
+        return self.members[self.find(n)]
+
+    def _quotient_acyclic_with(self, ra: str, rb: str) -> bool:
+        """Would the group quotient stay a DAG if rb merged into ra?"""
+        def gid(n):
+            r = self.find(n)
+            return ra if r == rb else r
+
+        nodes = {gid(n) for n in self.graph.nodes}
+        indeg = {g: 0 for g in nodes}
+        adj = {g: set() for g in nodes}
+        for e in self.graph.edges:
+            a, b = gid(e.src), gid(e.dst)
+            if a != b and b not in adj[a]:
+                adj[a].add(b)
+                indeg[b] += 1
+        ready = [g for g, d in indeg.items() if d == 0]
+        seen = 0
+        while ready:
+            g = ready.pop()
+            seen += 1
+            for h in adj[g]:
+                indeg[h] -= 1
+                if indeg[h] == 0:
+                    ready.append(h)
+        return seen == len(nodes)
+
+    def try_union(self, a: str, b: str) -> Optional[str]:
+        """Merge the groups of a and b if the result is convex and the
+        group quotient stays acyclic (schedulable). Returns the merged
+        root, or None (state untouched)."""
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return ra
+        mem = self.members[ra] | self.members[rb]
+        du = self.desc[ra] | self.desc[rb]
+        au = self.anc[ra] | self.anc[rb]
+        if (du & au) - mem:
+            return None
+        # quotient cycle needs traffic both INTO and OUT OF the merged
+        # group; without both, skip the (linear) Kahn sweep
+        if (du - mem) and (au - mem) and \
+                not self._quotient_acyclic_with(ra, rb):
+            return None
+        self.parent[rb] = ra
+        self.members[ra] = mem
+        self.desc[ra] = du
+        self.anc[ra] = au
+        return ra
 
 
-def plan(graph: DataflowGraph, *, enable: bool = True) -> List[FusionGroup]:
+def _absorb_downstream(part, graph, name, anchored):
+    """Absorb level-1 consumer groups of the anchor's output."""
+    rdef = graph.nodes[name].rdef
+    for port in rdef.outputs:
+        for e in graph.consumers_of(name, port):
+            cand = part.group(e.dst)
+            if not all(graph.nodes[m].rdef.fusable for m in cand):
+                continue          # contains another level-2/3 routine
+            if part.find(e.dst) in anchored:
+                continue          # already streamed by another anchor
+            root = part.try_union(name, e.dst)
+            if root is not None:
+                anchored[root] = name
+
+
+def _absorb_upstream(part, graph, name, anchored):
+    """Absorb an element-wise producer chain feeding the anchor's
+    row-aligned accumulator operand (applied at j == 0, once per row
+    block). Reductions cannot ride along — their accumulation schedule
+    belongs to the finish phase — and every edge from the absorbed
+    group into the anchor must target the rows port (a member also
+    feeding the column-aligned port would need (bn, 1) windows the
+    row-phase emitters cannot produce)."""
+    rdef = graph.nodes[name].rdef
+    rows_port = rdef.anchor_ports["rows"]
+    e = graph.producer_of(name, rows_port)
+    if e is None:
+        return
+    cand = part.group(e.src)
+    if not all(graph.nodes[m].rdef.eltwise for m in cand):
+        return
+    if part.find(e.src) in anchored:
+        return
+    for m in cand:
+        for port in graph.nodes[m].rdef.outputs:
+            for me in graph.consumers_of(m, port):
+                if me.dst == name and me.dst_port != rows_port:
+                    return
+    root = part.try_union(name, e.src)
+    if root is not None:
+        anchored[root] = name
+
+
+def plan(graph: DataflowGraph, *, enable: bool = True,
+         anchor: Optional[bool] = None) -> List[FusionGroup]:
     """Partition nodes into topo-ordered fusion groups.
 
     enable=False produces one group per routine — the paper's
     "no-dataflow" configuration where every intermediate round-trips
-    through off-chip memory.
+    through off-chip memory. `anchor` (default: follows `enable`)
+    additionally lets level-2 anchors absorb adjacent level-1 groups.
     """
-    parent = {n: n for n in graph.nodes}
-
-    def find(n):
-        while parent[n] != n:
-            parent[n] = parent[parent[n]]
-            n = parent[n]
-        return n
+    if anchor is None:
+        anchor = enable
+    part = _Partition(graph) if enable else None
+    anchored: dict = {}       # group root -> anchor routine name
 
     if enable:
-        desc = _reachability(graph)
+        # pass 1: level-1 element-wise chains into their consumers
         for e in graph.edges:
             src_def = graph.nodes[e.src].rdef
             dst_def = graph.nodes[e.dst].rdef
@@ -76,20 +221,52 @@ def plan(graph: DataflowGraph, *, enable: bool = True) -> List[FusionGroup]:
                 continue
             if not src_def.eltwise:
                 continue  # reductions are sinks: nothing fuses after them
-            ra, rb = find(e.src), find(e.dst)
-            if ra == rb:
-                continue
-            members = {n for n in graph.nodes
-                       if find(n) in (ra, rb)}
-            if not _convex(members, desc, graph):
-                continue
-            parent[rb] = ra
+            part.try_union(e.src, e.dst)
 
-    groups: dict[str, list] = {}
+        # pass 2: level-2 anchors absorb adjacent level-1 groups. Topo
+        # order so an anchor sees its consumers' final level-1 grouping.
+        if anchor:
+            for name in graph.order:
+                if not graph.nodes[name].rdef.anchor:
+                    continue
+                _absorb_downstream(part, graph, name, anchored)
+                _absorb_upstream(part, graph, name, anchored)
+
+    groups: dict = {}
     for n in graph.order:  # topo order within groups for free
-        groups.setdefault(find(n), []).append(n)
+        root = part.find(n) if part is not None else n
+        groups.setdefault(root, []).append(n)
 
-    # order groups topologically: by first member's topo index
+    # schedule groups by a topo sort of the group quotient (kept
+    # acyclic by try_union). Sorting by first-member topo index is NOT
+    # enough: an anchor can absorb a consumer whose other operand
+    # comes from a topologically later group, which must then run
+    # first. Ties break on first-member topo index for determinism.
     topo_index = {n: i for i, n in enumerate(graph.order)}
-    ordered = sorted(groups.values(), key=lambda ns: topo_index[ns[0]])
-    return [FusionGroup(nodes=ns, fused=len(ns) > 1) for ns in ordered]
+    root_of = {n: (part.find(n) if part is not None else n)
+               for n in graph.nodes}
+    indeg = {r: 0 for r in groups}
+    adj = {r: set() for r in groups}
+    for e in graph.edges:
+        a, b = root_of[e.src], root_of[e.dst]
+        if a != b and b not in adj[a]:
+            adj[a].add(b)
+            indeg[b] += 1
+    ready = sorted((r for r, d in indeg.items() if d == 0),
+                   key=lambda r: topo_index[groups[r][0]])
+    ordered = []
+    while ready:
+        r = ready.pop(0)
+        ordered.append(r)
+        changed = False
+        for h in adj[r]:
+            indeg[h] -= 1
+            if indeg[h] == 0:
+                ready.append(h)
+                changed = True
+        if changed:
+            ready.sort(key=lambda r_: topo_index[groups[r_][0]])
+    assert len(ordered) == len(groups), "group quotient has a cycle"
+    return [FusionGroup(nodes=groups[r], fused=len(groups[r]) > 1,
+                        anchor=anchored.get(r))
+            for r in ordered]

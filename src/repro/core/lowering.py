@@ -14,9 +14,9 @@ each pass independently invocable and testable:
     emit       Pallas codegen -> python callable
 
 `lower()` runs the pipeline; `compile_cached()` memoizes whole IRs by
-(spec digest, mode, fuse, interpret) so a body spec that appears in
-many loop programs — or in repeated `Program.from_spec` calls —
-compiles exactly once per configuration.
+(spec digest, mode, fuse, anchor, interpret) so a body spec that
+appears in many loop programs — or in repeated `Program.from_spec`
+calls — compiles exactly once per configuration.
 
 `lower_loop()` lowers a LoopSpec: it compiles every stage program
 through the cache and performs the cross-stage def-use and kind
@@ -50,6 +50,7 @@ class ProgramIR:
     digest: str
     mode: str
     fuse: bool
+    anchor: bool                     # level-2 anchored fusion enabled
     interpret: Optional[bool]
     spec: Optional[spec_mod.ProgramSpec] = None
     graph: Optional[DataflowGraph] = None
@@ -77,7 +78,7 @@ def infer_pass(ir: ProgramIR) -> None:
 
 
 def fuse_pass(ir: ProgramIR) -> None:
-    ir.groups = fusion.plan(ir.graph, enable=ir.fuse)
+    ir.groups = fusion.plan(ir.graph, enable=ir.fuse, anchor=ir.anchor)
 
 
 def place_pass(ir: ProgramIR) -> None:
@@ -136,17 +137,25 @@ def spec_digest(raw: Union[str, Mapping, pathlib.Path]) -> str:
 
 
 def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
-          upto: Optional[str] = None,
+          anchor: Optional[bool] = None, upto: Optional[str] = None,
           interpret: Optional[bool] = None) -> ProgramIR:
     """Run the pass pipeline over a raw spec. `upto` stops after the
-    named pass (inclusive) for partial lowering in tests/tools."""
+    named pass (inclusive) for partial lowering in tests/tools.
+    `anchor` gates level-2 anchored fusion groups (default: follows
+    `fuse`, so dataflow mode gets them and nodataflow does not)."""
     if mode not in ("dataflow", "nodataflow", "reference"):
         raise ValueError(f"unknown mode {mode!r}")
     raw = _canonical_raw(raw)
     if fuse is None:
         fuse = mode == "dataflow"
+    if anchor is None:
+        anchor = fuse
+    if anchor and not fuse:
+        raise ValueError(
+            "anchor=True requires fuse=True: level-2 anchored groups "
+            "are a tier of the fusion planner, not a standalone pass")
     ir = ProgramIR(raw=raw, digest=spec_digest(raw), mode=mode,
-                   fuse=fuse, interpret=interpret)
+                   fuse=fuse, anchor=anchor, interpret=interpret)
     known = [name for name, _ in PIPELINE]
     if upto is not None and upto not in known:
         raise ValueError(f"unknown pass {upto!r}; pipeline: {known}")
@@ -168,8 +177,10 @@ _STATS = {"hits": 0, "misses": 0}
 
 def compile_cached(raw, *, mode: str = "dataflow",
                    fuse: Optional[bool] = None,
+                   anchor: Optional[bool] = None,
                    interpret: Optional[bool] = None) -> ProgramIR:
-    """Fully lower a spec, memoized by (digest, mode, fuse, interpret).
+    """Fully lower a spec, memoized by (digest, mode, fuse, anchor,
+    interpret).
 
     Loop programs routinely reuse body specs (RESIDUAL appears in
     setup, in the Jacobi body, and in every class-based linear solver);
@@ -178,13 +189,16 @@ def compile_cached(raw, *, mode: str = "dataflow",
     raw = _canonical_raw(raw)
     if fuse is None:
         fuse = mode == "dataflow"
-    key = (spec_digest(raw), mode, fuse, interpret)
+    if anchor is None:
+        anchor = fuse
+    key = (spec_digest(raw), mode, fuse, anchor, interpret)
     hit = _CACHE.get(key)
     if hit is not None:
         _STATS["hits"] += 1
         return hit
     _STATS["misses"] += 1
-    ir = lower(raw, mode=mode, fuse=fuse, interpret=interpret)
+    ir = lower(raw, mode=mode, fuse=fuse, anchor=anchor,
+               interpret=interpret)
     _CACHE[key] = ir
     return ir
 

@@ -39,6 +39,15 @@ class RoutineDef:
     # index-carrying reduction (iamax): the generated kernel tracks a
     # (running max, flat index) pair instead of a sum accumulator
     index_reduction: bool = False
+    # level-2 streaming anchor (gemv/symv): the routine can anchor a
+    # mixed-level fusion group whose level-1 neighbours consume (or
+    # produce) its row-blocked output vector on-chip. `anchor_ports`
+    # names the roles the anchored-kernel generator tiles against:
+    #   mat  — the streamed matrix operand ((bm, bn) windows)
+    #   cols — the column-aligned vector ((bn, 1) windows, grid dim j)
+    #   rows — the row-aligned accumulator vector ((bm, 1), grid dim i)
+    anchor: bool = False
+    anchor_ports: Optional[Mapping[str, str]] = None
     # codegen hooks
     emitter: Optional[Callable] = None      # f32 block expr for fusion
     post: Optional[Callable] = None         # applied after full reduction
@@ -215,6 +224,8 @@ register(RoutineDef(
 register(RoutineDef(
     name="gemv", level=2, scalars=("alpha", "beta"),
     inputs={"A": MAT, "x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    anchor=True,
+    anchor_ports={"mat": "A", "cols": "x", "rows": "y"},
     kernel=lambda alpha, A, x, beta, y, **kw: ops.gemv(
         alpha, A, x, beta, y, **kw),
     reference=lambda s, A, x, y: ref.gemv(s["alpha"], A, x, s["beta"], y),
@@ -225,6 +236,8 @@ register(RoutineDef(
 register(RoutineDef(
     name="symv", level=2, scalars=("alpha", "beta"),
     inputs={"A": MAT, "x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    anchor=True,
+    anchor_ports={"mat": "A", "cols": "x", "rows": "y"},
     kernel=lambda alpha, A, x, beta, y, **kw: ops.symv(
         alpha, A, x, beta, y, **kw),
     reference=lambda s, A, x, y: ref.symv(s["alpha"], A, x, s["beta"], y),

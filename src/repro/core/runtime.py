@@ -62,13 +62,16 @@ class Program:
     @classmethod
     def from_spec(cls, raw: Union[str, Mapping, pathlib.Path], *,
                   mode: str = "dataflow", fuse: Optional[bool] = None,
+                  anchor: Optional[bool] = None,
                   interpret: Optional[bool] = None) -> "Program":
         """Lower a spec through the pass pipeline (parse -> graph ->
         infer -> fuse -> place -> emit; see core.lowering). Lowered
-        programs are cached by (spec digest, mode, fuse, interpret), so
-        constructing the same program twice compiles once."""
+        programs are cached by (spec digest, mode, fuse, anchor,
+        interpret), so constructing the same program twice compiles
+        once. `anchor` gates level-2 anchored fusion (default:
+        follows `fuse`)."""
         ir = lowering.compile_cached(raw, mode=mode, fuse=fuse,
-                                     interpret=interpret)
+                                     anchor=anchor, interpret=interpret)
         return cls.from_ir(ir)
 
     @classmethod
@@ -91,7 +94,12 @@ class Program:
     def describe(self) -> str:
         lines = [f"program {self.spec.name!r} mode={self.mode}"]
         for gi, g in enumerate(self.groups):
-            kind = "FUSED on-chip group" if g.fused else "kernel"
+            if g.anchor:
+                kind = f"FUSED {g.anchor}-anchored streaming group"
+            elif g.fused:
+                kind = "FUSED on-chip group"
+            else:
+                kind = "kernel"
             lines.append(f"  group {gi} [{kind}]: {' -> '.join(g.nodes)}")
         lines.append(f"  inputs:  {self.input_names}")
         lines.append(f"  outputs: {self.output_names}")

@@ -19,6 +19,16 @@ DEFAULT_BLOCK_M = 256
 DEFAULT_BLOCK_N = 512
 
 
+def gemv_block(a_block, x_block):
+    """f32 contribution of one (bm, bn) A window against its (bn, 1) x
+    window — the MXU inner product. Factored out so the standalone
+    kernel below and the anchored fused-kernel generator
+    (core.codegen) splice the exact same block body."""
+    return jnp.dot(a_block.astype(jnp.float32),
+                   x_block.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
 def _gemv_kernel(alpha_ref, beta_ref, a_ref, x_ref, y_ref, o_ref):
     j = pl.program_id(1)
 
@@ -26,10 +36,7 @@ def _gemv_kernel(alpha_ref, beta_ref, a_ref, x_ref, y_ref, o_ref):
     def _init():
         o_ref[...] = beta_ref[0] * y_ref[...].astype(jnp.float32)
 
-    a = a_ref[...].astype(jnp.float32)
-    x = x_ref[...].astype(jnp.float32)
-    o_ref[...] += alpha_ref[0] * jnp.dot(
-        a, x, preferred_element_type=jnp.float32)
+    o_ref[...] += alpha_ref[0] * gemv_block(a_ref[...], x_ref[...])
 
 
 @functools.partial(

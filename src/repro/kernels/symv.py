@@ -20,6 +20,23 @@ from .common import cdiv, default_interpret, pad_to, pl, smem_scalar_spec
 DEFAULT_BLOCK = 256
 
 
+def symv_block(a_block, mirror_block, x_block, i, j):
+    """f32 contribution of the (i, j) symv window: the stored
+    lower-triangle block and its mirrored transpose block, selected
+    per element on global row/column ids, against the (bn, 1) x
+    window. Factored out so the standalone kernel below and the
+    anchored fused-kernel generator (core.codegen) splice the exact
+    same block body."""
+    a = a_block.astype(jnp.float32)             # A[i-block, j-block]
+    mirror = mirror_block.astype(jnp.float32).T   # = A[j-block, i-block]ᵀ
+    bm, bn = a.shape
+    r_ids = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    c_ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    a_sym = jnp.where(r_ids >= c_ids, a, mirror)
+    return jnp.dot(a_sym, x_block.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
 def _symv_kernel(alpha_ref, beta_ref, a_ref, am_ref, x_ref, y_ref, o_ref):
     i, j = pl.program_id(0), pl.program_id(1)
 
@@ -27,15 +44,8 @@ def _symv_kernel(alpha_ref, beta_ref, a_ref, am_ref, x_ref, y_ref, o_ref):
     def _init():
         o_ref[...] = beta_ref[0] * y_ref[...].astype(jnp.float32)
 
-    a = a_ref[...].astype(jnp.float32)        # A[i-block, j-block]
-    mirror = am_ref[...].astype(jnp.float32).T  # = A[j-block, i-block]ᵀ
-    bm, bn = a.shape
-    r_ids = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
-    c_ids = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
-    a_sym = jnp.where(r_ids >= c_ids, a, mirror)
-    x = x_ref[...].astype(jnp.float32)
-    o_ref[...] += alpha_ref[0] * jnp.dot(
-        a_sym, x, preferred_element_type=jnp.float32)
+    o_ref[...] += alpha_ref[0] * symv_block(
+        a_ref[...], am_ref[...], x_ref[...], i, j)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

@@ -92,14 +92,21 @@ def test_nodataflow_mode_splits_groups():
     assert not any(g.fused for g in prog.groups)
 
 
-def test_gemv_chain_does_not_fuse_into_level1():
+def test_gemv_chain_fuses_into_anchored_group():
     spec = {"routines": [
         {"blas": "gemv", "name": "mv",
          "connections": {"out": "d.x"}},
         {"blas": "dot", "name": "d"}]}
     prog = Program.from_spec(spec)
-    # gemv is its own kernel; dot is a separate group
-    assert len(prog.groups) == 2
+    # the level-2 anchor absorbs its level-1 consumer: one streamed
+    # kernel, the matvec output never round-trips through HBM
+    assert len(prog.groups) == 1
+    assert prog.groups[0].fused
+    assert prog.groups[0].anchor == "mv"
+    # with anchored fusion off, the old two-kernel split comes back
+    prog_off = Program.from_spec(spec, anchor=False)
+    assert len(prog_off.groups) == 2
+    assert all(g.anchor is None for g in prog_off.groups)
 
 
 # ---------------------------------------------------------------------------

@@ -5,9 +5,14 @@ and the pure-jnp reference must agree — the system's core invariant
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import Program
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (installed in CI tier-1)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Program  # noqa: E402
 
 ELTWISE = ["axpy", "scal", "waxpby", "vsub"]
 REDUCE = ["dot", "asum", "nrm2"]
@@ -64,6 +69,77 @@ def test_fusion_is_semantics_preserving(spec, n, seed):
         scale = max(1.0, np.abs(b).max())
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4 * scale)
         np.testing.assert_allclose(c, b, rtol=1e-4, atol=1e-4 * scale)
+
+
+@st.composite
+def random_anchored_spec(draw):
+    """A gemv/symv anchor followed by a random level-1 tail: 0-2
+    element-wise routines then optionally a reduction, every stage
+    consuming the previous window on-chip. This is the mixed-level
+    shape the anchored fused-kernel generator must keep
+    semantics-preserving."""
+    anchor = draw(st.sampled_from(["gemv", "symv"]))
+    alpha = draw(st.floats(-2.0, 2.0, allow_nan=False, width=32))
+    beta = draw(st.floats(-2.0, 2.0, allow_nan=False, width=32))
+    routines = [{"blas": anchor, "name": "mv",
+                 "scalars": {"alpha": alpha, "beta": beta},
+                 "inputs": {"A": "A", "x": "x", "y": "y"},
+                 "outputs": {"out": "mv_out"}}]
+    n_elt = draw(st.integers(0, 2))
+    for i in range(n_elt):
+        blas = draw(st.sampled_from(ELTWISE))
+        r = {"blas": blas, "name": f"e{i}", "outputs": {"out": f"o{i}"}}
+        scal = {}
+        for s in {"axpy": ["alpha"], "scal": ["alpha"],
+                  "waxpby": ["alpha", "beta"], "vsub": []}[blas]:
+            scal[s] = draw(st.floats(-2.0, 2.0, allow_nan=False,
+                                     width=32))
+        if scal:
+            r["scalars"] = scal
+        routines[-1]["connections"] = {"out": f"e{i}.x"}
+        routines.append(r)
+    if draw(st.booleans()):
+        blas = draw(st.sampled_from(REDUCE))
+        routines[-1]["connections"] = {"out": "red.x"}
+        routines.append({"blas": blas, "name": "red",
+                         "outputs": {"out": "rout"}})
+    return {"dtype": "float32", "routines": routines}
+
+
+@given(spec=random_anchored_spec(),
+       m=st.sampled_from([64, 257, 700]),
+       n=st.sampled_from([64, 300]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_anchored_fusion_is_semantics_preserving(spec, m, n, seed):
+    if spec["routines"][0]["blas"] == "symv":
+        m = n   # symv needs a square matrix
+    progs = {md: Program.from_spec(spec, mode=md)
+             for md in ("dataflow", "nodataflow", "reference")}
+    key = jax.random.PRNGKey(seed)
+    inputs = {}
+    for i, (name, kind) in enumerate(
+            sorted(progs["dataflow"].ir.io.input_kinds.items())):
+        k = jax.random.fold_in(key, i)
+        if kind == "matrix":
+            inputs[name] = jax.random.uniform(k, (m, n), minval=-1.0,
+                                              maxval=1.0)
+        elif kind == "vector":
+            # x rides the columns, everything else the rows
+            dim = n if name == "x" else m
+            inputs[name] = jax.random.uniform(k, (dim,), minval=-1.0,
+                                              maxval=1.0)
+        else:
+            inputs[name] = jax.random.uniform(k, (), minval=-1.0,
+                                              maxval=1.0)
+    outs = {md: p(**inputs) for md, p in progs.items()}
+    for out_name in progs["dataflow"].output_names:
+        b = np.asarray(outs["reference"][out_name], np.float64)
+        scale = max(1.0, float(np.abs(b).max()) if b.size else 1.0)
+        for md in ("dataflow", "nodataflow"):
+            a = np.asarray(outs[md][out_name], np.float64)
+            np.testing.assert_allclose(a, b, rtol=1e-3,
+                                       atol=1e-3 * scale)
 
 
 @given(alpha=st.floats(-3.0, 3.0, allow_nan=False, width=32),

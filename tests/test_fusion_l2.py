@@ -1,0 +1,420 @@
+"""Level-2 anchored fusion: gemv/symv anchors absorbing adjacent
+level-1 routines into one streamed Pallas kernel.
+
+Covers the tentpole invariants:
+  * `symv -> dot` and `gemv -> axpy -> nrm2` lower to a SINGLE
+    pallas_call in dataflow mode (counted, not inferred);
+  * fused (dataflow) == unfused (nodataflow) == reference numerically;
+  * convexity: fusing is rejected when it would create a path that
+    leaves and re-enters the group;
+  * the modeled HBM bytes for the CG iteration body drop >= 25% on
+    the avoidable (vector) traffic — the number BENCH_fused_l2.json
+    gates against.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Program
+from repro.core.lowering import lower
+from repro.kernels.common import pl
+
+MODES = ("dataflow", "nodataflow", "reference")
+
+
+def _vec(n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+
+
+def _mat(m, n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, n),
+                             jnp.float32)
+
+
+def _sym(n, seed=0):
+    a = _mat(n, n, seed)
+    return (a + a.T) / 2
+
+
+SYMV_DOT = {
+    "name": "symv_dot",
+    "routines": [
+        {"blas": "symv", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "x", "y": "x"},
+         "connections": {"out": "d.x"}},
+        {"blas": "dot", "name": "d", "inputs": {"y": "x"},
+         "outputs": {"out": "q"}},
+    ],
+}
+
+GEMV_AXPY_NRM2 = {
+    "name": "gemv_axpy_nrm2",
+    "routines": [
+        {"blas": "gemv", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "p", "y": "y0"},
+         "connections": {"out": "up.x"}, "outputs": {"out": "q"}},
+        {"blas": "axpy", "name": "up",
+         "scalars": {"alpha": {"input": "neg_alpha"}},
+         "inputs": {"y": "r"},
+         "connections": {"out": "rn.x"}, "outputs": {"out": "r_next"}},
+        {"blas": "nrm2", "name": "rn", "outputs": {"out": "rnorm"}},
+    ],
+}
+
+
+class _PallasCallCounter:
+    """Counts pl.pallas_call invocations (i.e. generated kernels
+    actually launched/traced) during a block."""
+
+    def __init__(self, monkeypatch):
+        self.count = 0
+        real = pl.pallas_call
+
+        def counting(*args, **kwargs):
+            self.count += 1
+            return real(*args, **kwargs)
+
+        monkeypatch.setattr(pl, "pallas_call", counting)
+
+
+# ---------------------------------------------------------------------------
+# Planner structure
+# ---------------------------------------------------------------------------
+
+
+def test_symv_dot_plans_one_anchored_group():
+    ir = lower(SYMV_DOT, upto="fuse")
+    assert len(ir.groups) == 1
+    assert ir.groups[0].fused and ir.groups[0].anchor == "mv"
+
+
+def test_gemv_chain_plans_one_anchored_group():
+    ir = lower(GEMV_AXPY_NRM2, upto="fuse")
+    assert len(ir.groups) == 1
+    assert ir.groups[0].nodes == ["mv", "up", "rn"]
+    assert ir.groups[0].anchor == "mv"
+
+
+def test_nodataflow_mode_never_anchors():
+    ir = lower(GEMV_AXPY_NRM2, mode="nodataflow", upto="fuse")
+    assert len(ir.groups) == 3
+    assert all(g.anchor is None and not g.fused for g in ir.groups)
+
+
+def test_anchor_knob_disables_only_anchored_fusion():
+    ir = lower(GEMV_AXPY_NRM2, anchor=False, upto="fuse")
+    # gemv alone + the still-fused level-1 tail
+    assert len(ir.groups) == 2
+    assert ir.groups[0].nodes == ["mv"] and ir.groups[0].anchor is None
+    assert ir.groups[1].nodes == ["up", "rn"] and ir.groups[1].fused
+
+
+def test_anchor_without_fuse_rejected():
+    with pytest.raises(ValueError, match="anchor=True requires"):
+        lower(GEMV_AXPY_NRM2, fuse=False, anchor=True)
+    with pytest.raises(ValueError, match="anchor=True requires"):
+        lower(GEMV_AXPY_NRM2, mode="nodataflow", anchor=True)
+
+
+# ---------------------------------------------------------------------------
+# Kernel count: the chains launch exactly ONE pallas_call
+# ---------------------------------------------------------------------------
+
+
+def test_symv_dot_single_pallas_call(monkeypatch):
+    prog = Program.from_spec(SYMV_DOT)
+    n = 261
+    a, x = _sym(n, 0), _vec(n, 1)
+    counter = _PallasCallCounter(monkeypatch)
+    out = prog(A=a, x=x)
+    assert counter.count == 1
+    want = x @ (np.asarray(a, np.float64) @ np.asarray(x, np.float64))
+    np.testing.assert_allclose(out["q"], want, rtol=1e-4,
+                               atol=1e-3 * max(1.0, abs(want)))
+
+
+def test_gemv_axpy_nrm2_single_pallas_call(monkeypatch):
+    prog = Program.from_spec(GEMV_AXPY_NRM2)
+    m, n = 391, 133
+    a, p, r = _mat(m, n, 2), _vec(n, 3), _vec(m, 4)
+    y0 = jnp.zeros(m, jnp.float32)
+    counter = _PallasCallCounter(monkeypatch)
+    out = prog(A=a, p=p, y0=y0, r=r, neg_alpha=-0.3)
+    assert counter.count == 1
+    q = np.asarray(a, np.float64) @ np.asarray(p, np.float64)
+    r_next = np.asarray(r, np.float64) - 0.3 * q
+    np.testing.assert_allclose(out["q"], q, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(out["r_next"], r_next, rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(out["rnorm"], np.linalg.norm(r_next),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Numerical equivalence across all three modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [64, 300, 1000])
+def test_symv_dot_mode_equivalence(n):
+    a, x = _sym(n, 5), _vec(n, 6)
+    outs = {m: Program.from_spec(SYMV_DOT, mode=m)(A=a, x=x)
+            for m in MODES}
+    ref = np.float64(outs["reference"]["q"])
+    scale = max(1.0, abs(ref))
+    for m in ("dataflow", "nodataflow"):
+        np.testing.assert_allclose(np.float64(outs[m]["q"]), ref,
+                                   rtol=1e-4, atol=1e-3 * scale)
+
+
+@pytest.mark.parametrize("m,n", [(128, 128), (257, 96), (1000, 513)])
+def test_gemv_axpy_nrm2_mode_equivalence(m, n):
+    inputs = dict(A=_mat(m, n, 7), p=_vec(n, 8), r=_vec(m, 9),
+                  y0=jnp.zeros(m, jnp.float32), neg_alpha=-0.7)
+    outs = {md: Program.from_spec(GEMV_AXPY_NRM2, mode=md)(**inputs)
+            for md in MODES}
+    for name in ("q", "r_next", "rnorm"):
+        ref = np.asarray(outs["reference"][name], np.float64)
+        scale = max(1.0, float(np.abs(ref).max()))
+        for md in ("dataflow", "nodataflow"):
+            np.testing.assert_allclose(
+                np.asarray(outs[md][name], np.float64), ref,
+                rtol=1e-4, atol=1e-3 * scale)
+
+
+def test_upstream_producer_absorbed_into_anchor():
+    """scal -> symv.y: the producer runs in the row phase (j == 0)."""
+    spec = {"routines": [
+        {"blas": "scal", "name": "sc", "scalars": {"alpha": 2.0},
+         "inputs": {"x": "w"}, "connections": {"out": "mv.y"}},
+        {"blas": "symv", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 0.5},
+         "inputs": {"A": "A", "x": "x"}, "outputs": {"out": "y2"}},
+    ]}
+    ir = lower(spec, upto="fuse")
+    assert len(ir.groups) == 1 and ir.groups[0].anchor == "mv"
+    n = 300
+    a, x, w = _sym(n, 10), _vec(n, 11), _vec(n, 12)
+    outs = {m: Program.from_spec(spec, mode=m)(A=a, x=x, w=w)
+            for m in MODES}
+    ref = np.asarray(outs["reference"]["y2"], np.float64)
+    for m in ("dataflow", "nodataflow"):
+        np.testing.assert_allclose(np.asarray(outs[m]["y2"], np.float64),
+                                   ref, rtol=1e-4, atol=1e-3)
+
+
+def test_anchored_index_reduction_consumer():
+    """gemv -> iamax: the index-carrying reduction accumulates across
+    row blocks of the anchored kernel."""
+    spec = {"routines": [
+        {"blas": "gemv", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "x", "y": "y0"},
+         "connections": {"out": "am.x"}},
+        {"blas": "iamax", "name": "am", "outputs": {"out": "idx"}},
+    ]}
+    ir = lower(spec, upto="fuse")
+    assert len(ir.groups) == 1 and ir.groups[0].anchor == "mv"
+    m, n = 700, 80
+    a, x = _mat(m, n, 13), _vec(n, 14)
+    prog = Program.from_spec(spec)
+    out = prog(A=a, x=x, y0=jnp.zeros(m, jnp.float32))
+    want = int(np.argmax(np.abs(np.asarray(a) @ np.asarray(x))))
+    assert int(out["idx"]) == want
+
+
+# ---------------------------------------------------------------------------
+# Convexity
+# ---------------------------------------------------------------------------
+
+
+def test_convexity_rejects_reentrant_absorption():
+    """gemv1 feeds both gemv2 and an axpy that ALSO consumes gemv2's
+    output: absorbing the axpy into gemv1's group would put gemv2 on
+    a path that leaves and re-enters the group, so the planner must
+    leave gemv1 alone and let gemv2 take the axpy instead."""
+    spec = {"routines": [
+        {"blas": "gemv", "name": "mv1",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "x", "y": "x"},
+         "connections": {"out": ["mv2.x", "up.x"]}},
+        {"blas": "gemv", "name": "mv2",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "B", "y": "x"},
+         "connections": {"out": "up.y"}},
+        {"blas": "axpy", "name": "up", "scalars": {"alpha": 2.0},
+         "outputs": {"out": "z"}},
+    ]}
+    ir = lower(spec, upto="fuse")
+    by_nodes = {tuple(g.nodes): g for g in ir.groups}
+    assert (("mv1",) in by_nodes), ir.groups
+    assert by_nodes[("mv1",)].anchor is None
+    assert (("mv2", "up") in by_nodes), ir.groups
+    assert by_nodes[("mv2", "up")].anchor == "mv2"
+    # and the split program still computes the right thing
+    n = 192
+    a, b_, x = _sym(n, 15), _sym(n, 16), _vec(n, 17)
+    outs = {m: Program.from_spec(spec, mode=m)(A=a, B=b_, x=x)
+            for m in MODES}
+    ref = np.asarray(outs["reference"]["z"], np.float64)
+    scale = max(1.0, float(np.abs(ref).max()))
+    for m in ("dataflow", "nodataflow"):
+        np.testing.assert_allclose(np.asarray(outs[m]["z"], np.float64),
+                                   ref, rtol=1e-4, atol=1e-3 * scale)
+
+
+def test_level1_convexity_still_rejected():
+    """The incremental convexity check must still split a level-1 pair
+    whose only joining path runs through a non-absorbable middle node
+    (here: through a gemv's column operand, which is never fused)."""
+    spec = {"routines": [
+        {"blas": "scal", "name": "e1", "scalars": {"alpha": 3.0},
+         "inputs": {"x": "x"},
+         "connections": {"out": ["mv.x", "e2.x"]}},
+        {"blas": "gemv", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "y": "x"},
+         "connections": {"out": "e2.y"}},
+        {"blas": "axpy", "name": "e2", "scalars": {"alpha": 1.0},
+         "outputs": {"out": "z"}},
+    ]}
+    ir = lower(spec, upto="fuse")
+    by_nodes = {tuple(g.nodes): g for g in ir.groups}
+    assert ("e1",) in by_nodes, ir.groups       # e1+e2 would re-enter
+    assert ("mv", "e2") in by_nodes, ir.groups  # the anchor takes e2
+    n = 128
+    a, x = _sym(n, 18), _vec(n, 19)
+    outs = {m: Program.from_spec(spec, mode=m)(A=a, x=x)
+            for m in MODES}
+    ref = np.asarray(outs["reference"]["z"], np.float64)
+    scale = max(1.0, float(np.abs(ref).max()))
+    for m in ("dataflow", "nodataflow"):
+        np.testing.assert_allclose(np.asarray(outs[m]["z"], np.float64),
+                                   ref, rtol=1e-4, atol=1e-3 * scale)
+
+
+def test_anchored_group_ordered_after_outside_producer():
+    """Two independent anchors feeding one dot: the anchored group
+    {mv1, d} must execute AFTER mv2, whose output drives d's other
+    port — group order is a topo sort of the group quotient, not
+    first-member topo index."""
+    spec = {"routines": [
+        {"blas": "gemv", "name": "mv1",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "x", "y": "x"},
+         "connections": {"out": "d.x"}},
+        {"blas": "gemv", "name": "mv2",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "B", "x": "x", "y": "x"},
+         "connections": {"out": "d.y"}},
+        {"blas": "dot", "name": "d", "outputs": {"out": "s"}},
+    ]}
+    ir = lower(spec, upto="fuse")
+    order = [tuple(g.nodes) for g in ir.groups]
+    assert order.index(("mv2",)) < order.index(("mv1", "d")), order
+    n = 160
+    a, b_, x = _sym(n, 24), _sym(n, 25), _vec(n, 26)
+    outs = {m: Program.from_spec(spec, mode=m)(A=a, B=b_, x=x)
+            for m in MODES}
+    ref = np.float64(outs["reference"]["s"])
+    scale = max(1.0, abs(ref))
+    for m in ("dataflow", "nodataflow"):
+        np.testing.assert_allclose(np.float64(outs[m]["s"]), ref,
+                                   rtol=1e-4, atol=1e-3 * scale)
+
+
+def test_cross_group_fanout_schedules_acyclically():
+    """e fans out into the anchored group (d.y) AND into a second
+    anchor outside it (mv2.y). The planner absorbs the level-1 pair
+    {e, d} into mv1's group (legal: e is a sibling emitted in the
+    finish phase, its output still written for mv2) and the group
+    quotient must stay an executable DAG — mv2 runs after the
+    anchored group that produces both its operands."""
+    spec = {"routines": [
+        {"blas": "gemv", "name": "mv1",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "x", "y": "x"},
+         "connections": {"out": ["d.x", "mv2.x"]}},
+        {"blas": "scal", "name": "e", "scalars": {"alpha": 2.0},
+         "inputs": {"x": "w"},
+         "connections": {"out": ["mv2.y", "d.y"]}},
+        {"blas": "gemv", "name": "mv2",
+         "scalars": {"alpha": 1.0, "beta": 0.5},
+         "inputs": {"A": "B"}, "outputs": {"out": "v"}},
+        {"blas": "dot", "name": "d", "outputs": {"out": "s"}},
+    ]}
+    ir = lower(spec, upto="fuse")
+    order = [tuple(g.nodes) for g in ir.groups]
+    assert order == [("e", "mv1", "d"), ("mv2",)], ir.groups
+    assert ir.groups[0].anchor == "mv1"
+    n = 140
+    a, b_ = _sym(n, 27), _sym(n, 28)
+    x, w = _vec(n, 29), _vec(n, 30)
+    outs = {m: Program.from_spec(spec, mode=m)(A=a, B=b_, x=x, w=w)
+            for m in MODES}
+    for name in ("s", "v"):
+        ref = np.asarray(outs["reference"][name], np.float64)
+        scale = max(1.0, float(np.abs(ref).max()))
+        for m in ("dataflow", "nodataflow"):
+            np.testing.assert_allclose(
+                np.asarray(outs[m][name], np.float64), ref,
+                rtol=1e-4, atol=1e-3 * scale)
+
+
+# ---------------------------------------------------------------------------
+# Solver bodies + cost model
+# ---------------------------------------------------------------------------
+
+
+def test_cg_matvec_body_single_kernel(monkeypatch):
+    """The CG body's q = A p ; pq = p.q stage is one anchored kernel
+    in dataflow mode."""
+    from repro.solvers import specs
+    prog = Program.from_spec(specs.CG_MATVEC)
+    n = 173
+    a, p = _sym(n, 20), _vec(n, 21)
+    counter = _PallasCallCounter(monkeypatch)
+    out = prog(A=a, p=p)
+    assert counter.count == 1
+    q = np.asarray(a, np.float64) @ np.asarray(p, np.float64)
+    np.testing.assert_allclose(out["q"], q, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(out["pq"], np.asarray(p, np.float64) @ q,
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_cg_body_vector_traffic_reduction_meets_gate():
+    """The acceptance number: modeled HBM bytes for the CG iteration
+    body drop >= 25% on the avoidable vector traffic vs unfused (the
+    matrix stream is schedule-invariant and identical in both)."""
+    import repro.blas as blas
+    from repro.solvers import specs
+    shapes = {"A": (1024, 1024), "b": 1024, "x0": 1024}
+    fused = blas.compile(specs.CG_LOOP).cost_report(shapes)
+    unfused = blas.compile(specs.CG_LOOP,
+                           mode="nodataflow").cost_report(shapes)
+    assert fused.bytes < unfused.bytes
+    assert fused.matrix_bytes == unfused.matrix_bytes
+    assert fused.vector_bytes < unfused.vector_bytes
+    assert fused.vector_reduction >= 0.25
+    # the physical view is strictly smaller: q and r' are still
+    # written once because later loop stages consume them
+    assert 0 < fused.fused_savings_exact < fused.fused_savings
+    assert fused.bytes_exact > fused.bytes
+    assert fused.vector_reduction_exact < fused.vector_reduction
+    # loop solvers converge identically with the anchored bodies
+    n = 128
+    k = jax.random.PRNGKey(22)
+    mm = jax.random.normal(k, (n, n), jnp.float32)
+    a = mm @ mm.T / n + jnp.eye(n)
+    b_ = _vec(n, 23)
+    from repro.solvers import LoopProgram
+    res = LoopProgram(specs.CG_LOOP, max_iters=300).solve(
+        A=a, b=b_, x0=jnp.zeros(n, jnp.float32), tol=1e-6)
+    assert bool(res.converged)
+    np.testing.assert_allclose(
+        res.x, np.linalg.solve(np.asarray(a, np.float64),
+                               np.asarray(b_, np.float64)),
+        rtol=1e-3, atol=1e-3)

@@ -111,9 +111,18 @@ def test_power_iteration_mode_parity():
     np.testing.assert_allclose(results["dataflow"].aux["eigenvalue"],
                                results["nodataflow"].aux["eigenvalue"],
                                rtol=1e-5)
+    # the dataflow matvec is now the anchored streaming kernel, not
+    # the standalone gemv, so the trajectories are equal only up to
+    # accumulated f32 rounding — both must land on the same eigenpair
     np.testing.assert_allclose(results["dataflow"].x,
                                results["nodataflow"].x,
-                               rtol=1e-4, atol=1e-5)
+                               rtol=1e-3, atol=1e-3)
+    for m in MODES:
+        r = results[m]
+        lam = np.float64(r.aux["eigenvalue"])
+        x = np.asarray(r.x, np.float64)
+        resid = np.linalg.norm(np.asarray(A, np.float64) @ x - lam * x)
+        assert resid <= 1e-3 * abs(lam), (m, resid)
 
 
 # ---------------------------------------------------------------------------
