@@ -2,9 +2,11 @@
 and the dataflow-vs-nodataflow speedup of the on-device iteration loop.
 
 Covers both solver styles: the class-based SolverPrograms AND the
-JSON-described loop programs (cg_spec / jacobi_spec rows), so a
-regression in the spec-level path shows up next to its hand-written
-reference.
+JSON-described loop programs (cg_spec / jacobi_spec / bicgstab_spec /
+gmres_spec rows), so a regression in the spec-level path shows up next
+to its hand-written reference. A gmres_spec "iteration" is one
+restart of GMRES_BENCH_RESTART Arnoldi steps (three nested count
+loops over stacked Krylov state).
 
 CSV: solver,mode,n,iters,us_per_iter[,df_speedup]
 
@@ -19,12 +21,18 @@ JSON loop-spec bodies (registry cost models via
 `Executable.cost_report`), fused vs unfused — the level-2 anchored
 fusion groups show up here as per-iteration byte savings.
 
+**Compile-once gate**: every solve records the driver's trace_count;
+the script exits non-zero if any loop-spec row (GMRES's nested
+while-loops included) traces its body more than once — the
+per-iteration-retrace regression CI must never re-admit.
+
 `--smoke` runs tiny sizes with few iterations — the CI drift check.
 `--json out.json` persists all rows (the BENCH_solvers.json artifact).
 """
 from __future__ import annotations
 
 import json
+import sys
 import time
 
 import jax
@@ -41,6 +49,10 @@ except ImportError:               # run directly as a script
 
 DEFAULT_SIZES = (256, 1024, 4096)
 SMOKE_SIZES = (64, 128)
+GMRES_BENCH_RESTART = 8
+# one gmres "iteration" is a whole m-step restart cycle: cap the
+# restart count so the row costs roughly what the others do
+GMRES_MAX_RESTARTS = 5
 
 
 def _spd(n, seed=0):
@@ -87,6 +99,15 @@ CONFIGS = (
      _spd, _ops_cg_loop),
     ("bicgstab", lambda m, i: BiCGStab(mode=m, max_iters=i), _spd,
      _ops_linear),
+    ("bicgstab_spec",
+     lambda m, i: LoopProgram(specs.BICGSTAB_LOOP, mode=m,
+                              max_iters=i),
+     _spd, _ops_cg_loop),
+    ("gmres_spec",
+     lambda m, i: LoopProgram(
+         specs.gmres_loop(m=GMRES_BENCH_RESTART), mode=m,
+         max_iters=max(2, min(i, GMRES_MAX_RESTARTS))),
+     _spd, _ops_cg_loop),
     ("jacobi", lambda m, i: Jacobi(mode=m, max_iters=i),
      _diag_dominant, _ops_linear),
     ("jacobi_spec",
@@ -111,7 +132,8 @@ def _time_solve(solver, operands, iters=3):
 
 def bench_one(name, make_solver, make_A, make_ops, n, max_iters):
     """Times a full max_iters solve (tol=0 so no early exit) in both
-    modes; returns rows of (solver, mode, n, iters, us_per_iter)."""
+    modes; returns rows of (solver, mode, n, iters, us_per_iter,
+    trace_count)."""
     operands = make_ops(make_A, n)
     rows = []
     per_iter = {}
@@ -119,7 +141,8 @@ def bench_one(name, make_solver, make_A, make_ops, n, max_iters):
         solver = make_solver(mode, max_iters)
         us, iters = _time_solve(solver, operands)
         per_iter[mode] = us / max(iters, 1)
-        rows.append((name, mode, n, iters, per_iter[mode]))
+        rows.append((name, mode, n, iters, per_iter[mode],
+                     solver.trace_count))
     speedup = per_iter["nodataflow"] / per_iter["dataflow"]
     return rows, (name, n, speedup)
 
@@ -128,10 +151,16 @@ def modeled_bytes_rows(sizes):
     """Per-iteration modeled HBM bytes for the JSON loop-spec bodies,
     fused (dataflow, incl. level-2 anchored groups) vs unfused —
     delegated to fused_l2_bench so the numbers in BENCH_solvers.json
-    and BENCH_fused_l2.json come from one implementation."""
+    and BENCH_fused_l2.json come from one implementation. (The
+    bicgstab row charges the cond's full-step branch; the gmres row
+    charges one whole restart — inner count loops times their trip
+    counts.)"""
     rows = []
-    for name, loop_spec in (("cg_spec", specs.CG_LOOP),
-                            ("jacobi_spec", specs.JACOBI_LOOP)):
+    for name, loop_spec in (
+            ("cg_spec", specs.CG_LOOP),
+            ("jacobi_spec", specs.JACOBI_LOOP),
+            ("bicgstab_spec", specs.BICGSTAB_LOOP),
+            ("gmres_spec", specs.gmres_loop(m=GMRES_BENCH_RESTART))):
         for n in sizes:
             e = fused_l2_bench.bench_loop_body(name, loop_spec, n)
             rows.append({
@@ -145,16 +174,21 @@ def modeled_bytes_rows(sizes):
 
 def main(sizes=DEFAULT_SIZES, max_iters=20, json_path=None):
     print("solver,mode,n,iters,us_per_iter")
-    timing_rows, speedups = [], []
+    timing_rows, speedups, trace_violations = [], [], []
     for name, make_solver, make_A, make_ops in CONFIGS:
         for n in sizes:
             rows, sp = bench_one(name, make_solver, make_A, make_ops,
                                  n, max_iters)
-            for rname, mode, nn, iters, us in rows:
+            for rname, mode, nn, iters, us, tc in rows:
                 print(f"{rname},{mode},{nn},{iters},{us:.1f}")
                 timing_rows.append({"solver": rname, "mode": mode,
                                     "n": nn, "iters": iters,
-                                    "us_per_iter": us})
+                                    "us_per_iter": us,
+                                    "trace_count": tc})
+                if tc > 1:
+                    trace_violations.append(
+                        f"{rname} mode={mode} n={nn}: iteration body "
+                        f"traced {tc}x (must compile once)")
             speedups.append(sp)
     print()
     print("solver,n,df_speedup")
@@ -181,6 +215,12 @@ def main(sizes=DEFAULT_SIZES, max_iters=20, json_path=None):
             }, f, indent=2)
             f.write("\n")
         print(f"# wrote {json_path}")
+    if trace_violations:
+        print("\nTRACE-COUNT GATE FAILED (compile-once regression):",
+              file=sys.stderr)
+        for v in trace_violations:
+            print(f"  {v}", file=sys.stderr)
+        sys.exit(1)
     return speedups
 
 

@@ -38,17 +38,19 @@ from __future__ import annotations
 
 from . import functional as _functional
 from .builder import (BuilderError, InputRef, Port,  # noqa: F401
-                      ProgramBuilder, let, program, stage)
+                      ProgramBuilder, StateRef, cond, inner_loop, let,
+                      program, read, stage, store)
 from .executable import (CostReport, Executable, compile,  # noqa: F401
                          load)
-from .solvers import (bicgstab, cg, jacobi,  # noqa: F401
+from .solvers import (bicgstab, cg, gmres, jacobi,  # noqa: F401
                       power_iteration)
 
 __all__ = [
     "BuilderError", "CostReport", "Executable", "InputRef", "Port",
-    "ProgramBuilder", "api_table", "bicgstab", "cg", "compile",
-    "jacobi", "let", "load", "power_iteration", "program", "routines",
-    "stage",
+    "ProgramBuilder", "StateRef", "api_table", "bicgstab", "cg",
+    "compile", "cond", "gmres", "inner_loop", "jacobi", "let", "load",
+    "power_iteration", "program", "read", "routines", "stage",
+    "store",
 ]
 
 api_table = _functional.api_table

@@ -27,6 +27,23 @@ feedback=..., stop=..., solution=...)` — stage lists accept raw stage
 dicts, `blas.let(alpha="rz / pq")`, and `blas.stage(prog, ...)` where
 `prog` is a raw spec dict or another ProgramBuilder.
 
+Grammar-v2 loop handles make the full iterate grammar reachable
+fluently:
+
+    v = b.state("V", slots=21, of="vector", slot0="v0")   # a stack
+    b.state("x", init="x0")                               # StateRefs
+    b.feedback(x="x_next")              # accumulates edges for iterate
+    b.cond("snorm <= threshold", then=[...], orelse=[...])
+    b.inner_loop(counter="j", state={...}, body=[
+        blas.read("vj", v, "j"), ...,
+        blas.store(v, "j + 1", "vnext"),
+    ], count=20, yields={"Vb": v})
+
+`b.cond(...)` / `b.inner_loop(...)` / `blas.read` / `blas.store`
+return stage dicts for body lists; `b.state(...)` / `b.feedback(...)`
+accumulate, and a later `b.iterate(body=..., stop=...)` picks them up
+without repeating the mappings.
+
 Round-trip guarantee: `ProgramBuilder.from_spec(raw)` keeps the raw
 form verbatim (which defaults were implicit, bare-number scalars,
 string vs list connection targets), so `from_spec(x).to_spec()` is
@@ -81,12 +98,92 @@ class InputRef:
         return f"InputRef({self.name})"
 
 
+class StateRef:
+    """Handle to a declared loop state field (`b.state(...)`) — usable
+    wherever the JSON grammar expects the field's name (read/store
+    targets, feedback keys via kwargs, yields, solution sources)."""
+
+    __slots__ = ("name",)
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return f"StateRef({self.name})"
+
+    def __str__(self):
+        return self.name
+
+
+def _name_of(v) -> str:
+    return v.name if isinstance(v, StateRef) else v
+
+
 def let(**bindings) -> dict:
     """A scalar-update loop stage: `blas.let(alpha="rz / pq")`.
     Binding order is preserved (kwargs are ordered)."""
     if not bindings:
         raise BuilderError("let() needs at least one binding")
     return {"let": {n: e for n, e in bindings.items()}}
+
+
+def cond(pred: str, then, orelse=None) -> dict:
+    """A conditional loop stage: `blas.cond("snorm <= threshold",
+    then=[...], orelse=[...])`. Branch lists accept the same stage
+    forms as any body list."""
+    c = {"if": pred, "then": [_as_stage(s) for s in then]}
+    if orelse:
+        c["else"] = [_as_stage(s) for s in orelse]
+    return {"cond": c}
+
+
+def read(name: str, source, slot) -> dict:
+    """A slot-read loop stage: `blas.read("vj", V, "j")` binds `name`
+    to slot `slot` of `source` (a stack StateRef or env value name)."""
+    return {"read": {"name": name, "from": _name_of(source),
+                     "slot": slot}}
+
+
+def store(into, slot, value: str, at=None) -> dict:
+    """A slot-store loop stage: `blas.store(V, "j + 1", "vnext")`;
+    with `at`, writes scalar `value` at element `at` of the slot."""
+    s = {"into": _name_of(into), "slot": slot, "value": value}
+    if at is not None:
+        s["at"] = at
+    return {"store": s}
+
+
+def _state_entry(v) -> dict:
+    if isinstance(v, Mapping):
+        return dict(v)
+    return {"init": v}
+
+
+def inner_loop(*, state: Mapping, body, counter: Optional[str] = None,
+               feedback: Optional[Mapping] = None, count=None,
+               stop: Optional[Mapping] = None,
+               yields: Optional[Mapping] = None) -> dict:
+    """A nested-iterate loop stage (GMRES's m-cycle). Exactly one of
+    `count` (a trip count — int or expression) or `stop` (a metric
+    while-rule mapping with max_iters) is required; `yields` exports
+    final inner state into the enclosing environment."""
+    if (count is None) == (stop is None):
+        raise BuilderError(
+            "inner_loop() needs exactly one of count= (trip count) or "
+            "stop= (metric while rule)")
+    it: dict = {}
+    if counter is not None:
+        it["counter"] = counter
+    it["state"] = {n: _state_entry(v) for n, v in dict(state).items()}
+    it["body"] = [_as_stage(s) for s in body]
+    if feedback:
+        it["feedback"] = {k: _name_of(v)
+                          for k, v in dict(feedback).items()}
+    it["while"] = {"count": count} if count is not None else dict(stop)
+    if yields:
+        it["yield"] = {k: _name_of(v)
+                       for k, v in dict(yields).items()}
+    return {"iterate": it}
 
 
 def stage(program, inputs: Optional[Mapping] = None,
@@ -133,13 +230,16 @@ class ProgramBuilder:
         self._by_name: dict = {}         # routine name -> raw dict
         self._operands: dict = {}        # loop programs only
         self._setup: list = []
+        self._state: dict = {}           # accumulated b.state(...) fields
+        self._feedback: dict = {}        # accumulated b.feedback(...) edges
         self._iterate: Optional[dict] = None
 
     # -- introspection ---------------------------------------------------
 
     @property
     def is_loop(self) -> bool:
-        return bool(self._operands) or self._iterate is not None
+        return bool(self._operands) or bool(self._state) \
+            or bool(self._feedback) or self._iterate is not None
 
     def __repr__(self):
         kind = "loop" if self.is_loop else "dataflow"
@@ -339,25 +439,116 @@ class ProgramBuilder:
         self._setup.append(_as_stage(stage_raw, inputs, outputs))
         return self
 
-    def iterate(self, *, state: Mapping, body, feedback: Mapping,
+    def state(self, name: str, init=None, *, kind: Optional[str] = None,
+              slots: Optional[int] = None, of: Optional[str] = None,
+              len: Optional[int] = None, like: Optional[str] = None,
+              slot0: Optional[str] = None,
+              from_: Optional[str] = None) -> StateRef:
+        """Declare one loop state field ahead of `iterate()`; returns
+        a StateRef handle. Regular fields take `init=` (an expression
+        or bare env name); stacks take `slots=`/`of=` plus one of
+        `len=`/`like=`/`slot0=`/`from_=` (see docs/spec.md)."""
+        self._want_loop("state fields")
+        if not isinstance(name, str) or not spec_mod._IDENT.match(name):
+            raise BuilderError(
+                f"state name must be an identifier, got {name!r}")
+        if name in self._state:
+            raise BuilderError(f"duplicate state field {name!r}")
+        is_stack = kind == "stack" or slots is not None
+        if is_stack:
+            if init is not None:
+                raise BuilderError(
+                    f"state {name!r}: stacks preallocate — use "
+                    f"slot0= (seed slot 0) or from_= (adopt a "
+                    f"buffer), not init=")
+            if slot0 is not None and from_ is not None:
+                raise BuilderError(
+                    f"state {name!r}: slot0= and from_= conflict "
+                    f"(from_ adopts a whole buffer, slot0 seeds a "
+                    f"zeros one)")
+            field: dict = {"kind": "stack", "slots": slots, "of": of}
+            if len is not None:
+                field["len"] = len
+            if like is not None:
+                field["like"] = _name_of(like)
+            if slot0 is not None:
+                field["init"] = {"slot0": _name_of(slot0)}
+            if from_ is not None:
+                field["init"] = {"from": _name_of(from_)}
+        else:
+            if init is None:
+                raise BuilderError(
+                    f"state {name!r}: needs init= (or slots=/of= for "
+                    f"a stack)")
+            field = {"init": init}
+            if kind is not None:
+                field["kind"] = kind
+        self._state[name] = field
+        return StateRef(name)
+
+    def feedback(self, **edges) -> "ProgramBuilder":
+        """Accumulate feedback edges (`b.feedback(x="x_next")`) for a
+        later `iterate()` call that omits `feedback=`."""
+        self._want_loop("feedback edges")
+        for fname, src in edges.items():
+            self._feedback[fname] = _name_of(src)
+        return self
+
+    def cond(self, pred: str, then, orelse=None) -> dict:
+        """Build a conditional stage dict for a body list — sugar for
+        module-level `blas.cond`."""
+        return cond(pred, then, orelse)
+
+    def inner_loop(self, **kw) -> dict:
+        """Build a nested-iterate stage dict for a body list — sugar
+        for module-level `blas.inner_loop`."""
+        return inner_loop(**kw)
+
+    def iterate(self, *, state: Optional[Mapping] = None, body,
+                feedback: Optional[Mapping] = None,
                 stop: Mapping, solution: Optional[Mapping] = None
                 ) -> "ProgramBuilder":
         """Declare the loop: state fields with init expressions, the
         staged body, feedback edges, the `while` stop rule, and the
-        solution mapping. See docs/spec.md for the JSON semantics."""
+        solution mapping. `state`/`feedback` default to what
+        `b.state(...)` / `b.feedback(...)` accumulated. See
+        docs/spec.md for the JSON semantics."""
         self._want_loop("an iterate section")
         if self._iterate is not None:
             raise BuilderError("iterate() may only be called once")
+        if state is None:
+            state_map = dict(self._state)
+        elif self._state:
+            raise BuilderError(
+                "state was declared via b.state(...) AND passed to "
+                "iterate(state=...); use one or the other")
+        else:
+            state_map = {n: _state_entry(v)
+                         for n, v in dict(state).items()}
+        if not state_map:
+            raise BuilderError(
+                "iterate() needs state fields (state= or prior "
+                "b.state(...) calls)")
+        if feedback is None:
+            feedback_map = dict(self._feedback)
+        elif self._feedback:
+            raise BuilderError(
+                "feedback was declared via b.feedback(...) AND passed "
+                "to iterate(feedback=...); use one or the other")
+        else:
+            feedback_map = {k: _name_of(v)
+                            for k, v in dict(feedback).items()}
         it = {
             "state": {n: (dict(v) if isinstance(v, Mapping)
                           else {"init": v})
-                      for n, v in dict(state).items()},
+                      for n, v in state_map.items()},
             "body": [_as_stage(s) for s in body],
-            "feedback": dict(feedback),
+            "feedback": feedback_map,
             "while": dict(stop),
         }
         if solution is not None:
-            it["solution"] = dict(solution)
+            it["solution"] = {k: _name_of(v)
+                              for k, v in dict(solution).items()}
         self._iterate = it
         return self
 
@@ -367,11 +558,11 @@ class ProgramBuilder:
         """The raw JSON-able spec dict (deep copy — mutating it cannot
         skew the builder, and vice versa)."""
         raw = dict(self._top)
-        if self._iterate is not None or self._operands:
+        if self.is_loop:
             if self._iterate is None:
                 raise BuilderError(
-                    "loop builder has operands but no iterate() "
-                    "section")
+                    "loop builder has operands/state but no "
+                    "iterate() section")
             raw["operands"] = dict(self._operands)
             if self._setup:
                 raw["setup"] = copy.deepcopy(self._setup)
@@ -422,6 +613,8 @@ class ProgramBuilder:
         b._by_name = {}
         b._operands = {}
         b._setup = []
+        b._state = {}
+        b._feedback = {}
         b._iterate = None
 
         if spec_mod.is_loop_spec(raw):
@@ -444,13 +637,16 @@ class ProgramBuilder:
         return b
 
 
+_STAGE_TAGS = ("let", "program", "cond", "read", "store", "iterate")
+
+
 def _as_stage(s, inputs: Optional[Mapping] = None,
               outputs: Optional[Mapping] = None) -> dict:
     """Normalize one loop-stage argument to its raw dict form."""
     if isinstance(s, ProgramBuilder):
         return stage(s, inputs, outputs)
     if isinstance(s, Mapping):
-        if "let" in s or "program" in s:
+        if any(tag in s for tag in _STAGE_TAGS):
             if inputs or outputs:
                 raise BuilderError(
                     "inputs/outputs rebinding is only valid with a "
@@ -458,7 +654,8 @@ def _as_stage(s, inputs: Optional[Mapping] = None,
             return dict(s)
         return stage(s, inputs, outputs)   # bare program spec dict
     raise BuilderError(
-        f"loop stage must be a stage dict, spec dict, let(...), or "
+        f"loop stage must be a stage dict, spec dict, let(...), "
+        f"cond(...), read(...), store(...), inner_loop(...), or "
         f"ProgramBuilder, got {type(s).__name__}")
 
 

@@ -69,6 +69,8 @@ def _out_shape(rdef, blas: str, kind: str, sh: Mapping) -> tuple:
     if kind == R.OUT_SCALAR:
         return ()
     if kind == R.OUT_VEC:
+        if blas == "gemvt":                   # out follows Aᵀ's rows
+            return (sh["A"][1],)
         mats = [p for p, k in rdef.inputs.items() if k == R.MAT]
         if mats:
             return (sh[mats[0]][0],)
@@ -77,6 +79,8 @@ def _out_shape(rdef, blas: str, kind: str, sh: Mapping) -> tuple:
     # OUT_MAT
     if blas == "gemm":
         return (sh["A"][0], sh["B"][1])
+    if blas == "transpose":
+        return (sh["A"][1], sh["A"][0])
     mats = [p for p, k in rdef.inputs.items() if k == R.MAT]
     return sh[mats[0]]
 
@@ -460,32 +464,105 @@ class Executable:
                         f"{oname!r} (a {okind})")
                 env[oname] = _norm_shape(shapes[oname])
 
-        def walk(stages, scope):
+        def field_shape(f, env):
+            if not f.is_stack:
+                bare = f.init.bare_name
+                return env[bare] if bare is not None else ()
+            if f.source is not None:
+                src = env[f.source]
+                return (f.slots,) + tuple(src[1:])
+            if f.of == "scalar":
+                return (f.slots,)
+            if f.length is not None:
+                return (f.slots, f.length)
+            proto = f.like if f.like is not None else f.slot0
+            return (f.slots,) + tuple(env[proto])
+
+        def trip_count(stop):
+            from repro.core.spec import CountRule
+            if isinstance(stop, CountRule):
+                # a literal count is static; a dynamic expression is
+                # conservatively charged once
+                return (int(stop.count.ast[1])
+                        if stop.count.ast[0] == "num" else 1)
+            return stop.max_iters
+
+        def walk(stages, scope, env):
             rows, savings, exact, mat_bytes = [], 0, 0, 0
             for cs in stages:
-                if cs.is_let:
-                    for n, _ in cs.stage.bindings:
-                        env[n] = ()
-                    continue
-                inner = {pub: env[src] for pub, src in cs.inputs.items()}
-                r, (s, se), mb, outs = _program_cost(
-                    cs.ir, inner, scope=f"{scope}{cs.ir.spec.name}.")
-                rows.extend(r)
-                savings += s
-                exact += se
-                mat_bytes += mb
-                for pub, dst in cs.outputs.items():
-                    env[dst] = outs[pub]
+                if cs.tag == "let":
+                    for n, e in cs.stage.bindings:
+                        bare = e.bare_name
+                        env[n] = (env[bare] if bare is not None
+                                  else ())
+                elif cs.tag == "read":
+                    st = cs.stage
+                    env[st.name] = tuple(env[st.source][1:])
+                elif cs.tag == "store":
+                    pass
+                elif cs.tag == "cond":
+                    # per-iteration totals charge the costlier branch
+                    # (for BiCGStab: the full step, not the early
+                    # exit) — branch-common outputs share shapes
+                    results = []
+                    for label, sub in (("then", cs.then),
+                                       ("else", cs.orelse)):
+                        benv = dict(env)
+                        out = walk(sub, f"{scope}cond.{label}.", benv)
+                        results.append((out, benv))
+                    (t_out, t_env), (e_out, e_env) = results
+                    out, benv = ((e_out, e_env)
+                                 if sum(r[3] for r in e_out[0])
+                                 >= sum(r[3] for r in t_out[0])
+                                 else (t_out, t_env))
+                    rows.extend(out[0])
+                    savings += out[1]
+                    exact += out[2]
+                    mat_bytes += out[3]
+                    for n in cs.produced:
+                        env[n] = benv[n]
+                elif cs.tag == "loop":
+                    st = cs.stage
+                    benv = dict(env)
+                    if st.counter is not None:
+                        benv[st.counter] = ()
+                    for f in st.state:
+                        benv[f.name] = field_shape(f, benv)
+                    count = trip_count(st.stop)
+                    r, s, se, mb = walk(cs.body, f"{scope}loop.",
+                                        benv)
+                    rows.extend(
+                        (f"{label} x{count}", blas, fl * count,
+                         by * count) for label, blas, fl, by in r)
+                    savings += s * count
+                    exact += se * count
+                    mat_bytes += mb * count
+                    for outer_name, field in st.yields.items():
+                        env[outer_name] = benv[field]
+                else:
+                    inner = {pub: env[src]
+                             for pub, src in cs.inputs.items()}
+                    r, (s, se), mb, outs = _program_cost(
+                        cs.ir, inner,
+                        scope=f"{scope}{cs.ir.spec.name}.")
+                    rows.extend(r)
+                    savings += s
+                    exact += se
+                    mat_bytes += mb
+                    for pub, dst in cs.outputs.items():
+                        env[dst] = outs[pub]
             return rows, savings, exact, mat_bytes
 
-        setup_rows, _, _, _ = walk(lir.setup, "setup:")
-        # state fields adopt their init value's shape (bare names) or
-        # are scalars (composite expressions)
+        setup_rows, _, _, _ = walk(lir.setup, "setup:", env)
+        # state fields adopt their init value's shape (bare names),
+        # stacks preallocate (slots, ...) buffers, composite
+        # expressions are scalars; the driver-bound threshold rides
+        # along for cond predicates
         for f in lir.lspec.state:
-            bare = f.init.bare_name
-            env[f.name] = env[bare] if bare is not None else ()
+            env[f.name] = field_shape(f, env)
+        env["threshold"] = ()
         body_rows, body_savings, body_exact, body_mat = walk(
-            lir.body, "body:")
+            lir.body, "body:", env)
         flops = sum(r[2] for r in body_rows)
         nbytes = sum(r[3] for r in body_rows)
         return CostReport(program=self.name, mode=self.mode,

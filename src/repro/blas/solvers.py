@@ -1,15 +1,16 @@
 """Solver convenience functions, reimplemented on the unified
 `blas.compile` -> `Executable` path.
 
-`cg` and `jacobi` execute the pure-JSON loop specs (`solvers.specs
-.CG_LOOP` / `JACOBI_LOOP`) through `compile()`; `bicgstab` and
-`power_iteration` wrap the class-based SolverPrograms (their logic —
-the ‖s‖ early exit, the Rayleigh-quotient metric — is beyond the loop
-grammar) behind the same Executable handle. All return the standard
-`SolverResult`.
+`cg`, `jacobi`, `bicgstab`, and `gmres` execute the pure-JSON loop
+specs (`solvers.specs.CG_LOOP` / `JACOBI_LOOP` / `BICGSTAB_LOOP` /
+`gmres_loop(m)`) through `compile()`; `power_iteration` wraps the
+class-based SolverProgram (its Rayleigh-quotient metric is beyond the
+loop grammar) behind the same Executable handle. All return the
+standard `SolverResult`.
 
-Executables are memoized per (solver, mode, interpret, max_iters), so
-repeated calls reuse the jitted while-loop instead of re-tracing.
+Executables are memoized per (solver, config, mode, interpret,
+max_iters), so repeated calls reuse the jitted while-loop instead of
+re-tracing.
 """
 from __future__ import annotations
 
@@ -27,8 +28,9 @@ _EXECUTABLES: dict = {}
 
 def _loop_executable(name: str, raw, mode: str,
                      interpret: Optional[bool],
-                     max_iters: Optional[int]) -> Executable:
-    key = ("loop", name, mode, interpret, max_iters)
+                     max_iters: Optional[int], *,
+                     config: tuple = ()) -> Executable:
+    key = ("loop", name, config, mode, interpret, max_iters)
     exe = _EXECUTABLES.get(key)
     if exe is None:
         exe = _compile(raw, mode=mode, interpret=interpret,
@@ -81,11 +83,33 @@ def jacobi(A, b, x0=None, *, tol: float = 1e-6, max_iters: int = 1000,
 def bicgstab(A, b, x0=None, *, tol: float = 1e-6, max_iters: int = 500,
              mode: str = "dataflow",
              interpret: Optional[bool] = None) -> SolverResult:
-    """Stabilized bi-CG for general square systems — the class-based
-    SolverProgram (‖s‖ early exit under lax.cond) wrapped as an
-    Executable."""
-    exe = _solver_executable("bicgstab", iterative.BiCGStab, mode,
-                             interpret, max_iters)
+    """Stabilized bi-CG for general square systems — the
+    `specs.BICGSTAB_LOOP` JSON loop program: the ‖s‖ early exit is a
+    spec-level `cond` stage against the driver-bound `threshold`. The
+    class-based `solvers.BiCGStab` remains as its parity oracle."""
+    exe = _loop_executable("bicgstab", specs.BICGSTAB_LOOP, mode,
+                           interpret, max_iters)
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    return exe.run(A=A, b=b, x0=x0, tol=tol)
+
+
+def gmres(A, b, x0=None, *, tol: float = 1e-6, restart: int = 20,
+          max_restarts: int = 50, mode: str = "dataflow",
+          interpret: Optional[bool] = None) -> SolverResult:
+    """Restarted GMRES(m) for general square systems — the
+    `specs.gmres_loop(restart)` JSON loop program: nested count loops
+    over stacked Krylov state (Arnoldi / Givens sweep /
+    back-substitution), one compiled `lax.while_loop` nest per
+    `restart` value. `result.iterations` counts restarts; each runs
+    `restart` Arnoldi steps."""
+    if restart < 1:
+        raise ValueError(f"gmres: restart must be >= 1, got {restart}")
+    exe = _loop_executable(
+        "gmres", specs.gmres_loop(restart, max_restarts=max_restarts),
+        mode, interpret, max_restarts, config=(restart, max_restarts))
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
     return exe.run(A=A, b=b, x0=x0, tol=tol)
 
 

@@ -64,6 +64,9 @@ _KERNEL_CALL: Dict[str, Callable] = {
     "iamax": lambda s, i, kw: ops.iamax(i["x"], **kw),
     "gemv": lambda s, i, kw: ops.gemv(s["alpha"], i["A"], i["x"],
                                       s["beta"], i["y"]),
+    "gemvt": lambda s, i, kw: ops.gemvt(s["alpha"], i["A"], i["x"],
+                                        s["beta"], i["y"]),
+    "transpose": lambda s, i, kw: ops.transpose(i["A"]),
     "symv": lambda s, i, kw: ops.symv(s["alpha"], i["A"], i["x"],
                                       s["beta"], i["y"]),
     "ger": lambda s, i, kw: ops.ger(s["alpha"], i["x"], i["y"], i["A"]),

@@ -15,7 +15,18 @@ poison the `lax.while_loop` carry.
     expr := term (('+'|'-') term)*
     term := unary (('*'|'/') unary)*
     unary := '-' unary | atom
-    atom := NUMBER | IDENT | '(' expr ')'
+    atom := NUMBER | IDENT | FUNC '(' expr ')' | '(' expr ')'
+    FUNC := 'sqrt' | 'abs'
+
+Conditional stages (`cond` in a loop body) additionally need a boolean
+*predicate*; `parse_pred` accepts exactly one comparison between two
+arithmetic expressions:
+
+    pred := expr ('<=' | '<' | '>=' | '>' | '==' | '!=') expr
+
+Comparisons are only legal in predicates — `parse_expr` keeps
+rejecting them — and a predicate must be a comparison, so a scalar
+cannot be silently truthiness-tested.
 """
 from __future__ import annotations
 
@@ -38,7 +49,15 @@ def sdiv(a, b):
 _TOKEN = re.compile(
     r"\s*(?:(?P<num>\d+\.?\d*(?:[eE][+-]?\d+)?|\.\d+(?:[eE][+-]?\d+)?)"
     r"|(?P<name>[A-Za-z_][A-Za-z0-9_]*)"
+    r"|(?P<cmp><=|>=|==|!=|<|>)"
     r"|(?P<op>[-+*/()]))")
+
+# unary functions the grammar admits (no eval, no attribute access —
+# a fixed whitelist keeps the language closed)
+_FUNCS = {
+    "sqrt": jnp.sqrt,
+    "abs": jnp.abs,
+}
 
 
 def _tokenize(src: str):
@@ -53,6 +72,8 @@ def _tokenize(src: str):
             out.append(("num", float(m.group("num"))))
         elif m.group("name") is not None:
             out.append(("name", m.group("name")))
+        elif m.group("cmp") is not None:
+            out.append(("cmp", m.group("cmp")))
         else:
             out.append(("op", m.group("op")))
         pos = m.end()
@@ -82,6 +103,16 @@ class _Parser:
         self.i += 1
         return t
 
+    def compare(self):
+        node = self.expr()
+        t = self.peek()
+        if t is not None and t[0] == "cmp":
+            op = self.next()[1]
+            return ("cmp", op, node, self.expr())
+        raise ExprError(
+            f"predicate {self.src!r} must be a comparison "
+            f"(<=, <, >=, >, ==, !=) between two scalar expressions")
+
     def expr(self):
         node = self.term()
         while self.peek() in (("op", "+"), ("op", "-")):
@@ -107,6 +138,17 @@ class _Parser:
         if kind == "num":
             return ("num", val)
         if kind == "name":
+            if self.peek() == ("op", "("):
+                if val not in _FUNCS:
+                    raise ExprError(
+                        f"unknown function {val!r} in scalar expression "
+                        f"{self.src!r}; available: {sorted(_FUNCS)}")
+                self.next()
+                node = self.expr()
+                if self.next() != ("op", ")"):
+                    raise ExprError(
+                        f"unbalanced parentheses in {self.src!r}")
+                return ("call", val, node)
             return ("name", val)
         if (kind, val) == ("op", "("):
             node = self.expr()
@@ -123,9 +165,24 @@ def _collect_names(node, acc):
         acc.add(node[1])
     elif tag == "neg":
         _collect_names(node[1], acc)
+    elif tag == "call":
+        _collect_names(node[2], acc)
+    elif tag == "cmp":
+        _collect_names(node[2], acc)
+        _collect_names(node[3], acc)
     elif tag in ("+", "-", "*", "/"):
         _collect_names(node[1], acc)
         _collect_names(node[2], acc)
+
+
+_CMP = {
+    "<=": lambda a, b: a <= b,
+    "<": lambda a, b: a < b,
+    ">=": lambda a, b: a >= b,
+    ">": lambda a, b: a > b,
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+}
 
 
 def _evaluate(node, env):
@@ -136,6 +193,11 @@ def _evaluate(node, env):
         return env[node[1]]
     if tag == "neg":
         return -_evaluate(node[1], env)
+    if tag == "call":
+        return _FUNCS[node[1]](_evaluate(node[2], env))
+    if tag == "cmp":
+        return _CMP[node[1]](_evaluate(node[2], env),
+                             _evaluate(node[3], env))
     a, b = _evaluate(node[1], env), _evaluate(node[2], env)
     if tag == "+":
         return a + b
@@ -186,6 +248,21 @@ def parse_expr(src) -> Expr:
     if p.peek() is not None:
         raise ExprError(
             f"trailing tokens after scalar expression {src!r}")
+    names = set()
+    _collect_names(node, names)
+    return Expr(src=src, ast=node, names=frozenset(names))
+
+
+def parse_pred(src) -> Expr:
+    """Parse one boolean predicate (exactly one comparison between two
+    scalar expressions); raises ExprError outside the grammar."""
+    if not isinstance(src, str):
+        raise ExprError(f"predicate must be a string, got "
+                        f"{type(src).__name__}")
+    p = _Parser(src)
+    node = p.compare()
+    if p.peek() is not None:
+        raise ExprError(f"trailing tokens after predicate {src!r}")
     names = set()
     _collect_names(node, names)
     return Expr(src=src, ast=node, names=frozenset(names))

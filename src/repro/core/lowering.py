@@ -34,7 +34,9 @@ from typing import Callable, List, Mapping, Optional, Tuple, Union
 from . import codegen, fusion, spec as spec_mod
 from .graph import (DataflowGraph, ProgramIO, check_port_kinds,
                     collect_io, topo_sort)
-from .spec import (LetStage, LoopSpec, ProgramStage, SpecError)
+from .spec import (CondStage, CountRule, InnerLoopStage, LetStage,
+                   LoopSpec, ProgramStage, ReadStage, SpecError,
+                   StopRule, StoreStage)
 
 # ---------------------------------------------------------------------------
 # ProgramIR + passes
@@ -219,17 +221,28 @@ def clear_cache() -> None:
 
 @dataclasses.dataclass(frozen=True)
 class CompiledStage:
-    """One lowered loop stage. For program stages, `inputs`/`outputs`
-    are fully-resolved maps between the inner program's public names
-    and loop-environment names (identity defaults applied)."""
-    stage: object                    # LetStage | ProgramStage
+    """One lowered loop stage, tagged by kind:
+
+    - ``program`` — `inputs`/`outputs` are fully-resolved maps between
+      the inner program's public names and loop-environment names
+      (identity defaults applied), `ir` the compiled program;
+    - ``cond`` — `then`/`orelse` are compiled branch stage tuples and
+      `produced` the (sorted) names both branches define, which are
+      the only names surviving past the cond;
+    - ``loop`` — a nested iterate; `body` is the compiled inner stage
+      tuple (state/stop/yields live on the InnerLoopStage itself);
+    - ``let`` / ``read`` / ``store`` — the parsed stage carries
+      everything.
+    """
+    stage: object
+    tag: str
     ir: Optional[ProgramIR] = None   # program stages only
     inputs: Optional[Mapping] = None     # program input -> env name
     outputs: Optional[Mapping] = None    # program output -> env name
-
-    @property
-    def is_let(self) -> bool:
-        return self.ir is None
+    then: Optional[Tuple] = None         # cond branches
+    orelse: Optional[Tuple] = None
+    produced: Optional[Tuple] = None     # cond: branch-common names
+    body: Optional[Tuple] = None         # inner loop compiled body
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,31 +268,204 @@ def _no_forward_ref(name, kinds, where):
             f"iterate.state")
 
 
-def _lower_stages(stages, kinds, where_prefix, *, mode, interpret):
+def _stack_kind(of: str) -> str:
+    return f"{of}-stack"
+
+
+# what a read along the leading axis of each env-value kind yields
+_READ_KINDS = {
+    "vector-stack": "vector",
+    "scalar-stack": "scalar",
+    "matrix": "vector",
+    "vector": "scalar",
+}
+
+
+def _check_scalar_expr(expr, kinds, where):
+    for n in sorted(expr.names):
+        _no_forward_ref(n, kinds, where)
+        if kinds[n] != "scalar":
+            raise SpecError(
+                f"{where}: expression {expr.src!r} uses {n!r} which "
+                f"is a {kinds[n]}, not a scalar")
+
+
+def _bind_single(name, kinds, produced, where):
+    if name in kinds:
+        raise SpecError(
+            f"{where}: binding {name!r} rebinds an existing name "
+            f"(loop values are single-assignment per iteration; only "
+            f"stacks mutate, via store)")
+    produced.add(name)
+
+
+def _state_kinds(state_fields, env_kinds, where_prefix):
+    """Infer/check the kind of every state field against the
+    environment its inits are evaluated in. Bare-name inits inherit
+    the referenced kind; composite expressions are scalar arithmetic;
+    stack fields check their slot0/like/from references."""
+    out = {}
+    for f in state_fields:
+        where = f"{where_prefix}.{f.name}"
+        if f.is_stack:
+            if f.slot0 is not None:
+                _no_forward_ref(f.slot0, env_kinds, f"{where}.init.slot0")
+                if env_kinds[f.slot0] != f.of:
+                    raise SpecError(
+                        f"{where}.init.slot0: {f.slot0!r} is a "
+                        f"{env_kinds[f.slot0]}, but the stack holds "
+                        f"{f.of} slots")
+            if f.like is not None:
+                _no_forward_ref(f.like, env_kinds, f"{where}.like")
+                if env_kinds[f.like] != "vector":
+                    raise SpecError(
+                        f"{where}.like: {f.like!r} is a "
+                        f"{env_kinds[f.like]}; the element-length "
+                        f"prototype must be a vector")
+            if f.source is not None:
+                _no_forward_ref(f.source, env_kinds, f"{where}.init.from")
+                want = (("matrix", "vector-stack") if f.of == "vector"
+                        else ("vector", "scalar-stack"))
+                if env_kinds[f.source] not in want:
+                    raise SpecError(
+                        f"{where}.init.from: {f.source!r} is a "
+                        f"{env_kinds[f.source]}; a {f.of} stack "
+                        f"adopts a {' or '.join(want)} buffer")
+            out[f.name] = _stack_kind(f.of)
+            continue
+        bare = f.init.bare_name
+        if bare is not None:
+            _no_forward_ref(bare, env_kinds, where)
+            inferred = env_kinds[bare]
+        else:
+            _check_scalar_expr(f.init, env_kinds, where)
+            inferred = "scalar"
+        if f.kind is not None and f.kind != inferred:
+            raise SpecError(
+                f"{where}: declared kind {f.kind!r} but init "
+                f"{f.init.src!r} is a {inferred}")
+        out[f.name] = inferred
+    return out
+
+
+def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
+                  stacks=frozenset(), in_cond=False):
     """Lower a stage list against an env of name -> kind, enforcing
     single-assignment, no forward references, and port-kind typing.
-    Mutates and returns `kinds`; returns (compiled stages, produced
-    names)."""
+    `stacks` names the innermost enclosing loop's stack state fields —
+    the only legal store targets. Mutates and returns `kinds`; returns
+    (compiled stages, produced names)."""
     compiled, produced = [], set()
     for i, st in enumerate(stages):
         where = f"{where_prefix}[{i}]"
         if isinstance(st, LetStage):
             for name, expr in st.bindings:
-                if name in kinds:
+                bare = expr.bare_name
+                if bare is not None:
+                    # a bare-name let aliases a value of ANY kind —
+                    # the spec-level way for a cond branch to pass a
+                    # vector through unchanged
+                    _no_forward_ref(bare, kinds, f"{where}.{name}")
+                    kind = kinds[bare]
+                else:
+                    _check_scalar_expr(expr, kinds, f"{where}.{name}")
+                    kind = "scalar"
+                _bind_single(name, kinds, produced, where)
+                kinds[name] = kind
+            compiled.append(CompiledStage(stage=st, tag="let"))
+            continue
+
+        if isinstance(st, ReadStage):
+            _no_forward_ref(st.source, kinds, f"{where}.read.from")
+            src_kind = kinds[st.source]
+            if src_kind not in _READ_KINDS:
+                raise SpecError(
+                    f"{where}.read.from: {st.source!r} is a "
+                    f"{src_kind}; reads slice stacks, matrices "
+                    f"(rows), and vectors (elements) along their "
+                    f"leading axis")
+            _check_scalar_expr(st.slot, kinds, f"{where}.read.slot")
+            _bind_single(st.name, kinds, produced,
+                         f"{where}.read.name")
+            kinds[st.name] = _READ_KINDS[src_kind]
+            compiled.append(CompiledStage(stage=st, tag="read"))
+            continue
+
+        if isinstance(st, StoreStage):
+            if in_cond:
+                raise SpecError(
+                    f"{where}.store: stores are not allowed inside "
+                    f"cond branches (branches are value-level; route "
+                    f"the value out and store unconditionally)")
+            if st.into not in stacks:
+                raise SpecError(
+                    f"{where}.store.into: {st.into!r} is not a stack "
+                    f"state field of the enclosing loop (stores "
+                    f"mutate the loop's own stacks; declared stacks: "
+                    f"{sorted(stacks)})")
+            _check_scalar_expr(st.slot, kinds, f"{where}.store.slot")
+            _no_forward_ref(st.value, kinds, f"{where}.store.value")
+            elem = _READ_KINDS[kinds[st.into]]
+            if st.at is not None:
+                if kinds[st.into] != "vector-stack":
                     raise SpecError(
-                        f"{where}: let binding {name!r} rebinds an "
-                        f"existing name (loop values are "
-                        f"single-assignment per iteration)")
-                for n in sorted(expr.names):
-                    _no_forward_ref(n, kinds, f"{where}.{name}")
-                    if kinds[n] != "scalar":
-                        raise SpecError(
-                            f"{where}.{name}: expression {expr.src!r} "
-                            f"uses {n!r} which is a {kinds[n]}, not a "
-                            f"scalar")
-                kinds[name] = "scalar"
-                produced.add(name)
-            compiled.append(CompiledStage(stage=st))
+                        f"{where}.store.at: element stores need a "
+                        f"vector stack, {st.into!r} is a "
+                        f"{kinds[st.into]}")
+                _check_scalar_expr(st.at, kinds, f"{where}.store.at")
+                if kinds[st.value] != "scalar":
+                    raise SpecError(
+                        f"{where}.store.value: an element store "
+                        f"writes a scalar, {st.value!r} is a "
+                        f"{kinds[st.value]}")
+            elif kinds[st.value] != elem:
+                raise SpecError(
+                    f"{where}.store.value: {st.value!r} is a "
+                    f"{kinds[st.value]}, but {st.into!r} holds "
+                    f"{elem} slots")
+            compiled.append(CompiledStage(stage=st, tag="store"))
+            continue
+
+        if isinstance(st, CondStage):
+            _check_scalar_expr(st.pred, kinds, f"{where}.cond.if")
+            branch_out = []
+            for label, sub in (("then", st.then), ("else", st.orelse)):
+                bkinds = dict(kinds)
+                bcomp, bprod = _lower_stages(
+                    sub, bkinds, f"{where}.cond.{label}",
+                    mode=mode, interpret=interpret, stacks=frozenset(),
+                    in_cond=True)
+                branch_out.append((bcomp, bprod, bkinds))
+            (then_c, then_p, then_k), (else_c, else_p, else_k) = \
+                branch_out
+            common = sorted(then_p & else_p)
+            if not common:
+                # branches are value-level (no stores, no nested
+                # loops), so a cond surviving nothing is pure waste —
+                # almost always a missing else or a branch-name typo
+                raise SpecError(
+                    f"{where}.cond: no name is produced by BOTH "
+                    f"branches (then: {sorted(then_p)}, else: "
+                    f"{sorted(else_p)}); only branch-common names "
+                    f"survive a cond, so this cond can have no "
+                    f"effect")
+            for n in common:
+                if then_k[n] != else_k[n]:
+                    raise SpecError(
+                        f"{where}.cond: {n!r} is a {then_k[n]} in "
+                        f"'then' but a {else_k[n]} in 'else'; a name "
+                        f"surviving the cond must have one kind")
+                kinds[n] = then_k[n]
+                produced.add(n)
+            compiled.append(CompiledStage(
+                stage=st, tag="cond", then=tuple(then_c),
+                orelse=tuple(else_c), produced=tuple(common)))
+            continue
+
+        if isinstance(st, InnerLoopStage):
+            compiled.append(_lower_inner_loop(
+                st, kinds, produced, where, mode=mode,
+                interpret=interpret, in_cond=in_cond))
             continue
 
         assert isinstance(st, ProgramStage)
@@ -304,7 +490,13 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret):
             _no_forward_ref(env_name, kinds,
                             f"{where} input {pub!r}")
             have = kinds[env_name]
-            if have != kind:
+            # a stack buffer is directly usable one level up: a stack
+            # of vectors is a (slots, n) matrix window, a stack of
+            # scalars is a (slots,) vector — how GMRES feeds its
+            # Krylov basis to gemv
+            stack_ok = (kind == "matrix" and have == "vector-stack") \
+                or (kind == "vector" and have == "scalar-stack")
+            if have != kind and not stack_ok:
                 if kind in ("vector", "matrix") and have == "scalar":
                     raise SpecError(
                         f"{where}: scalar value {env_name!r} cannot "
@@ -334,9 +526,85 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret):
             out_bind[pub] = env_name
             produced.add(env_name)
 
-        compiled.append(CompiledStage(stage=st, ir=ir, inputs=in_bind,
+        compiled.append(CompiledStage(stage=st, tag="program", ir=ir,
+                                      inputs=in_bind,
                                       outputs=out_bind))
     return tuple(compiled), produced
+
+
+def _lower_inner_loop(st: InnerLoopStage, kinds, produced, where, *,
+                      mode, interpret, in_cond) -> CompiledStage:
+    """Lower a nested iterate: inner state inits read the enclosing
+    environment, the inner body is lowered against enclosing env +
+    inner state (+ counter), and yields bind final inner state into
+    the enclosing environment."""
+    if in_cond:
+        raise SpecError(
+            f"{where}.iterate: nested loops are not allowed inside "
+            f"cond branches (branches are value-level)")
+    inner_kinds = dict(kinds)
+    if st.counter is not None:
+        if st.counter in inner_kinds:
+            raise SpecError(
+                f"{where}.iterate.counter: {st.counter!r} rebinds an "
+                f"existing name")
+        inner_kinds[st.counter] = "scalar"
+
+    skinds = _state_kinds(st.state, kinds, f"{where}.iterate.state")
+    for f in st.state:
+        if f.name in inner_kinds:
+            raise SpecError(
+                f"{where}.iterate.state.{f.name}: shadows an "
+                f"enclosing value (pick a fresh name; enclosing "
+                f"values stay readable inside the inner body)")
+    inner_kinds.update(skinds)
+
+    inner_stacks = frozenset(f.name for f in st.state if f.is_stack)
+    body, inner_produced = _lower_stages(
+        st.body, inner_kinds, f"{where}.iterate.body",
+        mode=mode, interpret=interpret, stacks=inner_stacks)
+
+    for fname, src in st.feedback.items():
+        fwhere = f"{where}.iterate.feedback.{fname}"
+        _no_forward_ref(src, inner_kinds, fwhere)
+        if inner_kinds[src] != skinds[fname]:
+            raise SpecError(
+                f"{fwhere}: cannot feed a {inner_kinds[src]} back "
+                f"into {skinds[fname]} state field {fname!r}")
+
+    stop = st.stop
+    if isinstance(stop, CountRule):
+        # the trip count is fixed at loop entry: enclosing scope only
+        _check_scalar_expr(stop.count, kinds,
+                           f"{where}.iterate.while.count")
+    else:
+        assert isinstance(stop, StopRule)
+        swhere = f"{where}.iterate.while"
+        if stop.metric not in inner_produced:
+            raise SpecError(
+                f"{swhere}.metric: {stop.metric!r} is not produced "
+                f"by the inner loop body")
+        if inner_kinds[stop.metric] != "scalar":
+            raise SpecError(
+                f"{swhere}.metric: {stop.metric!r} is a "
+                f"{inner_kinds[stop.metric]}, not a scalar")
+        _no_forward_ref(stop.init_metric, kinds, f"{swhere}.init")
+        if kinds[stop.init_metric] != "scalar":
+            raise SpecError(
+                f"{swhere}.init: {stop.init_metric!r} is a "
+                f"{kinds[stop.init_metric]}, not a scalar")
+        if isinstance(stop.scale, str):
+            _no_forward_ref(stop.scale, kinds, f"{swhere}.scale")
+            if kinds[stop.scale] != "scalar":
+                raise SpecError(
+                    f"{swhere}.scale: {stop.scale!r} is a "
+                    f"{kinds[stop.scale]}, not a scalar")
+
+    for outer_name, field in st.yields.items():
+        _bind_single(outer_name, kinds, produced,
+                     f"{where}.iterate.yield.{outer_name}")
+        kinds[outer_name] = skinds[field]
+    return CompiledStage(stage=st, tag="loop", body=body)
 
 
 def lower_loop(raw, *, mode: str = "dataflow",
@@ -351,34 +619,27 @@ def lower_loop(raw, *, mode: str = "dataflow",
     setup_kinds = dict(kinds)
 
     # state fields: bare-name inits inherit the referenced kind;
-    # composite expressions are scalar arithmetic over scalars
-    state_kinds = {}
-    for f in lspec.state:
-        where = f"iterate.state.{f.name}"
-        bare = f.init.bare_name
-        if bare is not None:
-            _no_forward_ref(bare, setup_kinds, where)
-            inferred = setup_kinds[bare]
-        else:
-            for n in sorted(f.init.names):
-                _no_forward_ref(n, setup_kinds, where)
-                if setup_kinds[n] != "scalar":
-                    raise SpecError(
-                        f"{where}: init expression {f.init.src!r} uses "
-                        f"{n!r} which is a {setup_kinds[n]}, not a "
-                        f"scalar")
-            inferred = "scalar"
-        if f.kind is not None and f.kind != inferred:
-            raise SpecError(
-                f"{where}: declared kind {f.kind!r} but init "
-                f"{f.init.src!r} is a {inferred}")
-        state_kinds[f.name] = inferred
+    # composite expressions are scalar arithmetic over scalars;
+    # stacks check their slot0/like/from references
+    state_kinds = _state_kinds(lspec.state, setup_kinds,
+                               "iterate.state")
 
     body_env = dict(setup_kinds)
     for sname, skind in state_kinds.items():
         body_env[sname] = skind
+    # the driver injects the stop threshold (tol * scale) into the
+    # body environment so cond predicates can express early exits
+    # like BiCGStab's ‖s‖ test; the name is reserved
+    if "threshold" in body_env:
+        raise SpecError(
+            "'threshold' is a reserved loop-body name (the driver "
+            "binds it to the stop threshold tol * scale); rename the "
+            "conflicting operand/setup value/state field")
+    body_env["threshold"] = "scalar"
+    stacks = frozenset(f.name for f in lspec.state if f.is_stack)
     body, produced = _lower_stages(lspec.body, body_env, "iterate.body",
-                                   mode=mode, interpret=interpret)
+                                   mode=mode, interpret=interpret,
+                                   stacks=stacks)
 
     for fname, src in lspec.feedback.items():
         where = f"iterate.feedback.{fname}"

@@ -248,6 +248,29 @@ register(RoutineDef(
 ))
 
 register(RoutineDef(
+    name="gemvt", level=2, scalars=("alpha", "beta"),
+    inputs={"A": MAT, "x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    # no anchored tier yet: the transposed schedule tiles the OUTPUT
+    # over A's columns, which the anchored emitter's (bm, 1) row
+    # blocks do not cover — see ROADMAP
+    kernel=lambda alpha, A, x, beta, y, **kw: ops.gemvt(
+        alpha, A, x, beta, y, **kw),
+    reference=lambda s, A, x, y: ref.gemvt(s["alpha"], A, x,
+                                           s["beta"], y),
+    cost=lambda sh: (2 * sh["A"][0] * sh["A"][1],
+                     _vbytes(sh["A"], sh["x"], sh["y"],
+                             (sh["A"][1],))),
+))
+
+register(RoutineDef(
+    name="transpose", level=2, scalars=(),
+    inputs={"A": MAT}, outputs={"out": OUT_MAT},
+    kernel=lambda A, **kw: ops.transpose(A, **kw),
+    reference=lambda s, A: ref.transpose(A),
+    cost=lambda sh: (0, 2 * 4 * sh["A"][0] * sh["A"][1]),
+))
+
+register(RoutineDef(
     name="ger", level=2, scalars=("alpha",),
     inputs={"x": VEC, "y": VEC, "A": MAT}, outputs={"out": OUT_MAT},
     kernel=lambda alpha, x, y, A, **kw: ops.ger(alpha, x, y, A),

@@ -49,7 +49,7 @@ from typing import Mapping, Optional, Tuple, Union
 import jax.numpy as jnp
 
 from . import routines as R
-from .expr import Expr, ExprError, parse_expr
+from .expr import Expr, ExprError, parse_expr, parse_pred
 
 _DTYPES = {
     "float32": jnp.float32,
@@ -288,9 +288,66 @@ def unparse(spec: ProgramSpec) -> dict:
     }
 
 
+def _unparse_state_field(f: "StateField") -> dict:
+    if f.is_stack:
+        field = {"kind": "stack", "slots": f.slots, "of": f.of}
+        if f.length is not None:
+            field["len"] = f.length
+        if f.like is not None:
+            field["like"] = f.like
+        if f.slot0 is not None:
+            field["init"] = {"slot0": f.slot0}
+        elif f.source is not None:
+            field["init"] = {"from": f.source}
+        return field
+    field = {"init": f.init.src}
+    if f.kind is not None:
+        field["kind"] = f.kind
+    return field
+
+
+def _unparse_stop(stop) -> dict:
+    if isinstance(stop, CountRule):
+        if stop.count.ast[0] == "num":
+            v = stop.count.ast[1]
+            return {"count": int(v) if float(v).is_integer() else v}
+        return {"count": stop.count.src}
+    return {"metric": stop.metric, "init": stop.init_metric,
+            "scale": stop.scale, "rtol": stop.rtol,
+            "max_iters": stop.max_iters}
+
+
 def _unparse_stage(stage) -> dict:
     if isinstance(stage, LetStage):
         return {"let": {n: e.src for n, e in stage.bindings}}
+    if isinstance(stage, CondStage):
+        c = {"if": stage.pred.src,
+             "then": [_unparse_stage(s) for s in stage.then]}
+        if stage.orelse:
+            c["else"] = [_unparse_stage(s) for s in stage.orelse]
+        return {"cond": c}
+    if isinstance(stage, ReadStage):
+        return {"read": {"name": stage.name, "from": stage.source,
+                         "slot": stage.slot.src}}
+    if isinstance(stage, StoreStage):
+        s = {"into": stage.into, "slot": stage.slot.src,
+             "value": stage.value}
+        if stage.at is not None:
+            s["at"] = stage.at.src
+        return {"store": s}
+    if isinstance(stage, InnerLoopStage):
+        it = {}
+        if stage.counter is not None:
+            it["counter"] = stage.counter
+        it["state"] = {f.name: _unparse_state_field(f)
+                       for f in stage.state}
+        it["body"] = [_unparse_stage(s) for s in stage.body]
+        if stage.feedback:
+            it["feedback"] = dict(stage.feedback)
+        it["while"] = _unparse_stop(stage.stop)
+        if stage.yields:
+            it["yield"] = dict(stage.yields)
+        return {"iterate": it}
     raw = {"program": dict(stage.raw_program)}
     if stage.inputs:
         raw["inputs"] = dict(stage.inputs)
@@ -308,20 +365,12 @@ def unparse_loop(lspec: "LoopSpec") -> dict:
     }
     if lspec.setup:
         raw["setup"] = [_unparse_stage(s) for s in lspec.setup]
-    state = {}
-    for f in lspec.state:
-        field = {"init": f.init.src}
-        if f.kind is not None:
-            field["kind"] = f.kind
-        state[f.name] = field
-    stop = {"metric": lspec.stop.metric, "init": lspec.stop.init_metric,
-            "scale": lspec.stop.scale, "rtol": lspec.stop.rtol,
-            "max_iters": lspec.stop.max_iters}
+    state = {f.name: _unparse_state_field(f) for f in lspec.state}
     raw["iterate"] = {
         "state": state,
         "body": [_unparse_stage(s) for s in lspec.body],
         "feedback": dict(lspec.feedback),
-        "while": stop,
+        "while": _unparse_stop(lspec.stop),
         "solution": dict(lspec.solution),
     }
     return raw
@@ -340,10 +389,30 @@ _IDENT = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
 class StateField:
     """One loop-carried value. `init` is an expression over operands
     and setup-produced values; a bare name may reference a vector or
-    matrix, a composite expression is scalar arithmetic."""
+    matrix, a composite expression is scalar arithmetic.
+
+    A field with `kind: "stack"` is a preallocated slot-indexed buffer
+    (GMRES's Krylov columns / Hessenberg entries): `slots` slots of
+    `of`-kind elements, read and written by `read`/`store` stages via
+    `dynamic_slice`/`dynamic_update_slice`. Element length of a vector
+    stack comes from `length` (static), `like`/`slot0` (a prototype
+    vector in scope), or `source` (adopt a whole `(slots, ...)` buffer
+    from an env value). Stack fields feed back automatically — the
+    buffer as mutated by the iteration's stores is the next carry."""
     name: str
-    init: Expr
+    init: Optional[Expr] = None
     kind: Optional[str] = None   # declared kind; inferred when None
+    # stack fields only
+    slots: Optional[int] = None
+    of: Optional[str] = None         # element kind: vector | scalar
+    length: Optional[int] = None     # static element length (vectors)
+    like: Optional[str] = None       # element-length prototype value
+    slot0: Optional[str] = None      # env value stored at slot 0
+    source: Optional[str] = None     # env value adopted as the buffer
+
+    @property
+    def is_stack(self) -> bool:
+        return self.kind == "stack"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -365,6 +434,68 @@ class ProgramStage:
     raw_program: Mapping   # the raw dict, kept for digest-keyed caching
     inputs: Mapping
     outputs: Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class CondStage:
+    """A conditional stage: `pred` (a validated comparison over the
+    loop env — the driver-provided `threshold` scalar included) picks
+    which branch's stages run, via `lax.cond`. Only names produced by
+    BOTH branches (with matching kinds) survive into the environment
+    after the cond; branch-local extras stay local."""
+    pred: Expr
+    then: Tuple     # stage list
+    orelse: Tuple   # stage list (may be empty)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadStage:
+    """Bind `name` to slot `slot` (a scalar index expression) of
+    `source`, sliced along the leading axis: a vector-stack slot is a
+    vector, a scalar-stack slot is a scalar, a matrix row is a vector,
+    a vector element is a scalar."""
+    name: str
+    source: str
+    slot: Expr
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreStage:
+    """Write `value` into slot `slot` of stack state field `into`
+    (`dynamic_update_slice`). With `at`, write a scalar into element
+    `at` of a vector-stack slot instead of replacing the whole slot.
+    Stores mutate the stack within the iteration — the only exemption
+    from single-assignment — and the mutated buffer is what feeds
+    back."""
+    into: str
+    slot: Expr
+    value: str
+    at: Optional[Expr] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CountRule:
+    """Inner-loop stop rule: run exactly `count` iterations. `count`
+    is a scalar expression over the enclosing environment (usually a
+    literal — GMRES's restart length m), evaluated once at loop
+    entry."""
+    count: Expr
+
+
+@dataclasses.dataclass(frozen=True)
+class InnerLoopStage:
+    """A nested `iterate` inside a loop body: its own state (stacks
+    included), staged body, feedback edges, and stop rule — lowered to
+    a `lax.while_loop` inside the enclosing loop's `lax.while_loop`.
+    `counter` (optional) names the int32 iteration index in the inner
+    body's scope; `yields` exports final inner-state fields into the
+    enclosing environment."""
+    counter: Optional[str]
+    state: Tuple                  # (StateField, ...)
+    body: Tuple                   # stage list
+    feedback: Mapping[str, str]
+    stop: object                  # CountRule | StopRule
+    yields: Mapping[str, str]     # enclosing env name -> state field
 
 
 @dataclasses.dataclass(frozen=True)
@@ -422,15 +553,36 @@ def _parse_expr(src, where) -> Expr:
         raise SpecError(f"{where}: {e}") from None
 
 
+def _parse_pred(src, where) -> Expr:
+    try:
+        return parse_pred(src)
+    except ExprError as e:
+        raise SpecError(f"{where}: {e}") from None
+
+
+STAGE_KINDS = ("let", "program", "cond", "read", "store", "iterate")
+
+
+def _parse_stages(raw_list, where, *, dtype_name):
+    if not isinstance(raw_list, (list, tuple)):
+        raise SpecError(
+            f"{where}: expected a stage list, got {type(raw_list).__name__}")
+    return tuple(
+        _parse_stage(s, f"{where}[{i}]", dtype_name=dtype_name)
+        for i, s in enumerate(raw_list))
+
+
 def _parse_stage(raw, where, *, dtype_name):
     if not isinstance(raw, Mapping):
         raise SpecError(f"{where}: stage must be a mapping, got {raw!r}")
-    has_let, has_prog = "let" in raw, "program" in raw
-    if has_let == has_prog:
+    tags = [k for k in STAGE_KINDS if k in raw]
+    if len(tags) != 1:
         raise SpecError(
-            f"{where}: stage must have exactly one of 'let' or "
-            f"'program', got keys {sorted(raw)}")
-    if has_let:
+            f"{where}: stage must have exactly one of "
+            f"{'/'.join(STAGE_KINDS)}, got keys {sorted(raw)}")
+    tag = tags[0]
+
+    if tag == "let":
         unknown = set(raw) - {"let"}
         if unknown:
             raise SpecError(f"{where}: unknown stage keys {sorted(unknown)}")
@@ -441,6 +593,79 @@ def _parse_stage(raw, where, *, dtype_name):
             for n, e in raw["let"].items())
         return LetStage(bindings=bindings)
 
+    if tag == "cond":
+        unknown = set(raw) - {"cond"}
+        if unknown:
+            raise SpecError(f"{where}: unknown stage keys {sorted(unknown)}")
+        c = raw["cond"]
+        if not isinstance(c, Mapping):
+            raise SpecError(f"{where}.cond: must be a mapping")
+        unknown = set(c) - {"if", "then", "else"}
+        if unknown:
+            raise SpecError(
+                f"{where}.cond: unknown keys {sorted(unknown)}")
+        if "if" not in c:
+            raise SpecError(f"{where}.cond.if: predicate is required")
+        pred = _parse_pred(c["if"], f"{where}.cond.if")
+        raw_then = c.get("then")
+        if not isinstance(raw_then, (list, tuple)) or not raw_then:
+            raise SpecError(
+                f"{where}.cond.then: must be a non-empty stage list")
+        then = _parse_stages(raw_then, f"{where}.cond.then",
+                             dtype_name=dtype_name)
+        orelse = _parse_stages(c.get("else", []), f"{where}.cond.else",
+                               dtype_name=dtype_name)
+        return CondStage(pred=pred, then=then, orelse=orelse)
+
+    if tag == "read":
+        unknown = set(raw) - {"read"}
+        if unknown:
+            raise SpecError(f"{where}: unknown stage keys {sorted(unknown)}")
+        r = raw["read"]
+        if not isinstance(r, Mapping):
+            raise SpecError(f"{where}.read: must be a mapping")
+        unknown = set(r) - {"name", "from", "slot"}
+        if unknown:
+            raise SpecError(
+                f"{where}.read: unknown keys {sorted(unknown)}")
+        for k in ("name", "from", "slot"):
+            if k not in r:
+                raise SpecError(f"{where}.read.{k}: required")
+        return ReadStage(
+            name=_parse_ident(r["name"], f"{where}.read.name"),
+            source=_parse_ident(r["from"], f"{where}.read.from"),
+            slot=_parse_expr(r["slot"], f"{where}.read.slot"))
+
+    if tag == "store":
+        unknown = set(raw) - {"store"}
+        if unknown:
+            raise SpecError(f"{where}: unknown stage keys {sorted(unknown)}")
+        s = raw["store"]
+        if not isinstance(s, Mapping):
+            raise SpecError(f"{where}.store: must be a mapping")
+        unknown = set(s) - {"into", "slot", "value", "at"}
+        if unknown:
+            raise SpecError(
+                f"{where}.store: unknown keys {sorted(unknown)}")
+        for k in ("into", "slot", "value"):
+            if k not in s:
+                raise SpecError(f"{where}.store.{k}: required")
+        at = s.get("at")
+        return StoreStage(
+            into=_parse_ident(s["into"], f"{where}.store.into"),
+            slot=_parse_expr(s["slot"], f"{where}.store.slot"),
+            value=_parse_ident(s["value"], f"{where}.store.value"),
+            at=(None if at is None
+                else _parse_expr(at, f"{where}.store.at")))
+
+    if tag == "iterate":
+        unknown = set(raw) - {"iterate"}
+        if unknown:
+            raise SpecError(f"{where}: unknown stage keys {sorted(unknown)}")
+        return _parse_inner_iterate(raw["iterate"], f"{where}.iterate",
+                                    dtype_name=dtype_name)
+
+    # tag == "program"
     unknown = set(raw) - {"program", "inputs", "outputs"}
     if unknown:
         raise SpecError(f"{where}: unknown stage keys {sorted(unknown)}")
@@ -464,6 +689,210 @@ def _parse_stage(raw, where, *, dtype_name):
                     f"environment name string, got {v!r}")
     return ProgramStage(program=pspec, raw_program=raw_prog,
                         inputs=ins, outputs=outs)
+
+
+def _parse_state_field(sname, sraw, where) -> StateField:
+    """One `state` entry: a regular loop-carried value (init
+    expression) or a `kind: "stack"` slot-indexed buffer."""
+    if isinstance(sraw, str):
+        sraw = {"init": sraw}
+    if not isinstance(sraw, Mapping):
+        raise SpecError(
+            f"{where}: state field must be an init string or a "
+            f"mapping, got {sraw!r}")
+    kind = sraw.get("kind")
+
+    if kind == "stack":
+        unknown = set(sraw) - {"kind", "slots", "of", "init", "len",
+                               "like"}
+        if unknown:
+            raise SpecError(f"{where}: unknown stack keys "
+                            f"{sorted(unknown)}")
+        slots = sraw.get("slots")
+        if not isinstance(slots, int) or isinstance(slots, bool) \
+                or slots <= 0:
+            raise SpecError(
+                f"{where}.slots: a stack needs a static positive slot "
+                f"count, got {slots!r}")
+        of = sraw.get("of")
+        if of not in ("vector", "scalar"):
+            raise SpecError(
+                f"{where}.of: stack element kind must be 'vector' or "
+                f"'scalar', got {of!r}")
+        length = sraw.get("len")
+        if length is not None and (not isinstance(length, int)
+                                   or isinstance(length, bool)
+                                   or length <= 0):
+            raise SpecError(
+                f"{where}.len: element length must be a static "
+                f"positive int, got {length!r}")
+        like = sraw.get("like")
+        if like is not None:
+            _parse_ident(like, f"{where}.like")
+        if of == "scalar" and (length is not None or like is not None):
+            raise SpecError(
+                f"{where}: 'len'/'like' only apply to vector stacks "
+                f"(scalar slots have no element length)")
+        slot0 = source = None
+        init = sraw.get("init")
+        if init is not None:
+            if not isinstance(init, Mapping) or \
+                    len(set(init) & {"slot0", "from"}) != 1 or \
+                    set(init) - {"slot0", "from"}:
+                raise SpecError(
+                    f"{where}.init: stack init must be "
+                    f"{{'slot0': name}} (zeros with slot 0 seeded) or "
+                    f"{{'from': name}} (adopt a whole (slots, ...) "
+                    f"buffer), got {init!r}")
+            if "slot0" in init:
+                slot0 = _parse_ident(init["slot0"],
+                                     f"{where}.init.slot0")
+            else:
+                source = _parse_ident(init["from"],
+                                      f"{where}.init.from")
+        if source is not None and (length is not None
+                                   or like is not None):
+            raise SpecError(
+                f"{where}: init.from adopts the whole buffer — "
+                f"'len'/'like' conflict with it")
+        if of == "vector" and length is None and like is None \
+                and slot0 is None and source is None:
+            raise SpecError(
+                f"{where}: a vector stack needs 'len', 'like', "
+                f"'init.slot0' or 'init.from' to fix its element "
+                f"length")
+        return StateField(name=sname, kind="stack", slots=slots,
+                          of=of, length=length, like=like,
+                          slot0=slot0, source=source)
+
+    if "init" not in sraw:
+        raise SpecError(f"{where}: needs an 'init' binding")
+    if kind is not None and kind not in OPERAND_KINDS:
+        raise SpecError(f"{where}: unknown kind {kind!r}")
+    unknown = set(sraw) - {"init", "kind"}
+    if unknown:
+        raise SpecError(f"{where}: unknown state keys {sorted(unknown)}")
+    return StateField(name=sname,
+                      init=_parse_expr(sraw["init"], f"{where}.init"),
+                      kind=kind)
+
+
+def _parse_state(raw_state, where) -> Tuple:
+    if not isinstance(raw_state, Mapping) or not raw_state:
+        raise SpecError(f"{where} must be a non-empty mapping")
+    fields = []
+    for sname, sraw in raw_state.items():
+        _parse_ident(sname, where)
+        fields.append(_parse_state_field(sname, sraw,
+                                         f"{where}.{sname}"))
+    return tuple(fields)
+
+
+def _parse_feedback(it, state, where):
+    """Validate feedback edges against the state fields; stacks feed
+    back automatically and may not appear. A loop needs at least one
+    feedback edge or one stack field to make progress."""
+    state_names = {f.name for f in state}
+    stacks = {f.name for f in state if f.is_stack}
+    feedback = dict(it.get("feedback", {}))
+    for fname, src in feedback.items():
+        if fname not in state_names:
+            raise SpecError(
+                f"{where}: unknown state field {fname!r}; "
+                f"declared state: {sorted(state_names)}")
+        if fname in stacks:
+            raise SpecError(
+                f"{where}.{fname}: stack state feeds back "
+                f"automatically (the buffer as mutated by the "
+                f"iteration's stores); remove the explicit edge")
+        if not isinstance(src, str) or not _IDENT.match(src):
+            raise SpecError(
+                f"{where}.{fname}: source must be an "
+                f"environment name, got {src!r}")
+    if not feedback and not stacks:
+        raise SpecError(
+            f"{where} is empty: a loop with no feedback edge "
+            f"computes the same iterate forever")
+    return feedback
+
+
+def _parse_inner_iterate(it, where, *, dtype_name) -> InnerLoopStage:
+    if not isinstance(it, Mapping):
+        raise SpecError(f"{where}: must be a mapping")
+    unknown = set(it) - {"counter", "state", "body", "feedback",
+                         "while", "yield"}
+    if unknown:
+        raise SpecError(f"{where}: unknown keys {sorted(unknown)} "
+                        f"(inner loops yield, they have no solution)")
+    counter = it.get("counter")
+    if counter is not None:
+        counter = _parse_ident(counter, f"{where}.counter")
+
+    state = _parse_state(it.get("state"), f"{where}.state")
+    state_names = {f.name for f in state}
+
+    raw_body = it.get("body")
+    if not isinstance(raw_body, (list, tuple)) or not raw_body:
+        raise SpecError(f"{where}.body must be a non-empty stage list")
+    body = _parse_stages(raw_body, f"{where}.body",
+                         dtype_name=dtype_name)
+
+    feedback = _parse_feedback(it, state, f"{where}.feedback")
+
+    raw_stop = it.get("while")
+    if not isinstance(raw_stop, Mapping):
+        raise SpecError(f"{where}.while stop rule is required")
+    if "count" in raw_stop:
+        unknown = set(raw_stop) - {"count"}
+        if unknown:
+            raise SpecError(
+                f"{where}.while: 'count' is a complete stop rule; "
+                f"unknown extra keys {sorted(unknown)}")
+        stop = CountRule(count=_parse_expr(raw_stop["count"],
+                                           f"{where}.while.count"))
+    else:
+        unknown = set(raw_stop) - {"metric", "init", "scale", "rtol",
+                                   "max_iters"}
+        if unknown:
+            raise SpecError(
+                f"{where}.while: unknown keys {sorted(unknown)}")
+        metric = raw_stop.get("metric")
+        if not isinstance(metric, str) or not _IDENT.match(metric):
+            raise SpecError(
+                f"{where}.while.metric must name a body-produced "
+                f"scalar (or use a 'count' rule)")
+        if "max_iters" not in raw_stop:
+            raise SpecError(
+                f"{where}.while.max_iters: an inner metric rule "
+                f"needs a static max_iters bound")
+        init_metric = raw_stop.get("init", metric)
+        _parse_ident(init_metric, f"{where}.while.init")
+        scale = raw_stop.get("scale", 1.0)
+        if isinstance(scale, str):
+            _parse_ident(scale, f"{where}.while.scale")
+        elif isinstance(scale, (int, float)):
+            scale = float(scale)
+        else:
+            raise SpecError(
+                f"{where}.while.scale must be an env value name or a "
+                f"number, got {scale!r}")
+        stop = StopRule(
+            metric=metric, init_metric=init_metric, scale=scale,
+            rtol=float(raw_stop.get("rtol", 1e-6)),
+            max_iters=int(raw_stop["max_iters"]))
+        if stop.max_iters <= 0:
+            raise SpecError(f"{where}.while.max_iters must be positive")
+
+    yields = dict(it.get("yield", {}))
+    for outer_name, src in yields.items():
+        _parse_ident(outer_name, f"{where}.yield")
+        if src not in state_names:
+            raise SpecError(
+                f"{where}.yield.{outer_name}: source {src!r} is not "
+                f"an inner state field (yields export the final inner "
+                f"state)")
+    return InnerLoopStage(counter=counter, state=state, body=body,
+                          feedback=feedback, stop=stop, yields=yields)
 
 
 def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
@@ -518,52 +947,20 @@ def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
     if unknown:
         raise SpecError(f"iterate: unknown keys {sorted(unknown)}")
 
-    raw_state = it.get("state")
-    if not isinstance(raw_state, Mapping) or not raw_state:
-        raise SpecError("iterate.state must be a non-empty mapping")
-    state = []
-    for sname, sraw in raw_state.items():
-        _parse_ident(sname, "iterate.state")
-        if sname in operands:
+    state = _parse_state(it.get("state"), "iterate.state")
+    for f in state:
+        if f.name in operands:
             raise SpecError(
-                f"iterate.state: {sname!r} shadows an operand")
-        if isinstance(sraw, str):
-            sraw = {"init": sraw}
-        if not isinstance(sraw, Mapping) or "init" not in sraw:
-            raise SpecError(
-                f"iterate.state.{sname}: needs an 'init' binding")
-        kind = sraw.get("kind")
-        if kind is not None and kind not in OPERAND_KINDS:
-            raise SpecError(
-                f"iterate.state.{sname}: unknown kind {kind!r}")
-        state.append(StateField(
-            name=sname,
-            init=_parse_expr(sraw["init"], f"iterate.state.{sname}.init"),
-            kind=kind))
-    state = tuple(state)
+                f"iterate.state: {f.name!r} shadows an operand")
     state_names = {f.name for f in state}
 
     raw_body = it.get("body")
     if not isinstance(raw_body, (list, tuple)) or not raw_body:
         raise SpecError("iterate.body must be a non-empty stage list")
-    body = tuple(
-        _parse_stage(s, f"iterate.body[{i}]", dtype_name=dtype_name)
-        for i, s in enumerate(raw_body))
+    body = _parse_stages(raw_body, "iterate.body",
+                         dtype_name=dtype_name)
 
-    feedback = dict(it.get("feedback", {}))
-    for fname, src in feedback.items():
-        if fname not in state_names:
-            raise SpecError(
-                f"iterate.feedback: unknown state field {fname!r}; "
-                f"declared state: {sorted(state_names)}")
-        if not isinstance(src, str) or not _IDENT.match(src):
-            raise SpecError(
-                f"iterate.feedback.{fname}: source must be an "
-                f"environment name, got {src!r}")
-    if not feedback:
-        raise SpecError(
-            "iterate.feedback is empty: a loop with no feedback edge "
-            "computes the same iterate forever")
+    feedback = _parse_feedback(it, state, "iterate.feedback")
 
     raw_stop = it.get("while")
     if not isinstance(raw_stop, Mapping):

@@ -1,10 +1,17 @@
-"""BLAS level-2 `gemv` (y' = alpha A x + beta y) as a Pallas TPU kernel.
+"""BLAS level-2 `gemv` (y' = alpha A x + beta y) as a Pallas TPU kernel,
+plus its transposed sibling `gemvt` (y' = alpha Aᵀ x + beta y).
 
 A is streamed through VMEM in (block_m, block_n) windows; x is staged
 as (block_n, 1) column windows so the inner product runs on the MXU.
 The grid is (M/bm, N/bn) with the N axis innermost: each output block
 accumulates across its row of A windows — the same
 window-at-a-time schedule an AIE gemv kernel uses in the paper.
+
+`gemvt` walks the same (block_m, block_n) A windows but with the
+output tiled over A's columns and the reduction running over A's row
+blocks — the block is transposed in-register, so Aᵀ never
+materializes in HBM. It exists for algorithms that project against a
+stored basis (GMRES's Gram-Schmidt correction w − Vᵀh).
 """
 from __future__ import annotations
 
@@ -66,3 +73,49 @@ def gemv(alpha, a, x, beta, y, *, block_m=DEFAULT_BLOCK_M,
     )(jnp.reshape(alpha, (1,)).astype(jnp.float32),
       jnp.reshape(beta, (1,)).astype(jnp.float32), ap, xp, yp)
     return out[:m, 0].astype(a.dtype)
+
+
+def _gemvt_kernel(alpha_ref, beta_ref, a_ref, x_ref, y_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = beta_ref[0] * y_ref[...].astype(jnp.float32)
+
+    # the (bm, bn) window is transposed in-register: one MXU inner
+    # product per A-row block, accumulating into the (bn, 1) output
+    o_ref[...] += alpha_ref[0] * jnp.dot(
+        a_ref[...].astype(jnp.float32).T,
+        x_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def gemvt(alpha, a, x, beta, y, *, block_m=DEFAULT_BLOCK_M,
+          block_n=DEFAULT_BLOCK_N, interpret=None):
+    """y' = alpha Aᵀ x + beta y for A (m, n), x (m,), y (n,)."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = a.shape
+    ap = pad_to(pad_to(a, block_m, axis=0), block_n, axis=1)
+    xp = pad_to(x, block_m, axis=0).reshape(-1, 1)
+    yp = pad_to(y, block_n, axis=0).reshape(-1, 1)
+    mp, np_ = ap.shape
+    # output tiles over A's columns (i), reduction over row blocks (j)
+    grid = (cdiv(np_, block_n), cdiv(mp, block_m))
+    out = pl.pallas_call(
+        _gemvt_kernel,
+        grid=grid,
+        in_specs=[
+            smem_scalar_spec(),
+            smem_scalar_spec(),
+            pl.BlockSpec((block_m, block_n), lambda i, j: (j, i)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        interpret=interpret,
+    )(jnp.reshape(alpha, (1,)).astype(jnp.float32),
+      jnp.reshape(beta, (1,)).astype(jnp.float32), ap, xp, yp)
+    return out[:n, 0].astype(a.dtype)

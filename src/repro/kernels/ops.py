@@ -21,12 +21,13 @@ from .decode_attention import decode_attention
 from .dot import asum, dot, iamax, nrm2
 from .ger import ger
 from .gemm import gemm, matmul
-from .gemv import gemv
+from .gemv import gemv, gemvt
 from .symv import symv
+from .transpose import transpose
 
 __all__ = [
     "axpy", "scal", "waxpby", "copy", "vmul", "rot", "dot", "asum",
-    "nrm2", "iamax", "gemv", "symv", "gemm",
+    "nrm2", "iamax", "gemv", "gemvt", "symv", "gemm", "transpose",
     "matmul", "axpydot", "axpydot_nodf", "gesummv", "atax", "bicgk",
     "ger",
     "mha", "decode_attention", "ref",

@@ -77,6 +77,18 @@ def gemv(alpha, a, x, beta, y):
     return (alpha * acc + beta * y.astype(jnp.float32)).astype(a.dtype)
 
 
+def gemvt(alpha, a, x, beta, y):
+    """y' = alpha * Aᵀ @ x + beta * y (transposed matvec: the
+    Gram-Schmidt correction w − Vᵀh in GMRES)."""
+    acc = jnp.dot(a.astype(jnp.float32).T, x.astype(jnp.float32))
+    return (alpha * acc + beta * y.astype(jnp.float32)).astype(a.dtype)
+
+
+def transpose(a):
+    """out = Aᵀ."""
+    return a.T
+
+
 def ger(alpha, x, y, a):
     """A' = alpha * x yᵀ + A (rank-1 update)."""
     return (alpha * jnp.outer(x, y) + a).astype(a.dtype)

@@ -1,0 +1,46 @@
+"""Matrix transpose as a Pallas TPU kernel.
+
+Registered so loop specs can move between the two natural layouts of a
+stacked buffer: GMRES accumulates Hessenberg COLUMNS (one gemv output
+per Arnoldi step, stored as stack slots = a (m, m+1) Hᵀ buffer) but
+the Givens sweep rotates ROWS — `transpose` bridges the two with one
+(block, block) window walk, each window transposed in-register and
+written to the mirrored grid position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .common import cdiv, default_interpret, pad_to, pl
+
+DEFAULT_BLOCK = 256
+
+
+def _transpose_kernel(a_ref, o_ref):
+    o_ref[...] = a_ref[...].astype(jnp.float32).T
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def transpose(a, *, block_m=DEFAULT_BLOCK, block_n=DEFAULT_BLOCK,
+              interpret=None):
+    """out = Aᵀ for A (m, n)."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = a.shape
+    bm = min(block_m, max(m, 1))
+    bn = min(block_n, max(n, 1))
+    ap = pad_to(pad_to(a, bm, axis=0), bn, axis=1)
+    mp, np_ = ap.shape
+    grid = (cdiv(mp, bm), cdiv(np_, bn))
+    out = pl.pallas_call(
+        _transpose_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.float32),
+        interpret=interpret,
+    )(ap)
+    return out[:n, :m].astype(a.dtype)

@@ -13,6 +13,5 @@ never leave the accelerator.
 """
 from .driver import LoopProgram, SolverProgram, SolverResult  # noqa: F401
 from .iterative import (BiCGStab, CG, Jacobi, PowerIteration,  # noqa: F401
-                        bicgstab, cg, cg_from_spec, jacobi,
-                        jacobi_from_spec, power_iteration)
+                        bicgstab, cg, jacobi, power_iteration)
 from . import specs  # noqa: F401

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from repro.core import lowering
 from repro.core.expr import sdiv as _sdiv  # noqa: F401  (re-export)
 from repro.core.runtime import Program
-from repro.core.spec import SpecError
+from repro.core.spec import CountRule, SpecError
 
 _TINY = 1e-30
 
@@ -227,29 +227,167 @@ class LoopProgram(SolverProgram):
 
     # -- spec-driven driver hooks ---------------------------------------
 
-    @staticmethod
-    def _run_stages(stages, env):
+    def _run_stages(self, stages, env):
         for cs in stages:
-            if cs.is_let:
+            if cs.tag == "let":
                 for name, expr in cs.stage.bindings:
                     env[name] = expr.evaluate(env)
-            else:
+            elif cs.tag == "program":
                 ins = {pub: env[src] for pub, src in cs.inputs.items()}
                 out = cs.ir.fn(ins)
                 for pub, dst in cs.outputs.items():
                     env[dst] = out[pub]
+            elif cs.tag == "read":
+                st = cs.stage
+                idx = jnp.asarray(st.slot.evaluate(env), jnp.int32)
+                env[st.name] = jax.lax.dynamic_index_in_dim(
+                    env[st.source], idx, axis=0, keepdims=False)
+            elif cs.tag == "store":
+                st = cs.stage
+                idx = jnp.asarray(st.slot.evaluate(env), jnp.int32)
+                buf, val = env[st.into], env[st.value]
+                if st.at is not None:
+                    at = jnp.asarray(st.at.evaluate(env), jnp.int32)
+                    env[st.into] = buf.at[idx, at].set(
+                        jnp.asarray(val, buf.dtype))
+                else:
+                    env[st.into] = buf.at[idx].set(
+                        jnp.asarray(val, buf.dtype))
+            elif cs.tag == "cond":
+                self._run_cond(cs, env)
+            else:                     # "loop": nested iterate
+                self._run_inner(cs, env)
         return env
+
+    def _run_cond(self, cs, env):
+        """One `lax.cond` stage: both branches return the names they
+        have in common (the lowered `produced` tuple); everything else
+        stays branch-local."""
+        pred = cs.stage.pred.evaluate(env)
+
+        def branch(stages):
+            def fn(_):
+                benv = self._run_stages(stages, dict(env))
+                return tuple(benv[n] for n in cs.produced)
+            return fn
+
+        vals = jax.lax.cond(pred, branch(cs.then), branch(cs.orelse),
+                            None)
+        env.update(zip(cs.produced, vals))
+
+    def _run_inner(self, cs, env):
+        """One nested iterate: its own `lax.while_loop` inside the
+        enclosing loop's body trace. Inner state initializes from the
+        enclosing environment; yields export final inner state."""
+        ispec = cs.stage
+        state = self._init_fields(ispec.state, env)
+        stop = ispec.stop
+
+        def step(k, st):
+            benv = dict(env)
+            benv.update(st)
+            if ispec.counter is not None:
+                benv[ispec.counter] = k
+            benv = self._run_stages(cs.body, benv)
+            return benv, self._next_state(ispec, st, benv)
+
+        if isinstance(stop, CountRule):
+            count = jnp.asarray(stop.count.evaluate(env), jnp.int32)
+
+            def cond_fn(carry):
+                k, _ = carry
+                return k < count
+
+            def body_fn(carry):
+                k, st = carry
+                _, st = step(k, st)
+                return (k + 1, st)
+
+            _, state = jax.lax.while_loop(cond_fn, body_fn,
+                                          (jnp.int32(0), state))
+        else:
+            scale = (env[stop.scale] if isinstance(stop.scale, str)
+                     else jnp.float32(stop.scale))
+            thr = jnp.float32(stop.rtol) * jnp.maximum(
+                jnp.asarray(scale, jnp.float32), _TINY)
+            res0 = jnp.asarray(env[stop.init_metric], jnp.float32)
+
+            def cond_fn(carry):
+                k, res, _ = carry
+                return jnp.logical_and(k < stop.max_iters, res > thr)
+
+            def body_fn(carry):
+                k, _, st = carry
+                benv, st = step(k, st)
+                return (k + 1,
+                        jnp.asarray(benv[stop.metric], jnp.float32),
+                        st)
+
+            _, _, state = jax.lax.while_loop(
+                cond_fn, body_fn, (jnp.int32(0), res0, state))
+
+        for outer_name, field in ispec.yields.items():
+            env[outer_name] = state[field]
+
+    def _make_stack(self, f, env):
+        """Preallocate one stack buffer: zeros (optionally slot 0
+        seeded), or a whole buffer adopted from the environment."""
+        dtype = self.lir.lspec.dtype
+        if f.source is not None:
+            buf = jnp.asarray(env[f.source], dtype)
+            if buf.shape[0] != f.slots:
+                raise ValueError(
+                    f"loop {self.name!r}: stack {f.name!r} adopts "
+                    f"{f.source!r} with leading dim {buf.shape[0]}, "
+                    f"but declares {f.slots} slots")
+            return buf
+        if f.of == "scalar":
+            buf = jnp.zeros((f.slots,), dtype)
+        else:
+            if f.length is not None:
+                length = f.length
+            else:
+                proto = f.like if f.like is not None else f.slot0
+                length = env[proto].shape[0]
+            buf = jnp.zeros((f.slots, length), dtype)
+        if f.slot0 is not None:
+            buf = buf.at[0].set(jnp.asarray(env[f.slot0], dtype))
+        return buf
+
+    def _init_fields(self, fields, env):
+        state = {}
+        for f in fields:
+            if f.is_stack:
+                state[f.name] = self._make_stack(f, env)
+            else:
+                bare = f.init.bare_name
+                state[f.name] = (env[bare] if bare is not None
+                                 else f.init.evaluate(env))
+        return state
+
+    @staticmethod
+    def _next_state(it, state, env):
+        """Next loop carry: explicit feedback edges, automatic
+        feedback for stacks (the buffer as mutated by the iteration's
+        stores), carry-over for the rest. `it` is anything with
+        `.state` fields and a `.feedback` map (LoopSpec or
+        InnerLoopStage)."""
+        out = {}
+        for f in it.state:
+            if f.is_stack:
+                out[f.name] = env[f.name]
+            elif f.name in it.feedback:
+                out[f.name] = env[it.feedback[f.name]]
+            else:
+                out[f.name] = state[f.name]
+        return out
 
     def _init_state(self, operands):
         env = self._run_stages(self.lir.setup, dict(operands))
         # loop-invariant setup values are closed over by the body trace
         # (they become implicit while_loop operands, not carry entries)
         self._setup_env = env
-        state = {}
-        for f in self.lir.lspec.state:
-            bare = f.init.bare_name
-            state[f.name] = (env[bare] if bare is not None
-                             else f.init.evaluate(env))
+        state = self._init_fields(self.lir.lspec.state, env)
         stop = self.lir.lspec.stop
         scale = (env[stop.scale] if isinstance(stop.scale, str)
                  else jnp.float32(stop.scale))
@@ -258,13 +396,13 @@ class LoopProgram(SolverProgram):
     def _step(self, operands, state, threshold):
         env = dict(self._setup_env)
         env.update(state)
+        # reserved name: cond predicates can express early exits
+        # against the driver's stop threshold (tol * scale)
+        env["threshold"] = threshold
         env = self._run_stages(self.lir.body, env)
         lspec = self.lir.lspec
-        new_state = {
-            f.name: (env[lspec.feedback[f.name]]
-                     if f.name in lspec.feedback else state[f.name])
-            for f in lspec.state}
-        return new_state, env[lspec.stop.metric]
+        return (self._next_state(lspec, state, env),
+                env[lspec.stop.metric])
 
     def _solution(self, state):
         return {pub: state[src]
@@ -312,25 +450,73 @@ class LoopProgram(SolverProgram):
         rtol = self.lir.lspec.stop.rtol if tol is None else tol
         return self._run_batched(operands, rtol, in_axes)
 
+    def _describe_stages(self, stages, label, lines, indent="  "):
+        for cs in stages:
+            if cs.tag == "let":
+                exprs = ", ".join(f"{n} = {e.src}"
+                                  for n, e in cs.stage.bindings)
+                lines.append(f"{indent}{label} let: {exprs}")
+            elif cs.tag == "program":
+                desc = Program.from_ir(cs.ir).describe()
+                lines.append(indent + desc.replace("\n", "\n" + indent))
+            elif cs.tag == "read":
+                st = cs.stage
+                lines.append(f"{indent}{label} read: {st.name} = "
+                             f"{st.source}[{st.slot.src}]")
+            elif cs.tag == "store":
+                st = cs.stage
+                at = f", {st.at.src}" if st.at is not None else ""
+                lines.append(f"{indent}{label} store: "
+                             f"{st.into}[{st.slot.src}{at}] = "
+                             f"{st.value}")
+            elif cs.tag == "cond":
+                lines.append(f"{indent}{label} cond: "
+                             f"if {cs.stage.pred.src}")
+                self._describe_stages(cs.then, "then", lines,
+                                      indent + "  ")
+                self._describe_stages(cs.orelse, "else", lines,
+                                      indent + "  ")
+            else:                     # nested iterate
+                st = cs.stage
+                stop = st.stop
+                if isinstance(stop, CountRule):
+                    src = stop.count.src
+                    if stop.count.ast[0] == "num" and \
+                            float(stop.count.ast[1]).is_integer():
+                        src = str(int(stop.count.ast[1]))
+                    rule = f"count {src}"
+                else:
+                    rule = (f"{stop.metric} <= rtol * {stop.scale!r} "
+                            f"(max {stop.max_iters})")
+                stacks = ", ".join(
+                    f"{f.name}[{f.slots}]" for f in st.state
+                    if f.is_stack)
+                lines.append(
+                    f"{indent}{label} inner loop"
+                    + (f" (counter {st.counter})" if st.counter
+                       else "")
+                    + f": {rule}"
+                    + (f" stacks: {stacks}" if stacks else ""))
+                self._describe_stages(cs.body, "inner", lines,
+                                      indent + "  ")
+
     def describe(self) -> str:
         """Stage-by-stage report: fusion plans of every compiled stage
-        program plus the scalar-expression stages."""
+        program, scalar-expression stages, conditionals, stack
+        reads/stores, and nested loops."""
         lspec = self.lir.lspec
         lines = [f"loop program {self.name!r} mode={self.mode} "
                  f"max_iters={self.max_iters} "
                  f"stop: {lspec.stop.metric} <= rtol * "
                  f"{lspec.stop.scale!r}"]
-        for label, stages in (("setup", self.lir.setup),
-                              ("body", self.lir.body)):
-            for cs in stages:
-                if cs.is_let:
-                    exprs = ", ".join(f"{n} = {e.src}"
-                                      for n, e in cs.stage.bindings)
-                    lines.append(f"  {label} let: {exprs}")
-                else:
-                    desc = Program.from_ir(cs.ir).describe()
-                    lines.append("  " + desc.replace("\n", "\n  "))
+        self._describe_stages(self.lir.setup, "setup", lines)
+        self._describe_stages(self.lir.body, "body", lines)
         feedback = ", ".join(f"{k} <- {v}"
                              for k, v in lspec.feedback.items())
-        lines.append(f"  feedback: {feedback}")
+        if feedback:
+            lines.append(f"  feedback: {feedback}")
+        stacks = ", ".join(f"{f.name}[{f.slots}]"
+                           for f in lspec.state if f.is_stack)
+        if stacks:
+            lines.append(f"  stacks (auto-feedback): {stacks}")
         return "\n".join(lines)

@@ -7,25 +7,21 @@ generator.
 
 Two coexisting styles on the same while-loop driver:
 
-  CG, Jacobi      — *pure JSON loop specs* (`specs.CG_LOOP`,
-                    `specs.JACOBI_LOOP`) executed by `LoopProgram`;
-                    scalar updates (alpha/beta) and feedback edges are
+  CG, Jacobi,     — *pure JSON loop specs* (`specs.CG_LOOP`,
+  BiCGStab          `specs.JACOBI_LOOP`, `specs.BICGSTAB_LOOP`,
+  GMRES(m)          `specs.GMRES_LOOP`) executed by `LoopProgram`;
+                    scalar updates, feedback edges, conditional
+                    stages (BiCGStab's ‖s‖ early exit), and stacked
+                    Krylov state with nested restarts (GMRES) are all
                     described in the spec, not in Python. The classes
-                    below remain as the hand-written reference
-                    implementations the loop specs are tested against.
-  BiCGStab,       — class-based `SolverProgram` subclasses, for logic
-  PowerIteration    beyond the spec grammar (BiCGStab's ‖s‖-based
-                    early exit under `lax.cond`, power iteration's
-                    Rayleigh-quotient metric).
-
-  cg_from_spec / jacobi_from_spec — functional wrappers over the JSON
-  path, mirroring cg / jacobi. These are now deprecation shims over
-  `repro.blas.cg` / `repro.blas.jacobi`, which run the identical loop
-  specs through the unified `blas.compile` -> Executable front door.
+                    below remain as hand-written *parity oracles* the
+                    loop specs are tested against. `repro.blas.cg/
+                    jacobi/bicgstab/gmres` run the spec path.
+  PowerIteration  — class-based `SolverProgram` subclass; its
+                    Rayleigh-quotient metric stays Python-side.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
 import jax
@@ -261,21 +257,6 @@ def cg(A, b, x0=None, *, tol=1e-6, max_iters=500, mode="dataflow",
               interpret=interpret).solve(A, b, x0, tol=tol)
 
 
-def cg_from_spec(A, b, x0=None, *, tol=1e-6, max_iters=500,
-                 mode="dataflow",
-                 interpret: Optional[bool] = None) -> SolverResult:
-    """CG run entirely from the `specs.CG_LOOP` JSON description.
-
-    Deprecated shim: `repro.blas.cg` is the same loop spec on the
-    unified Executable path (and memoizes the compiled loop)."""
-    warnings.warn(
-        "repro.solvers.cg_from_spec is deprecated; use repro.blas.cg",
-        DeprecationWarning, stacklevel=2)
-    from repro import blas
-    return blas.cg(A, b, x0, tol=tol, max_iters=max_iters, mode=mode,
-                   interpret=interpret)
-
-
 def bicgstab(A, b, x0=None, *, tol=1e-6, max_iters=500, mode="dataflow",
              interpret: Optional[bool] = None) -> SolverResult:
     return BiCGStab(mode=mode, max_iters=max_iters,
@@ -288,23 +269,6 @@ def jacobi(A, b, x0=None, *, tol=1e-6, max_iters=1000, omega=1.0,
     return Jacobi(mode=mode, max_iters=max_iters, omega=omega,
                   richardson=richardson,
                   interpret=interpret).solve(A, b, x0, tol=tol)
-
-
-def jacobi_from_spec(A, b, x0=None, *, tol=1e-6, max_iters=1000,
-                     omega=1.0, richardson=False, mode="dataflow",
-                     interpret: Optional[bool] = None) -> SolverResult:
-    """Jacobi/Richardson run entirely from the `specs.JACOBI_LOOP`
-    JSON description; D⁻¹ is passed as a data operand.
-
-    Deprecated shim: `repro.blas.jacobi` is the same loop spec on the
-    unified Executable path (and memoizes the compiled loop)."""
-    warnings.warn(
-        "repro.solvers.jacobi_from_spec is deprecated; use "
-        "repro.blas.jacobi", DeprecationWarning, stacklevel=2)
-    from repro import blas
-    return blas.jacobi(A, b, x0, tol=tol, max_iters=max_iters,
-                       omega=omega, richardson=richardson, mode=mode,
-                       interpret=interpret)
 
 
 def power_iteration(A, v0=None, *, tol=1e-6, max_iters=1000,

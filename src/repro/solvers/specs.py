@@ -1,12 +1,14 @@
 """ProgramSpec JSON for every solver iteration body — plus whole
-solvers as JSON loop specs (CG_LOOP / JACOBI_LOOP at the bottom).
+solvers as JSON loop specs (CG_LOOP / JACOBI_LOOP / BICGSTAB_LOOP /
+GMRES_LOOP at the bottom).
 
 Each spec below is a plain AIEBLAS-style JSON dict assembled from
-registry routines (gemv/dot/axpy/vsub/vmul/scal/waxpby/nrm2), so every
-solver iteration goes through the real pipeline — spec parse → dataflow
-graph → fusion plan → generated Pallas kernels — in both `dataflow`
-and `nodataflow` modes. The comments note which routines the fusion
-planner merges into a single on-chip kernel in dataflow mode.
+registry routines (gemv/gemvt/dot/axpy/vsub/vmul/scal/waxpby/nrm2/rot/
+transpose), so every solver iteration goes through the real pipeline —
+spec parse → dataflow graph → fusion plan → generated Pallas kernels —
+in both `dataflow` and `nodataflow` modes. The comments note which
+routines the fusion planner merges into a single on-chip kernel in
+dataflow mode.
 
 Convention: gemv `y` operands that are multiplied by beta=0 are aliased
 to an existing same-length vector instead of a dedicated zeros input,
@@ -271,6 +273,63 @@ CG_LOOP = {
     },
 }
 
+BICGSTAB_LOOP = {
+    "name": "bicgstab",
+    "dtype": "float32",
+    "operands": {"A": "matrix", "b": "vector", "x0": "vector"},
+    "setup": [
+        {"program": NRM2, "inputs": {"x": "b"},
+         "outputs": {"norm": "bnorm"}},
+        {"program": RESIDUAL, "inputs": {"x": "x0"},
+         "outputs": {"r": "r0", "rnorm": "rnorm0"}},
+    ],
+    "iterate": {
+        "state": {
+            "x": {"init": "x0"},
+            "r": {"init": "r0"},
+            "rhat": {"init": "r0"},
+            "p": {"init": "r0"},
+            "rho": {"init": "rnorm0 * rnorm0", "kind": "scalar"},
+        },
+        "body": [
+            {"program": BICG_MATVEC1},               # v = A p ; rv
+            {"let": {"alpha": "rho / rv",
+                     "neg_alpha": "-alpha"}},
+            {"program": BICG_SUPDATE},               # s ; ‖s‖ (fused)
+            # the ‖s‖ early exit IS the spec now: `threshold` is the
+            # driver-bound stop threshold (tol * scale), and the two
+            # branches agree on {x_next, r_next, p_next, rho_next,
+            # rnorm} — everything else stays branch-local
+            {"cond": {
+                "if": "snorm <= threshold",
+                "then": [
+                    # x' = x + alpha p, r' = s; p/rho carry over
+                    # (bare-name lets alias values of any kind)
+                    {"program": BICG_XHALF,
+                     "outputs": {"x_half": "x_next"}},
+                    {"let": {"r_next": "s", "p_next": "p",
+                             "rho_next": "rho", "rnorm": "snorm"}},
+                ],
+                "else": [
+                    {"program": BICG_MATVEC2},       # t ; tᵀt ; tᵀs
+                    {"let": {"omega": "ts / tt",
+                             "neg_omega": "-omega"}},
+                    {"program": BICG_XRUPDATE},      # x', r', ‖r'‖, rho'
+                    {"let": {"beta":
+                             "(rho_next / rho) * (alpha / omega)"}},
+                    {"program": BICG_PUPDATE,
+                     "inputs": {"r": "r_next"}},     # p'
+                ],
+            }},
+        ],
+        "feedback": {"x": "x_next", "r": "r_next", "p": "p_next",
+                     "rho": "rho_next"},
+        "while": {"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
+                  "rtol": 1e-6, "max_iters": 200},
+        "solution": {"x": "x"},
+    },
+}
+
 JACOBI_LOOP = {
     "name": "jacobi",
     "dtype": "float32",
@@ -301,3 +360,251 @@ JACOBI_LOOP = {
         "solution": {"x": "x"},
     },
 }
+
+
+# --------------------------------------------------------------------
+# GMRES(m): restarts, Arnoldi, and Givens least-squares — pure JSON
+# --------------------------------------------------------------------
+# Grammar-v2 constructs in one solver: an outer restart loop whose body
+# runs three nested count-loops over stacked Krylov state —
+#
+#   arnoldi  — V[j+1] from A V[j], classical Gram-Schmidt against the
+#              whole basis buffer at once (gemv h = V w, gemvt
+#              w' = w − Vᵀ h; zero slots project to zero, so the
+#              unfilled basis masks itself — no index arithmetic),
+#              Hessenberg COLUMNS stored into a stack, the subdiagonal
+#              via an element store;
+#   givens   — the column stack transposed to rows (`transpose`), then
+#              one plane rotation per step applied to ROW PAIRS with
+#              the registry `rot` routine (vectorized over columns),
+#              rotating the rhs g alongside;
+#   backsub  — y from the triangularized system (the zero-initialized
+#              y stack makes dot(R_row, y) sum exactly the
+#              already-solved tail), x updated incrementally with axpy.
+#
+# Safe divides keep breakdown benign: a zero ‖w'‖ (happy breakdown or
+# a converged lane in `batched()`) zeroes the remaining slots, the
+# zero rows rotate to zero, and back-substitution skips them — the
+# solve degrades to the filled Krylov prefix, which is the textbook
+# behaviour.
+
+# w = A v                             (the Arnoldi matvec)
+GMRES_MATVEC = {
+    "name": "gmres_matvec",
+    "routines": [
+        {"blas": "gemv", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "x": "v", "y": "v"},
+         "outputs": {"out": "w"}},
+    ],
+}
+
+# h = V w — one gemv against the whole (m+1, n) basis buffer; unfilled
+# (zero) slots produce zero projections, masking themselves
+GMRES_PROJ = {
+    "name": "gmres_proj",
+    "routines": [
+        {"blas": "gemv", "name": "proj",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "V", "x": "w", "y": "g"},
+         "outputs": {"out": "h"}},
+    ],
+}
+
+# w' = w − Vᵀ h ; hnorm = ‖w'‖       (gemvt correction, then the norm)
+GMRES_ORTH = {
+    "name": "gmres_orth",
+    "routines": [
+        {"blas": "gemvt", "name": "corr",
+         "scalars": {"alpha": -1.0, "beta": 1.0},
+         "inputs": {"A": "V", "x": "h", "y": "w"},
+         "connections": {"out": "hn.x"}, "outputs": {"out": "w2"}},
+        {"blas": "nrm2", "name": "hn", "outputs": {"out": "hnorm"}},
+    ],
+}
+
+# out = alpha x                      (v0 and V[j+1] normalizations)
+GMRES_SCAL = {
+    "name": "gmres_scal",
+    "routines": [
+        {"blas": "scal", "name": "sc",
+         "scalars": {"alpha": {"input": "alpha"}},
+         "inputs": {"x": "x"}, "outputs": {"out": "out"}},
+    ],
+}
+
+# (rja, rj1a) = rot(c, s, rj, rj1)   (Givens on a Hessenberg ROW pair
+#                                     — the registry rot routine)
+GMRES_ROT = {
+    "name": "gmres_rot",
+    "routines": [
+        {"blas": "rot", "name": "giv",
+         "scalars": {"c": {"input": "c"}, "s": {"input": "s"}},
+         "inputs": {"x": "rj", "y": "rj1"},
+         "outputs": {"out_x": "rja", "out_y": "rj1a"}},
+    ],
+}
+
+# Hm = Hcᵀ — the column stack becomes the (m+1, m) row-major H
+GMRES_TRANSPOSE = {
+    "name": "gmres_transpose",
+    "routines": [
+        {"blas": "transpose", "name": "tr", "inputs": {"A": "Hb"},
+         "outputs": {"out": "Hm"}},
+    ],
+}
+
+# acc = row · y                      (back-substitution inner product)
+GMRES_DOT = {
+    "name": "gmres_dot",
+    "routines": [
+        {"blas": "dot", "name": "bs", "inputs": {"x": "row", "y": "yv"},
+         "outputs": {"out": "acc"}},
+    ],
+}
+
+# x' = x + yq v                      (incremental solution update)
+GMRES_AXPY = {
+    "name": "gmres_axpy",
+    "routines": [
+        {"blas": "axpy", "name": "up",
+         "scalars": {"alpha": {"input": "yq"}},
+         "inputs": {"x": "v", "y": "x"}, "outputs": {"out": "xn"}},
+    ],
+}
+
+
+def gmres_loop(m: int = 20, *, rtol: float = 1e-6,
+               max_restarts: int = 50, name: str = "gmres") -> dict:
+    """The GMRES(m) loop spec, parameterized by the restart length.
+
+    `GMRES_LOOP` below is the default instance; callers wanting a
+    different Krylov depth build their own (`repro.blas.gmres` does
+    this per `restart=` value and memoizes the compiled loop).
+    """
+    m1 = m + 1
+    arnoldi = {
+        "counter": "j",
+        "state": {
+            "V": {"kind": "stack", "slots": m1, "of": "vector",
+                  "init": {"slot0": "v0"}},
+            "Hc": {"kind": "stack", "slots": m, "of": "vector",
+                   "len": m1},
+            "gs": {"kind": "stack", "slots": m1, "of": "scalar",
+                   "init": {"slot0": "rn"}},
+        },
+        "body": [
+            {"read": {"name": "vj", "from": "V", "slot": "j"}},
+            {"program": GMRES_MATVEC, "inputs": {"v": "vj"}},
+            {"program": GMRES_PROJ, "inputs": {"g": "gs"}},
+            {"program": GMRES_ORTH},
+            {"let": {"inv_hn": "1 / hnorm"}},      # sdiv: breakdown-safe
+            {"program": GMRES_SCAL,
+             "inputs": {"alpha": "inv_hn", "x": "w2"},
+             "outputs": {"out": "vnext"}},
+            {"store": {"into": "V", "slot": "j + 1", "value": "vnext"}},
+            {"store": {"into": "Hc", "slot": "j", "value": "h"}},
+            # the subdiagonal entry H[j+1, j] = ‖w'‖ lands in the same
+            # column via an element store (h[j+1] was 0: V[j+1] did
+            # not exist when h was projected)
+            {"store": {"into": "Hc", "slot": "j", "at": "j + 1",
+                       "value": "hnorm"}},
+        ],
+        "while": {"count": m},
+        "yield": {"Vb": "V", "Hcb": "Hc", "g0": "gs"},
+    }
+
+    givens = {
+        "counter": "t",
+        "state": {
+            "R": {"kind": "stack", "slots": m1, "of": "vector",
+                  "init": {"from": "Hm"}},
+            "g": {"kind": "stack", "slots": m1, "of": "scalar",
+                  "init": {"from": "g0"}},
+        },
+        "body": [
+            {"read": {"name": "rj", "from": "R", "slot": "t"}},
+            {"read": {"name": "rj1", "from": "R", "slot": "t + 1"}},
+            {"read": {"name": "hjj", "from": "rj", "slot": "t"}},
+            {"read": {"name": "hsub", "from": "rj1", "slot": "t"}},
+            {"let": {"den": "sqrt(hjj * hjj + hsub * hsub)",
+                     "c": "hjj / den",        # sdiv: den = 0 on the
+                     "s": "hsub / den"}},     # unfilled tail -> no-op
+            {"program": GMRES_ROT},
+            {"store": {"into": "R", "slot": "t", "value": "rja"}},
+            {"store": {"into": "R", "slot": "t + 1", "value": "rj1a"}},
+            {"read": {"name": "gj", "from": "g", "slot": "t"}},
+            {"let": {"gjn": "c * gj", "gj1n": "-s * gj"}},
+            {"store": {"into": "g", "slot": "t", "value": "gjn"}},
+            {"store": {"into": "g", "slot": "t + 1", "value": "gj1n"}},
+        ],
+        "while": {"count": m},
+        "yield": {"Rf": "R", "gf": "g"},
+    }
+
+    backsub = {
+        "counter": "i",
+        "state": {
+            "y": {"kind": "stack", "slots": m, "of": "scalar"},
+            "xa": {"init": "x"},
+        },
+        "body": [
+            {"let": {"q": f"{m - 1} - i"}},    # solve bottom-up
+            {"read": {"name": "Rq", "from": "Rf", "slot": "q"}},
+            {"read": {"name": "gq", "from": "gf", "slot": "q"}},
+            # y's unsolved entries are still zero, so the full-row dot
+            # sums exactly the already-solved tail k > q
+            {"program": GMRES_DOT, "inputs": {"row": "Rq", "yv": "y"}},
+            {"read": {"name": "rqq", "from": "Rq", "slot": "q"}},
+            {"let": {"yq": "(gq - acc) / rqq"}},
+            {"store": {"into": "y", "slot": "q", "value": "yq"}},
+            {"read": {"name": "vq", "from": "Vb", "slot": "q"}},
+            {"program": GMRES_AXPY,
+             "inputs": {"yq": "yq", "v": "vq", "x": "xa"},
+             "outputs": {"xn": "xn"}},
+        ],
+        "feedback": {"xa": "xn"},
+        "while": {"count": m},
+        "yield": {"x_next": "xa"},
+    }
+
+    return {
+        "name": name,
+        "dtype": "float32",
+        "operands": {"A": "matrix", "b": "vector", "x0": "vector"},
+        "setup": [
+            {"program": NRM2, "inputs": {"x": "b"},
+             "outputs": {"norm": "bnorm"}},
+            {"program": RESIDUAL, "inputs": {"x": "x0"},
+             "outputs": {"r": "r0", "rnorm": "rnorm0"}},
+        ],
+        "iterate": {
+            "state": {
+                "x": {"init": "x0"},
+                "r": {"init": "r0"},
+                "rn": {"init": "rnorm0", "kind": "scalar"},
+            },
+            "body": [
+                {"let": {"inv_beta": "1 / rn"}},
+                {"program": GMRES_SCAL,
+                 "inputs": {"alpha": "inv_beta", "x": "r"},
+                 "outputs": {"out": "v0"}},
+                {"iterate": arnoldi},
+                {"program": GMRES_TRANSPOSE, "inputs": {"Hb": "Hcb"}},
+                {"iterate": givens},
+                {"iterate": backsub},
+                # true residual of the restart iterate: metric and
+                # telemetry always describe the returned x
+                {"program": RESIDUAL, "inputs": {"x": "x_next"},
+                 "outputs": {"r": "r_next", "rnorm": "rnorm"}},
+            ],
+            "feedback": {"x": "x_next", "r": "r_next", "rn": "rnorm"},
+            "while": {"metric": "rnorm", "init": "rnorm0",
+                      "scale": "bnorm", "rtol": rtol,
+                      "max_iters": max_restarts},
+            "solution": {"x": "x"},
+        },
+    }
+
+
+GMRES_LOOP = gmres_loop()

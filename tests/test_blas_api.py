@@ -332,18 +332,19 @@ def test_old_entrypoints_still_work():
     assert bool(res2.converged)
 
 
-def test_from_spec_shims_warn_and_delegate():
+def test_from_spec_shims_are_gone():
+    """The cg_from_spec/jacobi_from_spec deprecation shims completed
+    their cycle: repro.blas.cg / repro.blas.jacobi are the spec
+    path."""
+    import repro.solvers as solvers
+    assert not hasattr(solvers, "cg_from_spec")
+    assert not hasattr(solvers, "jacobi_from_spec")
     n = 64
     A, b = _spd(n), _rhs(n)
-    from repro.solvers import cg_from_spec, jacobi_from_spec
-    with pytest.warns(DeprecationWarning, match="repro.blas.cg"):
-        res = cg_from_spec(A, b, tol=1e-6, max_iters=300)
+    res = blas.cg(A, b, tol=1e-6, max_iters=300)
     assert bool(res.converged)
-    want = blas.cg(A, b, tol=1e-6, max_iters=300)
-    assert int(res.iterations) == int(want.iterations)
     Ad = A + 2.0 * jnp.diag(jnp.sum(jnp.abs(A), axis=1))
-    with pytest.warns(DeprecationWarning, match="repro.blas.jacobi"):
-        res = jacobi_from_spec(Ad, b, tol=1e-6, max_iters=500)
+    res = blas.jacobi(Ad, b, tol=1e-6, max_iters=500)
     assert bool(res.converged)
 
 

@@ -60,7 +60,8 @@ def test_unparse_reparse_fixpoint():
 
 
 def test_unparse_loop_reparse_fixpoint():
-    for raw in (specs.CG_LOOP, specs.JACOBI_LOOP):
+    for raw in (specs.CG_LOOP, specs.JACOBI_LOOP,
+                specs.BICGSTAB_LOOP, specs.GMRES_LOOP):
         ls = spec_mod.parse_loop(raw)
         canon = spec_mod.unparse_loop(ls)
         assert spec_mod.unparse_loop(spec_mod.parse_loop(canon)) == canon
@@ -159,6 +160,219 @@ def test_fluent_loop_program_runs():
                               dinv=jacobi_dinv(A),
                               omega=jnp.float32(1.0))
     assert bool(res.converged)
+
+
+def _fluent_gmres(m):
+    """specs.gmres_loop(m) rebuilt through the loop-handle tier."""
+    m1 = m + 1
+    b = blas.program("gmres", dtype="float32")
+    b.operand("A", "matrix").operand("b", "vector")
+    b.operand("x0", "vector")
+    b.setup(specs.NRM2, inputs={"x": "b"}, outputs={"norm": "bnorm"})
+    b.setup(specs.RESIDUAL, inputs={"x": "x0"},
+            outputs={"r": "r0", "rnorm": "rnorm0"})
+    x = b.state("x", init="x0")
+    b.state("r", init="r0")
+    b.state("rn", init="rnorm0", kind="scalar")
+    b.feedback(x="x_next", r="r_next", rn="rnorm")
+
+    arnoldi = b.inner_loop(
+        counter="j",
+        state={"V": {"kind": "stack", "slots": m1, "of": "vector",
+                     "init": {"slot0": "v0"}},
+               "Hc": {"kind": "stack", "slots": m, "of": "vector",
+                      "len": m1},
+               "gs": {"kind": "stack", "slots": m1, "of": "scalar",
+                      "init": {"slot0": "rn"}}},
+        body=[
+            blas.read("vj", "V", "j"),
+            blas.stage(specs.GMRES_MATVEC, inputs={"v": "vj"}),
+            blas.stage(specs.GMRES_PROJ, inputs={"g": "gs"}),
+            blas.stage(specs.GMRES_ORTH),
+            blas.let(inv_hn="1 / hnorm"),
+            blas.stage(specs.GMRES_SCAL,
+                       inputs={"alpha": "inv_hn", "x": "w2"},
+                       outputs={"out": "vnext"}),
+            blas.store("V", "j + 1", "vnext"),
+            blas.store("Hc", "j", "h"),
+            blas.store("Hc", "j", "hnorm", at="j + 1"),
+        ],
+        count=m,
+        yields={"Vb": "V", "Hcb": "Hc", "g0": "gs"})
+
+    givens = b.inner_loop(
+        counter="t",
+        state={"R": {"kind": "stack", "slots": m1, "of": "vector",
+                     "init": {"from": "Hm"}},
+               "g": {"kind": "stack", "slots": m1, "of": "scalar",
+                     "init": {"from": "g0"}}},
+        body=[
+            blas.read("rj", "R", "t"),
+            blas.read("rj1", "R", "t + 1"),
+            blas.read("hjj", "rj", "t"),
+            blas.read("hsub", "rj1", "t"),
+            blas.let(den="sqrt(hjj * hjj + hsub * hsub)",
+                     c="hjj / den", s="hsub / den"),
+            blas.stage(specs.GMRES_ROT),
+            blas.store("R", "t", "rja"),
+            blas.store("R", "t + 1", "rj1a"),
+            blas.read("gj", "g", "t"),
+            blas.let(gjn="c * gj", gj1n="-s * gj"),
+            blas.store("g", "t", "gjn"),
+            blas.store("g", "t + 1", "gj1n"),
+        ],
+        count=m,
+        yields={"Rf": "R", "gf": "g"})
+
+    backsub = b.inner_loop(
+        counter="i",
+        state={"y": {"kind": "stack", "slots": m, "of": "scalar"},
+               "xa": {"init": "x"}},
+        body=[
+            blas.let(q=f"{m - 1} - i"),
+            blas.read("Rq", "Rf", "q"),
+            blas.read("gq", "gf", "q"),
+            blas.stage(specs.GMRES_DOT,
+                       inputs={"row": "Rq", "yv": "y"}),
+            blas.read("rqq", "Rq", "q"),
+            blas.let(yq="(gq - acc) / rqq"),
+            blas.store("y", "q", "yq"),
+            blas.read("vq", "Vb", "q"),
+            blas.stage(specs.GMRES_AXPY,
+                       inputs={"yq": "yq", "v": "vq", "x": "xa"},
+                       outputs={"xn": "xn"}),
+        ],
+        count=m,
+        feedback={"xa": "xn"},
+        yields={"x_next": "xa"})
+
+    b.iterate(
+        body=[
+            blas.let(inv_beta="1 / rn"),
+            blas.stage(specs.GMRES_SCAL,
+                       inputs={"alpha": "inv_beta", "x": "r"},
+                       outputs={"out": "v0"}),
+            arnoldi,
+            blas.stage(specs.GMRES_TRANSPOSE, inputs={"Hb": "Hcb"}),
+            givens,
+            backsub,
+            blas.stage(specs.RESIDUAL, inputs={"x": "x_next"},
+                       outputs={"r": "r_next", "rnorm": "rnorm"}),
+        ],
+        stop={"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
+              "rtol": 1e-6, "max_iters": 50},
+        solution={"x": x})          # a StateRef as the solution source
+    return b
+
+
+def test_fluent_gmres_digest_matches_shipped_spec():
+    """The loop-handle tier reaches the whole v2 grammar: the fluent
+    construction is digest-identical to specs.gmres_loop(m)."""
+    b = _fluent_gmres(8)
+    assert lowering.spec_digest(b.to_spec()) == \
+        lowering.spec_digest(specs.gmres_loop(m=8))
+
+
+def test_fluent_bicgstab_cond_digest_matches_shipped_spec():
+    b = blas.program("bicgstab", dtype="float32")
+    b.operand("A", "matrix").operand("b", "vector")
+    b.operand("x0", "vector")
+    b.setup(specs.NRM2, inputs={"x": "b"}, outputs={"norm": "bnorm"})
+    b.setup(specs.RESIDUAL, inputs={"x": "x0"},
+            outputs={"r": "r0", "rnorm": "rnorm0"})
+    b.state("x", init="x0")
+    b.state("r", init="r0")
+    b.state("rhat", init="r0")
+    b.state("p", init="r0")
+    b.state("rho", init="rnorm0 * rnorm0", kind="scalar")
+    b.feedback(x="x_next", r="r_next", p="p_next", rho="rho_next")
+    b.iterate(
+        body=[
+            blas.stage(specs.BICG_MATVEC1),
+            blas.let(alpha="rho / rv", neg_alpha="-alpha"),
+            blas.stage(specs.BICG_SUPDATE),
+            b.cond(
+                "snorm <= threshold",
+                then=[
+                    blas.stage(specs.BICG_XHALF,
+                               outputs={"x_half": "x_next"}),
+                    blas.let(r_next="s", p_next="p", rho_next="rho",
+                             rnorm="snorm"),
+                ],
+                orelse=[
+                    blas.stage(specs.BICG_MATVEC2),
+                    blas.let(omega="ts / tt", neg_omega="-omega"),
+                    blas.stage(specs.BICG_XRUPDATE),
+                    blas.let(beta="(rho_next / rho) * (alpha / omega)"),
+                    blas.stage(specs.BICG_PUPDATE,
+                               inputs={"r": "r_next"}),
+                ]),
+        ],
+        stop={"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
+              "rtol": 1e-6, "max_iters": 200},
+        solution={"x": "x"})
+    assert lowering.spec_digest(b.to_spec()) == \
+        lowering.spec_digest(specs.BICGSTAB_LOOP)
+
+
+def test_fluent_gmres_compiles_and_solves():
+    import jax
+    b = _fluent_gmres(6)
+    exe = blas.compile(b)
+    n = 32
+    k = jax.random.PRNGKey(5)
+    A = jax.random.normal(k, (n, n), jnp.float32) / jnp.sqrt(n) \
+        + 3.0 * jnp.eye(n)
+    rhs = jax.random.normal(jax.random.PRNGKey(6), (n,), jnp.float32)
+    res = exe.run(A=A, b=rhs, x0=jnp.zeros(n), tol=1e-6)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, rhs),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_state_and_feedback_handles_misuse():
+    b = blas.program("p")
+    b.state("x", init="x0")
+    with pytest.raises(blas.BuilderError, match="duplicate state"):
+        b.state("x", init="x0")
+    with pytest.raises(blas.BuilderError, match="slot0=.*not init="):
+        b.state("V", init="x0", slots=4, of="vector")
+    with pytest.raises(blas.BuilderError, match="slot0=.*conflict"):
+        b.state("V", slots=4, of="vector", slot0="a", from_="buf")
+    with pytest.raises(blas.BuilderError, match="needs init="):
+        b.state("y")
+    b.feedback(x="x_next")
+    with pytest.raises(blas.BuilderError,
+                       match="b.state.*AND passed"):
+        b.iterate(state={"x": "x0"}, body=[blas.let(a="1")],
+                  stop={"metric": "a", "max_iters": 1})
+    # a dataflow builder rejects the loop handles
+    b2 = blas.program("df")
+    b2.axpy(alpha=1.0, x="x", y="y")
+    with pytest.raises(blas.BuilderError, match="dataflow builder"):
+        b2.state("x", init="x0")
+    with pytest.raises(blas.BuilderError, match="dataflow builder"):
+        b2.feedback(x="x_next")
+
+
+def test_inner_loop_needs_exactly_one_stop_form():
+    with pytest.raises(blas.BuilderError, match="exactly one of"):
+        blas.inner_loop(state={"h": "a"}, body=[blas.let(z="h")])
+    with pytest.raises(blas.BuilderError, match="exactly one of"):
+        blas.inner_loop(state={"h": "a"}, body=[blas.let(z="h")],
+                        count=3,
+                        stop={"metric": "z", "max_iters": 3})
+
+
+def test_state_ref_coerces_in_read_store_and_yields():
+    v = blas.StateRef("V")
+    assert blas.read("vj", v, "j")["read"]["from"] == "V"
+    assert blas.store(v, "j", "w")["store"]["into"] == "V"
+    st = blas.inner_loop(state={"V": {"kind": "stack", "slots": 2,
+                                      "of": "scalar"}},
+                         body=[blas.let(z="1")], count=2,
+                         yields={"out": blas.StateRef("V")})
+    assert st["iterate"]["yield"]["out"] == "V"
 
 
 def test_let_preserves_binding_order():

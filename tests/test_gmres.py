@@ -1,0 +1,265 @@
+"""Grammar-v2 acceptance: GMRES(m) and BiCGStab as pure JSON loop
+specs — conditional stages, stacked Krylov state, and nested restarts
+executing as one jitted `lax.while_loop` nest."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lowering
+from repro.solvers import BiCGStab, LoopProgram, specs
+
+MODES = ["dataflow", "nodataflow"]
+
+
+def _spd(n, seed=0):
+    k = jax.random.PRNGKey(seed)
+    m = jax.random.normal(k, (n, n), jnp.float32)
+    return m @ m.T / n + jnp.eye(n, dtype=jnp.float32)
+
+
+def _nonsym(n, seed=3):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (n, n), jnp.float32) / jnp.sqrt(n) \
+        + 3.0 * jnp.eye(n)
+
+
+def _rhs(n, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# BiCGStab: the cond stage vs the class-based parity oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_bicgstab_spec_matches_class_iterate_for_iterate(mode):
+    n = 96
+    A, b = _nonsym(n), _rhs(n)
+    lp = LoopProgram(specs.BICGSTAB_LOOP, mode=mode, max_iters=300)
+    got = lp.solve(A=A, b=b, x0=jnp.zeros(n), tol=1e-7)
+    want = BiCGStab(mode=mode, max_iters=300).solve(A, b, tol=1e-7)
+    assert int(got.iterations) == int(want.iterations)
+    assert bool(got.converged)
+    np.testing.assert_allclose(got.x, want.x, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got.history, want.history,
+                               rtol=1e-4, atol=1e-6)
+    assert lp.trace_count == 1
+
+
+def test_bicgstab_spec_takes_the_early_exit_branch():
+    """On A = I the first half-step is exact: the spec-level cond
+    (`snorm <= threshold`) finishes with x += alpha p and the loop
+    stops after one iteration — same as the class solver."""
+    n = 48
+    b = _rhs(n)
+    lp = LoopProgram(specs.BICGSTAB_LOOP, max_iters=50)
+    res = lp.solve(A=jnp.eye(n), b=b, x0=jnp.zeros(n), tol=1e-6)
+    assert int(res.iterations) == 1
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, b, rtol=1e-5, atol=1e-5)
+
+
+def test_bicgstab_spec_batched_matches_per_rhs():
+    n, nrhs = 64, 2
+    A = _nonsym(n)
+    B = jnp.stack([_rhs(n, s) for s in (5, 6)])
+    lp = LoopProgram(specs.BICGSTAB_LOOP, max_iters=200)
+    batched = lp.batched(A=A, b=B, x0=jnp.zeros_like(B),
+                         axes={"A": None}, tol=1e-6)
+    assert batched.x.shape == (nrhs, n)
+    for i in range(nrhs):
+        single = lp.solve(A=A, b=B[i], x0=jnp.zeros(n), tol=1e-6)
+        assert int(batched.iterations[i]) == int(single.iterations)
+        np.testing.assert_allclose(batched.x[i], single.x,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_blas_bicgstab_runs_the_spec_path():
+    from repro import blas
+    from repro.blas import solvers as bs
+    n = 64
+    A, b = _nonsym(n), _rhs(n)
+    bs._EXECUTABLES.clear()
+    res = blas.bicgstab(A, b, tol=1e-6, max_iters=200)
+    assert bool(res.converged)
+    keys = list(bs._EXECUTABLES)
+    assert any(k[0] == "loop" and k[1] == "bicgstab" for k in keys)
+    exe = bs._EXECUTABLES[keys[0]]
+    assert exe.spec is not None          # JSON all the way down
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# GMRES(m): stacked state + nested restarts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_A", [_spd, _nonsym],
+                         ids=["spd", "nonsymmetric"])
+def test_gmres_matches_scipy(make_A):
+    scipy_linalg = pytest.importorskip("scipy.sparse.linalg")
+    n, m = 64, 8
+    A, b = make_A(n), _rhs(n)
+    lp = LoopProgram(specs.gmres_loop(m=m), max_iters=40)
+    got = lp.solve(A=A, b=b, x0=jnp.zeros(n), tol=1e-6)
+    assert bool(got.converged)
+    assert lp.trace_count == 1
+    relres = float(jnp.linalg.norm(b - A @ got.x)
+                   / jnp.linalg.norm(b))
+    assert relres <= 1e-5
+    xs, info = scipy_linalg.gmres(np.asarray(A), np.asarray(b),
+                                  rtol=1e-6, restart=m, maxiter=40)
+    assert info == 0
+    np.testing.assert_allclose(got.x, xs, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_gmres_modes_agree(mode):
+    n = 48
+    A, b = _nonsym(n), _rhs(n)
+    lp = LoopProgram(specs.gmres_loop(m=6), mode=mode, max_iters=40)
+    res = lp.solve(A=A, b=b, x0=jnp.zeros(n), tol=1e-6)
+    assert bool(res.converged)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b),
+                               rtol=1e-3, atol=1e-4)
+    assert lp.trace_count == 1
+
+
+def test_gmres_exact_in_one_restart_when_m_covers_the_spectrum():
+    """With restart length >= the matrix dimension a single cycle is a
+    full-rank Krylov solve (happy breakdown masks unused slots)."""
+    n = 12
+    A, b = _nonsym(n, seed=7), _rhs(n)
+    lp = LoopProgram(specs.gmres_loop(m=n), max_iters=5)
+    res = lp.solve(A=A, b=b, x0=jnp.zeros(n), tol=1e-5)
+    assert int(res.iterations) == 1
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_gmres_identity_happy_breakdown():
+    """A = I breaks down after one Arnoldi step (w' = 0); safe
+    divides keep the remaining slots zero and the filled prefix
+    solves the system exactly."""
+    n = 24
+    b = _rhs(n)
+    lp = LoopProgram(specs.gmres_loop(m=6), max_iters=5)
+    res = lp.solve(A=jnp.eye(n), b=b, x0=jnp.zeros(n), tol=1e-6)
+    assert bool(res.converged)
+    assert int(res.iterations) == 1
+    np.testing.assert_allclose(res.x, b, rtol=1e-5, atol=1e-5)
+
+
+def test_gmres_batched_matches_per_rhs():
+    n, nrhs = 48, 2
+    A = _nonsym(n)
+    B = jnp.stack([_rhs(n, s) for s in (2, 9)])
+    lp = LoopProgram(specs.gmres_loop(m=6), max_iters=40)
+    batched = lp.batched(A=A, b=B, x0=jnp.zeros_like(B),
+                         axes={"A": None}, tol=1e-6)
+    assert batched.x.shape == (nrhs, n)
+    for i in range(nrhs):
+        single = lp.solve(A=A, b=B[i], x0=jnp.zeros(n), tol=1e-6)
+        assert int(batched.iterations[i]) == int(single.iterations)
+        np.testing.assert_allclose(batched.x[i], single.x,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_blas_gmres_convenience_and_memoization():
+    from repro import blas
+    from repro.blas import solvers as bs
+    n = 48
+    A, b = _nonsym(n), _rhs(n)
+    bs._EXECUTABLES.clear()
+    res = blas.gmres(A, b, tol=1e-6, restart=6, max_restarts=40)
+    assert bool(res.converged)
+    size = len(bs._EXECUTABLES)
+    blas.gmres(A, 2.0 * b, tol=1e-6, restart=6, max_restarts=40)
+    assert len(bs._EXECUTABLES) == size          # same compiled loop
+    blas.gmres(A, b, tol=1e-6, restart=4, max_restarts=40)
+    assert len(bs._EXECUTABLES) == size + 1      # new restart depth
+    with pytest.raises(ValueError, match="restart"):
+        blas.gmres(A, b, restart=0)
+
+
+def test_gmres_describe_reports_nested_structure():
+    lp = LoopProgram(specs.gmres_loop(m=4))
+    desc = lp.describe()
+    assert "inner loop (counter j)" in desc
+    assert "V[5]" in desc                       # stack + slot count
+    assert "store" in desc and "read" in desc
+    assert "count 4" in desc
+
+
+def test_gmres_cost_report_charges_inner_loops_per_trip():
+    from repro import blas
+    exe = blas.compile(specs.gmres_loop(m=4))
+    rep = exe.cost_report({"A": (128, 128), "b": 128, "x0": 128})
+    # 4 Arnoldi steps x (A matvec + basis proj/correction) dominate:
+    # well above one restart-level residual matvec
+    assert rep.flops > 4 * 2 * 128 * 128
+    assert any("x4" in label for label, *_ in rep.rows)
+
+
+def test_gmres_loop_lowers_once_through_the_cache():
+    spec = specs.gmres_loop(m=5)
+    LoopProgram(spec)
+    before = lowering.cache_stats()
+    LoopProgram(spec)
+    after = lowering.cache_stats()
+    assert after["misses"] == before["misses"]
+    assert after["hits"] > before["hits"]
+
+
+# ---------------------------------------------------------------------------
+# Inner-loop metric stop rule (count-free form)
+# ---------------------------------------------------------------------------
+
+
+def test_inner_loop_metric_stop_rule():
+    """An inner iterate may stop on its own metric <= rtol * scale
+    rule (with a static max_iters bound) instead of a fixed count."""
+    spec = {
+        "name": "halver",
+        "operands": {"A": "matrix", "b": "vector", "x0": "vector"},
+        "setup": [
+            {"program": specs.NRM2, "inputs": {"x": "b"},
+             "outputs": {"norm": "bnorm"}},
+            {"program": specs.RESIDUAL, "inputs": {"x": "x0"},
+             "outputs": {"r": "r0", "rnorm": "rnorm0"}},
+        ],
+        "iterate": {
+            "state": {"x": {"init": "x0"}, "r": {"init": "r0"}},
+            "body": [
+                # halve a scalar until it drops below 0.1 * bnorm;
+                # with rnorm0 = bnorm that takes 4 halvings
+                {"iterate": {
+                    "counter": "k",
+                    "state": {"h": {"init": "rnorm0"}},
+                    "body": [{"let": {"h2": "h * 0.5"}}],
+                    "feedback": {"h": "h2"},
+                    "while": {"metric": "h2", "init": "rnorm0",
+                              "scale": "bnorm", "rtol": 0.1,
+                              "max_iters": 64},
+                    "yield": {"hfin": "h"},
+                }},
+                {"program": specs.RESIDUAL, "inputs": {"x": "x"},
+                 "outputs": {"r": "r_next", "rnorm": "rn2"}},
+                {"let": {"rnorm": "rn2 * 0 + hfin"}},
+            ],
+            "feedback": {"x": "x", "r": "r_next"},
+            "while": {"metric": "rnorm", "init": "rnorm0",
+                      "scale": "bnorm", "rtol": 1e-6, "max_iters": 1},
+            "solution": {"x": "x"},
+        },
+    }
+    n = 16
+    b = jnp.ones(n)
+    lp = LoopProgram(spec, max_iters=1)
+    res = lp.solve(A=jnp.eye(n), b=b, x0=jnp.zeros(n), tol=1e-6)
+    # h halves from ||b|| until <= 0.1 ||b||: 0.5^4 = 0.0625
+    bnorm = float(jnp.linalg.norm(b))
+    assert abs(float(res.residual) - 0.0625 * bnorm) < 1e-4

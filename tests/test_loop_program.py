@@ -6,8 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import lowering
-from repro.solvers import (BiCGStab, CG, Jacobi, LoopProgram,
-                           cg_from_spec, jacobi_from_spec, specs)
+from repro.solvers import BiCGStab, CG, Jacobi, LoopProgram, specs
 from repro.solvers.iterative import jacobi_dinv
 
 MODES = ["dataflow", "nodataflow"]
@@ -64,22 +63,25 @@ def test_jacobi_loop_spec_matches_class(mode):
     assert lp.trace_count == 1
 
 
-def test_from_spec_wrappers_solve():
+def test_blas_spec_path_wrappers_solve():
+    """repro.blas.cg/jacobi ARE the loop-spec path (the old
+    *_from_spec shims are retired)."""
+    from repro import blas
     n = 80
     A, b = _spd(n), _rhs(n)
-    res = cg_from_spec(A, b, tol=1e-6, max_iters=200)
+    res = blas.cg(A, b, tol=1e-6, max_iters=200)
     assert bool(res.converged)
     np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b),
                                rtol=1e-3, atol=1e-4)
     Ad = _diag_dominant(n)
-    res = jacobi_from_spec(Ad, b, tol=1e-6, max_iters=500)
+    res = blas.jacobi(Ad, b, tol=1e-6, max_iters=500)
     assert bool(res.converged)
     np.testing.assert_allclose(res.x, jnp.linalg.solve(Ad, b),
                                rtol=1e-4, atol=1e-5)
     # Richardson flavour: identity scaling still converges on a
     # well-conditioned diagonally dominant system
-    res = jacobi_from_spec(jnp.eye(n) + 0.01 * _spd(n), b,
-                           richardson=True, tol=1e-6, max_iters=500)
+    res = blas.jacobi(jnp.eye(n) + 0.01 * _spd(n), b,
+                      richardson=True, tol=1e-6, max_iters=500)
     assert bool(res.converged)
 
 

@@ -190,9 +190,16 @@ def test_empty_feedback_rejected():
         spec_mod.parse_loop(bad)
 
 
-def test_stage_needs_let_or_program():
+def test_stage_needs_exactly_one_stage_kind():
     bad = _loop(setup=[{"nonsense": 1}])
-    with pytest.raises(SpecError, match="'let' or\\s+'program'"):
+    with pytest.raises(SpecError,
+                       match="let/program/cond/read/store/iterate"):
+        spec_mod.parse_loop(bad)
+    # two stage tags on one mapping is just as malformed
+    bad = _loop(setup=[{"let": {"a": "1"},
+                        "read": {"name": "b", "from": "c",
+                                 "slot": "0"}}])
+    with pytest.raises(SpecError, match=r"setup\[0\]"):
         spec_mod.parse_loop(bad)
 
 
@@ -216,6 +223,232 @@ def test_stage_binding_unknown_program_port():
                   "outputs": {"r": "r_next", "rnorm": "rnorm"}}],
     }
     with pytest.raises(SpecError, match="unknown program inputs"):
+        lowering.lower_loop(bad)
+
+
+# ---------------------------------------------------------------------------
+# Grammar v2: cond / stack / nested-iterate errors name the JSON path
+# ---------------------------------------------------------------------------
+
+
+def _body(*stages):
+    """A loop whose body is the given stages followed by the metric
+    producer."""
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "body": list(stages) + bad["iterate"]["body"],
+    }
+    return bad
+
+
+def test_cond_predicate_must_be_comparison_names_path():
+    bad = _body({"cond": {"if": "rnorm0", "then": [{"let": {"z": "1"}}]}})
+    with pytest.raises(SpecError,
+                       match=r"iterate\.body\[0\]\.cond\.if.*comparison"):
+        spec_mod.parse_loop(bad)
+
+
+def test_cond_unknown_keys_name_path():
+    bad = _body({"cond": {"if": "rnorm0 <= 1", "then": [{"let": {"z": "1"}}],
+                          "elif": []}})
+    with pytest.raises(SpecError, match=r"iterate\.body\[0\]\.cond:"):
+        spec_mod.parse_loop(bad)
+
+
+def test_cond_branch_error_names_nested_path():
+    bad = _body({"cond": {"if": "rnorm0 <= 1",
+                          "then": [{"let": {"z": "__import__"}},
+                                   {"let": {"w": "z +"}}]}})
+    with pytest.raises(SpecError,
+                       match=r"iterate\.body\[0\]\.cond\.then\[1\]"):
+        spec_mod.parse_loop(bad)
+
+
+def test_cond_branch_kind_mismatch_rejected():
+    """A name produced by both branches must have one kind."""
+    bad = _body({"cond": {"if": "rnorm0 <= threshold",
+                          "then": [{"let": {"z": "r"}}],       # vector
+                          "else": [{"let": {"z": "rnorm0"}}]}})  # scalar
+    bad["iterate"]["body"] = bad["iterate"]["body"][:1] \
+        + _loop()["iterate"]["body"]
+    with pytest.raises(SpecError, match=r"cond: 'z' is a vector"):
+        lowering.lower_loop(bad)
+
+
+def test_cond_with_no_branch_common_names_rejected():
+    """An else-less cond (or disjoint branch outputs) survives
+    nothing — only branch-common names outlive a cond — so lowering
+    rejects it instead of silently discarding the then-stages."""
+    bad = _body({"cond": {"if": "rnorm0 <= 1",
+                          "then": [{"let": {"z": "1"}}]}})
+    with pytest.raises(SpecError,
+                       match=r"cond: no name is produced by BOTH"):
+        lowering.lower_loop(bad)
+
+
+def test_store_outside_stack_names_path():
+    bad = _body({"store": {"into": "r", "slot": "0", "value": "r"}})
+    with pytest.raises(
+            SpecError,
+            match=r"iterate\.body\[0\]\.store\.into.*not a stack"):
+        lowering.lower_loop(bad)
+
+
+def test_store_inside_cond_branch_rejected():
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "state": {**bad["iterate"]["state"],
+                  "S": {"kind": "stack", "slots": 3, "of": "scalar"}},
+        "body": [
+            {"let": {"one": "1"}},
+            {"cond": {"if": "rnorm0 <= 1",
+                      "then": [{"store": {"into": "S", "slot": "0",
+                                          "value": "one"}}]}},
+        ] + bad["iterate"]["body"],
+    }
+    with pytest.raises(
+            SpecError,
+            match=r"cond\.then\[0\]\.store.*not allowed inside cond"):
+        lowering.lower_loop(bad)
+
+
+def test_read_from_scalar_names_path():
+    bad = _body({"read": {"name": "z", "from": "rnorm0", "slot": "0"}})
+    with pytest.raises(SpecError,
+                       match=r"iterate\.body\[0\]\.read\.from"):
+        lowering.lower_loop(bad)
+
+
+def test_stack_field_validation_names_paths():
+    def with_stack(field):
+        bad = _loop()
+        bad["iterate"] = {**bad["iterate"],
+                          "state": {**bad["iterate"]["state"],
+                                    "S": field}}
+        return bad
+
+    with pytest.raises(SpecError, match=r"iterate\.state\.S\.slots"):
+        spec_mod.parse_loop(with_stack({"kind": "stack", "of": "scalar"}))
+    with pytest.raises(SpecError, match=r"iterate\.state\.S\.of"):
+        spec_mod.parse_loop(with_stack({"kind": "stack", "slots": 4}))
+    with pytest.raises(SpecError, match=r"element\s+length"):
+        spec_mod.parse_loop(with_stack(
+            {"kind": "stack", "slots": 4, "of": "vector"}))
+    with pytest.raises(SpecError, match=r"iterate\.state\.S\.init"):
+        spec_mod.parse_loop(with_stack(
+            {"kind": "stack", "slots": 4, "of": "scalar",
+             "init": {"slot0": "a", "from": "b"}}))
+    # slot0 kind mismatch is a lowering error with the same path
+    bad = with_stack({"kind": "stack", "slots": 4, "of": "scalar",
+                      "init": {"slot0": "r0"}})
+    with pytest.raises(SpecError,
+                       match=r"iterate\.state\.S\.init\.slot0"):
+        lowering.lower_loop(bad)
+
+
+def test_stack_feedback_edge_rejected():
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "state": {**bad["iterate"]["state"],
+                  "S": {"kind": "stack", "slots": 3, "of": "scalar"}},
+        "feedback": {**bad["iterate"]["feedback"], "S": "r_next"},
+    }
+    with pytest.raises(SpecError,
+                       match=r"iterate\.feedback\.S.*automatically"):
+        spec_mod.parse_loop(bad)
+
+
+def test_inner_iterate_unknown_keys_name_path():
+    bad = _body({"iterate": {"state": {"h": {"init": "rnorm0"}},
+                             "body": [{"let": {"h2": "h"}}],
+                             "feedback": {"h": "h2"},
+                             "while": {"count": 2},
+                             "solution": {"x": "h"}}})
+    with pytest.raises(SpecError,
+                       match=r"iterate\.body\[0\]\.iterate.*yield"):
+        spec_mod.parse_loop(bad)
+
+
+def test_inner_metric_rule_requires_max_iters():
+    bad = _body({"iterate": {"state": {"h": {"init": "rnorm0"}},
+                             "body": [{"let": {"h2": "h * 0.5"}}],
+                             "feedback": {"h": "h2"},
+                             "while": {"metric": "h2"}}})
+    with pytest.raises(
+            SpecError,
+            match=r"iterate\.body\[0\]\.iterate\.while\.max_iters"):
+        spec_mod.parse_loop(bad)
+
+
+def test_inner_counter_rebind_names_path():
+    bad = _body({"iterate": {"counter": "rnorm0",
+                             "state": {"h": {"init": "rnorm0"}},
+                             "body": [{"let": {"h2": "h"}}],
+                             "feedback": {"h": "h2"},
+                             "while": {"count": 2}}})
+    with pytest.raises(
+            SpecError,
+            match=r"iterate\.body\[0\]\.iterate\.counter"):
+        lowering.lower_loop(bad)
+
+
+def test_inner_state_shadowing_names_path():
+    bad = _body({"iterate": {"state": {"r0": {"init": "rnorm0"}},
+                             "body": [{"let": {"h2": "r0"}}],
+                             "feedback": {"r0": "h2"},
+                             "while": {"count": 2}}})
+    with pytest.raises(
+            SpecError,
+            match=r"iterate\.body\[0\]\.iterate\.state\.r0.*shadows"):
+        lowering.lower_loop(bad)
+
+
+def test_inner_yield_unknown_field_names_path():
+    bad = _body({"iterate": {"state": {"h": {"init": "rnorm0"}},
+                             "body": [{"let": {"h2": "h"}}],
+                             "feedback": {"h": "h2"},
+                             "while": {"count": 2},
+                             "yield": {"out": "nosuch"}}})
+    with pytest.raises(
+            SpecError,
+            match=r"iterate\.body\[0\]\.iterate\.yield\.out"):
+        spec_mod.parse_loop(bad)
+
+
+def test_count_rule_rejects_extra_keys():
+    bad = _body({"iterate": {"state": {"h": {"init": "rnorm0"}},
+                             "body": [{"let": {"h2": "h"}}],
+                             "feedback": {"h": "h2"},
+                             "while": {"count": 2, "rtol": 1e-3}}})
+    with pytest.raises(
+            SpecError,
+            match=r"iterate\.body\[0\]\.iterate\.while.*count"):
+        spec_mod.parse_loop(bad)
+
+
+def test_threshold_is_reserved():
+    bad = _loop()
+    bad["operands"] = {**bad["operands"], "threshold": "scalar"}
+    with pytest.raises(SpecError, match="reserved"):
+        lowering.lower_loop(bad)
+
+
+def test_store_element_kind_checks_name_paths():
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "state": {**bad["iterate"]["state"],
+                  "S": {"kind": "stack", "slots": 3, "of": "scalar"}},
+        "body": [
+            {"store": {"into": "S", "slot": "0", "value": "r"}},
+        ] + bad["iterate"]["body"],
+    }
+    with pytest.raises(
+            SpecError,
+            match=r"iterate\.body\[0\]\.store\.value.*scalar slots"):
         lowering.lower_loop(bad)
 
 
