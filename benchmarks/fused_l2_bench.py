@@ -17,7 +17,13 @@ carries: `vector_reduction` counts handoff round-trips kept on-chip
 (write + read per internal edge), `vector_reduction_exact` counts
 only bytes physically not moved (a public intermediate still pays its
 one write). Interpret-mode wall clock rides along where the size is
-tractable. The modeled numbers are the stable regression surface:
+tractable, as do the `Executable.profile` drift columns
+(`modeled_us_* / profile_us_* / drift_*`): the roofline time of the
+modeled bytes joined per kernel group against instrumented eager wall
+clock. On CPU the drift ratio is astronomically large by design — the
+model describes the accelerator, the measurement interpret-mode
+python — so the number to *watch* across commits is its trajectory,
+not its magnitude (see docs/observability.md). The modeled numbers are the stable regression surface:
 this script **exits non-zero** when fused byte modeling regresses to
 (or above) the unfused baseline, or when the CG body's
 vector-traffic round-trip reduction drops below the 25% gate, so
@@ -107,6 +113,23 @@ def _time_call(exe, inputs, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+PROFILE_ITERS = 2
+
+
+def _drift_columns(entry, drifts):
+    """Flatten per-mode DriftReports into entry columns. `profile_us`
+    is the instrumented eager wall clock of the generated kernels —
+    bigger than the jitted `us_*` columns (per-call retrace, span
+    overhead) but attributable per kernel group, which the jitted
+    number is not."""
+    for mode, rep in drifts.items():
+        tag = "fused" if mode == "dataflow" else "unfused"
+        entry[f"modeled_us_{tag}"] = 1e6 * rep.modeled_time_s
+        entry[f"profile_us_{tag}"] = 1e6 * rep.measured_s
+        entry[f"drift_{tag}"] = rep.drift
+    return entry
+
+
 def _cost_entry(name, kind, n, reports, times=None):
     fused, unfused = reports["dataflow"], reports["nodataflow"]
     entry = {
@@ -132,28 +155,38 @@ def _cost_entry(name, kind, n, reports, times=None):
 
 
 def bench_chain(name, spec, n, *, timed=True):
-    reports, times = {}, {}
+    reports, times, drifts = {}, {}, {}
     for mode in ("dataflow", "nodataflow"):
         exe = blas.compile(spec, mode=mode)
-        reports[mode] = exe.cost_report(_chain_shapes(name, n))
+        shapes = _chain_shapes(name, n)
+        reports[mode] = exe.cost_report(shapes)
         if timed and n <= MAX_TIMED_N:
             times[mode] = _time_call(exe, _chain_inputs(name, n))
-    return _cost_entry(name, "chain", n, reports,
-                       times if times else None)
+            drifts[mode] = exe.profile(shapes, iters=PROFILE_ITERS)
+    entry = _cost_entry(name, "chain", n, reports,
+                        times if times else None)
+    return _drift_columns(entry, drifts)
 
 
-def bench_loop_body(name, loop_spec, n):
+def bench_loop_body(name, loop_spec, n, *, profiled=True):
     """Per-iteration modeled bytes for a loop spec's body, fused vs
     unfused. Window shapes come from the spec's declared operands, so
     any loop spec works (solver_bench reuses this for its
-    modeled-bytes section)."""
+    modeled-bytes section). `profiled` adds the drift columns at
+    timing-tractable sizes; callers whose bodies are mostly nested
+    inner loops (gmres: the drift join covers top-level stages only,
+    so the columns would misrepresent the restart) turn it off."""
     shapes = {op: ((n, n) if kind == "matrix" else n)
               for op, kind in loop_spec["operands"].items()
               if kind != "scalar"}
-    reports = {mode: blas.compile(loop_spec,
-                                  mode=mode).cost_report(shapes)
-               for mode in ("dataflow", "nodataflow")}
-    return _cost_entry(name, "loop_body", n, reports)
+    reports, drifts = {}, {}
+    for mode in ("dataflow", "nodataflow"):
+        exe = blas.compile(loop_spec, mode=mode)
+        reports[mode] = exe.cost_report(shapes)
+        if profiled and n <= MAX_TIMED_N:
+            drifts[mode] = exe.profile(shapes, iters=PROFILE_ITERS)
+    entry = _cost_entry(name, "loop_body", n, reports)
+    return _drift_columns(entry, drifts)
 
 
 def check_gates(entries):
@@ -177,7 +210,7 @@ def check_gates(entries):
 def main(sizes=DEFAULT_SIZES, json_path=None, timed=True):
     entries = []
     cols = ("name,kind,n,bytes_fused,bytes_unfused,"
-            "vector_reduction,us_fused,us_unfused")
+            "vector_reduction,us_fused,us_unfused,drift_fused")
     print(cols)
     for n in sizes:
         rows = [
@@ -190,11 +223,13 @@ def main(sizes=DEFAULT_SIZES, json_path=None, timed=True):
         for e in rows:
             uf = e.get("us_fused")
             uu = e.get("us_unfused")
+            df = e.get("drift_fused")
             print(f"{e['name']},{e['kind']},{e['n']},"
                   f"{e['bytes_fused']},{e['bytes_unfused']},"
                   f"{e['vector_reduction']:.3f},"
                   f"{'' if uf is None else f'{uf:.1f}'},"
-                  f"{'' if uu is None else f'{uu:.1f}'}")
+                  f"{'' if uu is None else f'{uu:.1f}'},"
+                  f"{'' if df is None else f'{df:.3g}'}")
         entries.extend(rows)
 
     violations = check_gates(entries)

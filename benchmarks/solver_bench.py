@@ -154,21 +154,32 @@ def modeled_bytes_rows(sizes):
     and BENCH_fused_l2.json come from one implementation. (The
     bicgstab row charges the cond's full-step branch; the gmres row
     charges one whole restart — inner count loops times their trip
-    counts.)"""
+    counts.) cg/jacobi/bicgstab rows also carry the
+    `Executable.profile` drift columns at timing-tractable sizes;
+    gmres is excluded — its body is mostly nested inner loops, which
+    the top-level-stage drift join does not cover."""
     rows = []
-    for name, loop_spec in (
-            ("cg_spec", specs.CG_LOOP),
-            ("jacobi_spec", specs.JACOBI_LOOP),
-            ("bicgstab_spec", specs.BICGSTAB_LOOP),
-            ("gmres_spec", specs.gmres_loop(m=GMRES_BENCH_RESTART))):
+    for name, loop_spec, profiled in (
+            ("cg_spec", specs.CG_LOOP, True),
+            ("jacobi_spec", specs.JACOBI_LOOP, True),
+            ("bicgstab_spec", specs.BICGSTAB_LOOP, True),
+            ("gmres_spec", specs.gmres_loop(m=GMRES_BENCH_RESTART),
+             False)):
         for n in sizes:
-            e = fused_l2_bench.bench_loop_body(name, loop_spec, n)
-            rows.append({
+            e = fused_l2_bench.bench_loop_body(name, loop_spec, n,
+                                               profiled=profiled)
+            row = {
                 "solver": name, "n": n,
                 "bytes_per_iter_fused": e["bytes_fused"],
                 "bytes_per_iter_unfused": e["bytes_unfused"],
                 "vector_reduction": e["vector_reduction"],
-            })
+            }
+            for k in ("modeled_us_fused", "profile_us_fused",
+                      "drift_fused", "modeled_us_unfused",
+                      "profile_us_unfused", "drift_unfused"):
+                if k in e:
+                    row[k] = e[k]
+            rows.append(row)
     return rows
 
 

@@ -36,12 +36,13 @@ def main():
     engine = ServeEngine(cfg, params,
                          max_len=32 + args.new_tokens,
                          batch_size=4, temperature=0.0)
-    for bi, batch in enumerate(batches):
+    for bi, (batch, valid) in enumerate(batches):
         t0 = time.time()
-        res = engine.generate(batch, max_new_tokens=args.new_tokens)
+        res = engine.generate(batch, max_new_tokens=args.new_tokens,
+                              valid=valid)
         dt = time.time() - t0
-        print(f"batch {bi}: {res.steps} tokens x {batch.shape[0]} seqs "
-              f"in {dt:.2f}s ({batch.shape[0]*res.steps/dt:.1f} tok/s)")
+        print(f"batch {bi}: {res.steps} tokens x {valid} seqs "
+              f"in {dt:.2f}s ({valid * res.steps / dt:.1f} tok/s)")
         for i, row in enumerate(res.tokens):
             print(f"  req{i}: {row[:10]}…")
 

@@ -7,7 +7,7 @@ from __future__ import annotations
 from importlib import import_module
 
 _SUBPACKAGES = ("blas", "checkpoint", "configs", "core", "data", "ft",
-                "kernels", "launch", "models", "optim", "serve",
+                "kernels", "launch", "models", "obs", "optim", "serve",
                 "solvers", "train")
 
 

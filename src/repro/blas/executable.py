@@ -27,10 +27,13 @@ import pathlib
 from typing import Mapping, Optional, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import lowering, spec as spec_mod
-from repro.core.runtime import Program, Results
+from repro.core.runtime import (Program, Results, _synth_matrix,
+                                _synth_vector)
 from repro.core.spec import LoopSpec, ProgramSpec, SpecError
 from repro.solvers.driver import LoopProgram, SolverProgram, SolverResult
 
@@ -87,11 +90,16 @@ def _out_shape(rdef, blas: str, kind: str, sh: Mapping) -> tuple:
 
 def _program_cost(ir, shapes: Mapping, scope: str = ""):
     """Per-routine (flops, bytes) rows for one lowered program, plus
-    fused-group HBM savings, matrix-operand bytes, and public-output
-    shapes. `matrix_bytes` is the part of the naive traffic owed to
-    MAT-kind operands — identical in fused and unfused schedules (the
-    matrix is streamed once either way), so reports can separate it
-    from the vector handoff traffic that fusion actually removes."""
+    fused-group HBM savings, matrix-operand bytes, public-output
+    shapes, and per-fusion-group rows. `matrix_bytes` is the part of
+    the naive traffic owed to MAT-kind operands — identical in fused
+    and unfused schedules (the matrix is streamed once either way), so
+    reports can separate it from the vector handoff traffic that
+    fusion actually removes. The group rows (one per entry of
+    `ir.groups`, standalone singletons included) carry the keys
+    `Executable.profile` joins against measured `kernel.group` spans:
+    program / group (emission index) / routines / anchor / fused /
+    flops / bytes_naive / savings / savings_exact."""
     from repro.core import routines as R
     port_shape = {}
     for pi in ir.io.inputs:
@@ -105,12 +113,14 @@ def _program_cost(ir, shapes: Mapping, scope: str = ""):
 
     dtype_bytes = np.dtype(ir.spec.dtype).itemsize
     rows, out_port_shape, matrix_bytes = [], {}, 0
+    by_name = {}
     for name in ir.graph.order:
         r = ir.graph.nodes[name]
         rdef = r.rdef
         sh = {port: port_shape[(name, port)] for port in rdef.inputs}
         flops, nbytes = rdef.cost(sh) if rdef.cost else (0, 0)
         rows.append((f"{scope}{name}", r.blas, int(flops), int(nbytes)))
+        by_name[name] = (int(flops), int(nbytes))
         vec_elems = sum(
             int(np.prod(sh[p], dtype=np.int64))
             for p, k in rdef.inputs.items() if k == R.VEC)
@@ -139,29 +149,42 @@ def _program_cost(ir, shapes: Mapping, scope: str = ""):
     # internal edges are always vector handoffs (the matrix never
     # crosses a group edge).
     savings = savings_exact = 0
-    for g in ir.groups or ():
-        if not g.fused or len(g.nodes) < 2:
-            continue
+    group_rows = []
+    for gi, g in enumerate(ir.groups or ()):
         members = set(g.nodes)
-        for name in g.nodes:
-            r = ir.graph.nodes[name]
-            for port in r.rdef.outputs:
-                consumers = ir.graph.consumers_of(name, port)
-                internal = [e for e in consumers if e.dst in members]
-                if not internal:
-                    continue
-                elems = int(np.prod(out_port_shape[(name, port)],
-                                    dtype=np.int64))
-                port_bytes = elems * dtype_bytes
-                savings += 2 * port_bytes * len(internal)
-                savings_exact += port_bytes * len(internal)
-                external = [e for e in consumers
-                            if e.dst not in members]
-                if not external and port not in r.output_aliases:
-                    savings_exact += port_bytes
+        g_savings = g_exact = 0
+        if g.fused and len(g.nodes) >= 2:
+            for name in g.nodes:
+                r = ir.graph.nodes[name]
+                for port in r.rdef.outputs:
+                    consumers = ir.graph.consumers_of(name, port)
+                    internal = [e for e in consumers
+                                if e.dst in members]
+                    if not internal:
+                        continue
+                    elems = int(np.prod(out_port_shape[(name, port)],
+                                        dtype=np.int64))
+                    port_bytes = elems * dtype_bytes
+                    g_savings += 2 * port_bytes * len(internal)
+                    g_exact += port_bytes * len(internal)
+                    external = [e for e in consumers
+                                if e.dst not in members]
+                    if not external and port not in r.output_aliases:
+                        g_exact += port_bytes
+        savings += g_savings
+        savings_exact += g_exact
+        group_rows.append({
+            "program": ir.spec.name, "group": gi,
+            "routines": list(g.nodes), "anchor": g.anchor,
+            "fused": g.fused,
+            "flops": sum(by_name[n][0] for n in g.nodes),
+            "bytes_naive": sum(by_name[n][1] for n in g.nodes),
+            "savings": g_savings, "savings_exact": g_exact,
+        })
     out_shapes = {po.name: out_port_shape[(po.routine, po.port)]
                   for po in ir.io.outputs}
-    return rows, (savings, savings_exact), matrix_bytes, out_shapes
+    return (rows, (savings, savings_exact), matrix_bytes, out_shapes,
+            group_rows)
 
 
 @dataclasses.dataclass
@@ -333,6 +356,14 @@ class Executable:
             return sorted(self._impl.lir.lspec.solution)
         return ["x"]
 
+    @property
+    def trace_count(self) -> Optional[int]:
+        """How many times a loop program's iteration body has been
+        traced — the compile-once invariant is that this stays 1 no
+        matter how many solves ran. None for dataflow programs (their
+        retrace accounting lives in `core.lowering.cache_stats`)."""
+        return getattr(self._impl, "trace_count", None)
+
     def builder(self) -> ProgramBuilder:
         """Reconstruct a ProgramBuilder from this executable's spec."""
         if self._raw is None:
@@ -437,7 +468,7 @@ class Executable:
         maps public input / operand names to shape tuples (ints are
         one-element vector shapes; scalars may be omitted)."""
         if self.kind == "dataflow":
-            rows, (savings, exact), mat_bytes, _ = _program_cost(
+            rows, (savings, exact), mat_bytes, _, _ = _program_cost(
                 self._impl.ir, shapes)
             flops = sum(r[2] for r in rows)
             nbytes = sum(r[3] for r in rows)
@@ -452,6 +483,28 @@ class Executable:
                 f"{self.name!r}: cost_report needs a spec-described "
                 f"program; class-based solvers carry no registry cost "
                 f"model")
+        (setup_rows, body_rows, body_savings, body_exact,
+         body_mat) = self._loop_cost(shapes)
+        flops = sum(r[2] for r in body_rows)
+        nbytes = sum(r[3] for r in body_rows)
+        return CostReport(program=self.name, mode=self.mode,
+                          kind="loop",
+                          rows=tuple(setup_rows + body_rows),
+                          flops=flops, bytes_naive=nbytes,
+                          fused_savings=body_savings,
+                          fused_savings_exact=body_exact,
+                          matrix_bytes=body_mat)
+
+    def _loop_cost(self, shapes: Mapping, group_sink=None):
+        """Shape-propagating cost walk over a loop program's setup and
+        body stages (the engine under the loop branch of cost_report).
+        `group_sink`, when given, collects the per-fusion-group model
+        rows of the TOP-LEVEL body program stages only — the stages
+        whose kernels run directly in the body trace, i.e. the surface
+        `profile()` can actually measure (work inside `cond` branches
+        and nested count loops executes under lax control flow, where
+        kernel spans deliberately stay silent). Each sunk row gains a
+        `calls` count; a program invoked by several stages aggregates."""
         lir = self._impl.lir
         env = {}
         for oname, okind in lir.lspec.operands.items():
@@ -487,7 +540,7 @@ class Executable:
                         if stop.count.ast[0] == "num" else 1)
             return stop.max_iters
 
-        def walk(stages, scope, env):
+        def walk(stages, scope, env, group_sink=None):
             rows, savings, exact, mat_bytes = [], 0, 0, 0
             for cs in stages:
                 if cs.tag == "let":
@@ -542,9 +595,20 @@ class Executable:
                 else:
                     inner = {pub: env[src]
                              for pub, src in cs.inputs.items()}
-                    r, (s, se), mb, outs = _program_cost(
+                    r, (s, se), mb, outs, grows = _program_cost(
                         cs.ir, inner,
                         scope=f"{scope}{cs.ir.spec.name}.")
+                    if group_sink is not None:
+                        for gr in grows:
+                            key = (gr["program"], gr["group"])
+                            prev = next(
+                                (g for g in group_sink
+                                 if (g["program"], g["group"]) == key),
+                                None)
+                            if prev is None:
+                                group_sink.append({**gr, "calls": 1})
+                            else:
+                                prev["calls"] += 1
                     rows.extend(r)
                     savings += s
                     exact += se
@@ -562,16 +626,115 @@ class Executable:
             env[f.name] = field_shape(f, env)
         env["threshold"] = ()
         body_rows, body_savings, body_exact, body_mat = walk(
-            lir.body, "body:", env)
-        flops = sum(r[2] for r in body_rows)
-        nbytes = sum(r[3] for r in body_rows)
-        return CostReport(program=self.name, mode=self.mode,
-                          kind="loop",
-                          rows=tuple(setup_rows + body_rows),
-                          flops=flops, bytes_naive=nbytes,
-                          fused_savings=body_savings,
-                          fused_savings_exact=body_exact,
-                          matrix_bytes=body_mat)
+            lir.body, "body:", env, group_sink=group_sink)
+        return (setup_rows, body_rows, body_savings, body_exact,
+                body_mat)
+
+    def profile(self, shapes: Mapping, *,
+                iters: int = 20) -> "obs.DriftReport":
+        """Run the program under instrumentation and join measured
+        per-kernel wall clock against the roofline cost model: the
+        modeled-vs-measured **drift report**.
+
+        `shapes` is the same mapping `cost_report` takes. Operands are
+        synthesized deterministically (the benchmark generators), the
+        program runs once to compile, then `iters` instrumented
+        executions are timed — eagerly, NOT under `jax.jit`, so the
+        per-group `kernel.group` spans in the generated code fire with
+        concrete values. Dataflow programs time whole calls; loop
+        programs time `iters` executions of the iteration body's
+        top-level stages (work inside `cond` branches and nested count
+        loops runs under lax control flow, where spans deliberately
+        stay silent — such measurements appear only as `unmatched`).
+
+        Each report row carries the group's modeled bytes (fusion
+        savings applied in dataflow mode), its roofline time
+        max(flops/peak, bytes/bw), the measured mean wall clock, and
+        their ratio `drift`. On CPU the Pallas kernels run in
+        interpret mode, so expect very large drift — the model
+        describes the accelerator, the measurement python; the
+        per-group *structure* (which groups dominate, fused vs
+        unfused deltas) is the meaningful signal there.
+
+        Profiling records into a scoped registry: it neither requires
+        `obs.enable()` nor leaks records into user instrumentation."""
+        iters = int(iters)
+        if iters < 1:
+            raise ValueError("profile: iters must be >= 1")
+        peak, bw = _hw_constants()
+
+        def model_row(gr, calls):
+            nbytes = gr["bytes_naive"] - (
+                gr["savings"] if self.mode == "dataflow" else 0)
+            return {"program": gr["program"], "group": gr["group"],
+                    "routines": gr["routines"],
+                    "anchor": gr["anchor"], "flops": gr["flops"],
+                    "bytes": nbytes,
+                    "time_s": max(gr["flops"] / peak, nbytes / bw),
+                    "calls": calls}
+
+        if self.kind == "dataflow":
+            ir = self._impl.ir
+            _, _, _, _, grows = _program_cost(ir, shapes)
+            model_rows = [model_row(g, 1) for g in grows]
+            sizes = {}
+            for pi in ir.io.inputs:
+                if pi.name in shapes:
+                    sizes[pi.name] = _norm_shape(shapes[pi.name])
+                elif pi.kind == "scalar":
+                    sizes[pi.name] = ()
+            inputs = self._impl.synthetic_inputs(sizes)
+            with obs.capture():     # warm-up compiles kernels; its
+                out = ir.fn(dict(inputs))   # records are discarded
+                obs.block(out.values())
+            with obs.capture() as reg:
+                for _ in range(iters):
+                    ir.fn(dict(inputs))
+                records = list(reg.records)
+            return obs.join_drift(self.name, self.mode, "dataflow",
+                                  iters, model_rows, records)
+
+        if not isinstance(self._impl, LoopProgram):
+            raise TypeError(
+                f"{self.name!r}: profile needs a spec-described "
+                f"program; class-based solvers carry no registry cost "
+                f"model to drift against")
+        model_groups: list = []
+        self._loop_cost(shapes, group_sink=model_groups)
+        model_rows = [model_row(g, g["calls"]) for g in model_groups]
+        lir = self._impl.lir
+        dtype = lir.lspec.dtype
+        operands = {}
+        for i, oname in enumerate(sorted(lir.lspec.operands)):
+            okind = lir.lspec.operands[oname]
+            if okind == "scalar":
+                operands[oname] = jnp.asarray(0.5, dtype)
+                continue
+            if oname not in shapes:
+                raise ValueError(
+                    f"profile: missing shape for operand {oname!r} "
+                    f"(a {okind})")
+            sh = _norm_shape(shapes[oname])
+            if okind == "matrix":
+                operands[oname] = _synth_matrix(sh[0], sh[1], dtype, i)
+            else:
+                operands[oname] = _synth_vector(sh[0], dtype, i)
+        impl = self._impl
+        # threshold 0 ⇒ cond stages take their not-converged branch —
+        # the full step, matching the cost model's costlier-branch
+        # convention (synthetic operands never need to converge)
+        threshold = jnp.asarray(0.0, jnp.float32)
+        with obs.capture():         # setup + warm-up step: records
+            state, _, _ = impl._init_state(operands)    # discarded
+            warm, _ = impl._step(operands, state, threshold)
+            obs.block(jax.tree_util.tree_leaves(warm))
+        with obs.capture() as reg:
+            for _ in range(iters):
+                stepped = impl._step(operands, state, threshold)
+                obs.block(jax.tree_util.tree_leaves(stepped))
+            records = list(reg.records)
+        return obs.join_drift(self.name, self.mode, "loop", iters,
+                              model_rows, records)
 
     # -- persistence -----------------------------------------------------
 

@@ -34,6 +34,7 @@ from typing import Callable, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import gemv as gemv_mod, ops, symv as symv_mod
 from repro.kernels.common import (LANES, as_2d, cdiv, default_interpret,
                                   pad_to, pl, pltpu, smem_scalar_spec)
@@ -572,6 +573,28 @@ def emit_program(graph: DataflowGraph, groups: List[FusionGroup],
             fused_callables[gi] = make(graph, g, dtype,
                                        interpret=interpret)
 
+    if obs.enabled():
+        # one tag per generated kernel / standalone dispatch so JSONL
+        # traces carry the whole emitted-kernel inventory
+        for gi, g in enumerate(groups):
+            kind = ("anchored" if g.anchor else
+                    "fused" if gi in fused_callables else "standalone")
+            obs.event("codegen.group", program=graph.spec.name,
+                      mode=mode, group=gi, kind=kind,
+                      anchor=g.anchor, routines=list(g.nodes))
+
+    def _group_span(gi, g, timed):
+        """Timing hook around one group execution: a `kernel.group`
+        span when recording is on AND the operands are concrete (a
+        span during jit tracing would time the trace, not the
+        kernel)."""
+        if not timed:
+            return obs.NULL_SPAN
+        return obs.span(
+            "kernel.group", program=graph.spec.name, mode=mode,
+            group=gi, anchor=g.anchor, fused=g.fused,
+            routines="+".join(g.nodes))
+
     def program(inputs: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
         missing = [n for n in graph.input_names() if n not in inputs]
         if missing:
@@ -582,6 +605,8 @@ def emit_program(graph: DataflowGraph, groups: List[FusionGroup],
             for key in bindings:
                 env[key] = inputs[pub]
 
+        timed = obs.enabled() and obs.concrete(inputs.values())
+
         def scalar_value(rspec, sname):
             b = rspec.scalars[sname]
             if b.kind == "value":
@@ -589,26 +614,33 @@ def emit_program(graph: DataflowGraph, groups: List[FusionGroup],
             return jnp.asarray(inputs[b.input_name], jnp.float32)
 
         for gi, g in enumerate(groups):
-            if gi in fused_callables:
-                run = fused_callables[gi]
-                sig = run.signature
-                scalars = {
-                    (rn, sn): scalar_value(graph.nodes[rn], sn)
-                    for (rn, sn) in sig.scalar_keys}
-                vec_ins = {k: env[k] for k in sig.vec_in_keys}
-                env.update(run(scalars, vec_ins))
-            else:
-                for name in g.nodes:
-                    rspec = graph.nodes[name]
-                    rdef = rspec.rdef
-                    s = {sn: scalar_value(rspec, sn)
-                         for sn in rdef.scalars}
-                    ins = {p: env[(name, p)] for p in rdef.inputs}
-                    out = _call_standalone(rspec, s, ins, mode, interpret)
-                    out_ports = list(rdef.outputs)
-                    outs = out if isinstance(out, tuple) else (out,)
-                    for port, val in zip(out_ports, outs):
-                        env[(name, port)] = val
+            with _group_span(gi, g, timed):
+                if gi in fused_callables:
+                    run = fused_callables[gi]
+                    sig = run.signature
+                    scalars = {
+                        (rn, sn): scalar_value(graph.nodes[rn], sn)
+                        for (rn, sn) in sig.scalar_keys}
+                    vec_ins = {k: env[k] for k in sig.vec_in_keys}
+                    out = run(scalars, vec_ins)
+                    if timed:
+                        obs.block(out.values())
+                    env.update(out)
+                else:
+                    for name in g.nodes:
+                        rspec = graph.nodes[name]
+                        rdef = rspec.rdef
+                        s = {sn: scalar_value(rspec, sn)
+                             for sn in rdef.scalars}
+                        ins = {p: env[(name, p)] for p in rdef.inputs}
+                        out = _call_standalone(rspec, s, ins, mode,
+                                               interpret)
+                        out_ports = list(rdef.outputs)
+                        outs = out if isinstance(out, tuple) else (out,)
+                        for port, val in zip(out_ports, outs):
+                            env[(name, port)] = val
+                        if timed:
+                            obs.block(outs)
             # propagate along edges leaving this group
             for name in g.nodes:
                 for port in graph.nodes[name].rdef.outputs:

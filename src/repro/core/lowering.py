@@ -31,6 +31,8 @@ import json
 import pathlib
 from typing import Callable, List, Mapping, Optional, Tuple, Union
 
+from repro import obs
+
 from . import codegen, fusion, spec as spec_mod
 from .graph import (DataflowGraph, ProgramIO, check_port_kinds,
                     collect_io, topo_sort)
@@ -162,10 +164,17 @@ def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
     if upto is not None and upto not in known:
         raise ValueError(f"unknown pass {upto!r}; pipeline: {known}")
     for name, p in PIPELINE:
-        p(ir)
+        with obs.span(f"lowering.{name}", digest=ir.digest[:12],
+                      mode=mode):
+            p(ir)
         ir.passes_run.append(name)
         if name == upto:
             break
+    if obs.enabled():
+        obs.event("lowering.done",
+                  program=ir.spec.name if ir.spec else None,
+                  digest=ir.digest[:12], mode=mode, fuse=fuse,
+                  anchor=anchor, passes=list(ir.passes_run))
     return ir
 
 
@@ -197,8 +206,11 @@ def compile_cached(raw, *, mode: str = "dataflow",
     hit = _CACHE.get(key)
     if hit is not None:
         _STATS["hits"] += 1
+        obs.counter("lowering.cache.hit", digest=key[0][:12],
+                    mode=mode)
         return hit
     _STATS["misses"] += 1
+    obs.counter("lowering.cache.miss", digest=key[0][:12], mode=mode)
     ir = lower(raw, mode=mode, fuse=fuse, anchor=anchor,
                interpret=interpret)
     _CACHE[key] = ir
@@ -206,6 +218,10 @@ def compile_cached(raw, *, mode: str = "dataflow",
 
 
 def cache_stats() -> Mapping[str, int]:
+    """Program-cache hit/miss/size counters. The same hits and misses
+    are published as `lowering.cache.hit` / `lowering.cache.miss` obs
+    counters when recording is enabled (`repro.obs`), which is the
+    supported way to consume them off-process (JSONL export)."""
     return dict(_STATS, size=len(_CACHE))
 
 

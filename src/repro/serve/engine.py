@@ -18,6 +18,10 @@ from repro.models import decode_step, init_cache, prefill
 
 @dataclasses.dataclass
 class GenerationResult:
+    """Generated ids for the REAL requests of one batch: filler rows
+    (a short final batch is padded to size by repeating its last
+    request) are dropped before results leave the engine, so callers
+    never mistake a filler's tokens for a served response."""
     tokens: List[List[int]]     # per-sequence generated ids
     steps: int
 
@@ -49,13 +53,22 @@ class ServeEngine:
         self._step = jax.jit(_step, donate_argnums=1)
 
     def generate(self, prompts, *, max_new_tokens: int,
-                 stop_token: Optional[int] = None) -> GenerationResult:
+                 stop_token: Optional[int] = None,
+                 valid: Optional[int] = None) -> GenerationResult:
         """prompts: (B, S) int32 (right-aligned, same length — the
-        batcher pads upstream)."""
+        batcher pads upstream). `valid` is the per-batch real-request
+        count from `pad_and_batch`: rows past it are fillers and are
+        dropped from the result (they still decode — the batch shape
+        is fixed — but their tokens never surface)."""
         prompts = jnp.asarray(prompts, jnp.int32)
         b, s = prompts.shape
         assert b == self.batch_size, (b, self.batch_size)
         assert s + max_new_tokens <= self.max_len
+        if valid is None:
+            valid = b
+        if not 0 < valid <= b:
+            raise ValueError(
+                f"valid={valid} must be in 1..batch_size={b}")
 
         logits, caches, pos = self._prefill(self.params, prompts)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -74,19 +87,27 @@ class ServeEngine:
             outs.append(tok)
         toks = jnp.stack(outs, axis=1)
         return GenerationResult(tokens=[list(map(int, row))
-                                        for row in toks],
+                                        for row in toks[:valid]],
                                 steps=toks.shape[1])
 
 
 def pad_and_batch(prompts: List[List[int]], batch_size: int,
                   pad_id: int = 0):
-    """Left-pad a ragged request list into fixed (B, S) batches."""
+    """Left-pad a ragged request list into fixed (B, S) batches.
+
+    Returns (batch, valid) pairs: `valid` is how many leading rows are
+    real requests. A short final chunk is filled to `batch_size` by
+    repeating its last request, so without the count a caller reading
+    the batch array alone cannot tell a filler row from a genuinely
+    duplicated request — pass `valid` through to
+    `ServeEngine.generate` and the fillers never reach a result."""
     batches = []
     for i in range(0, len(prompts), batch_size):
         chunk = prompts[i:i + batch_size]
+        valid = len(chunk)
         while len(chunk) < batch_size:
             chunk = chunk + [chunk[-1]]      # repeat to fill the batch
         s = max(len(p) for p in chunk)
         rows = [[pad_id] * (s - len(p)) + list(p) for p in chunk]
-        batches.append(jnp.asarray(rows, jnp.int32))
+        batches.append((jnp.asarray(rows, jnp.int32), valid))
     return batches

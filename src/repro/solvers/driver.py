@@ -35,6 +35,7 @@ from typing import Dict, Mapping, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import lowering
 from repro.core.expr import sdiv as _sdiv  # noqa: F401  (re-export)
 from repro.core.runtime import Program
@@ -63,6 +64,19 @@ class SolverResult:
         return (f"SolverResult(iterations={int(self.iterations)}, "
                 f"residual={float(self.residual):.3e}, "
                 f"converged={bool(self.converged)})")
+
+    def history_trimmed(self):
+        """Residual history without the NaN tail past the stopping
+        point: a (iterations + 1,) numpy array, or a per-lane list of
+        such arrays for batched results (lanes stop at different
+        iterations, so the trimmed histories are ragged)."""
+        import numpy as np
+        hist = np.asarray(self.history)
+        its = np.asarray(self.iterations)
+        if its.ndim:
+            return [hist[lane, :int(k) + 1]
+                    for lane, k in enumerate(its)]
+        return hist[:int(its) + 1]
 
 
 class SolverProgram:
@@ -120,6 +134,8 @@ class SolverProgram:
 
             def body(carry):
                 self.trace_count += 1  # python side effect: counts traces
+                obs.event("loop.trace", program=self.name,
+                          mode=self.mode, trace=self.trace_count)
                 k, _, st, h = carry
                 st, res = self._step(operands, st, threshold)
                 res = jnp.asarray(res, jnp.float32)
@@ -147,12 +163,41 @@ class SolverProgram:
             aux=sol,
         )
 
+    def _export_result(self, res: SolverResult, *, batched: bool
+                       ) -> None:
+        """Convergence telemetry: one `solver.result` event per solve
+        with (iterations, final_residual, converged) — per lane for
+        batched solves, never the NaN-padded raw history."""
+        if not obs.enabled():
+            return
+        import numpy as np
+        its = np.asarray(res.iterations)
+        resid = np.asarray(res.residual)
+        conv = np.asarray(res.converged)
+        if batched:
+            obs.event("solver.result", program=self.name,
+                      mode=self.mode, batch=int(its.shape[0]),
+                      iterations=[int(k) for k in its],
+                      final_residual=[float(r) for r in resid],
+                      converged=[bool(c) for c in conv])
+        else:
+            obs.event("solver.result", program=self.name,
+                      mode=self.mode, iterations=int(its),
+                      final_residual=float(resid),
+                      converged=bool(conv))
+
     def _run(self, operands: Dict[str, jax.Array],
              tol: float) -> SolverResult:
         if self._solve_fn is None:
             self._solve_fn = self._build()
-        out = self._solve_fn(operands, jnp.float32(tol))
-        return self._package(out)
+        with obs.span("solver.solve", program=self.name,
+                      mode=self.mode):
+            out = self._solve_fn(operands, jnp.float32(tol))
+            if obs.enabled():
+                obs.block(jax.tree_util.tree_leaves(out))
+        res = self._package(out)
+        self._export_result(res, batched=False)
+        return res
 
     def _run_batched(self, operands: Dict[str, jax.Array], tol: float,
                      in_axes: Mapping[str, Optional[int]]) -> SolverResult:
@@ -164,8 +209,14 @@ class SolverProgram:
             fn = jax.jit(jax.vmap(self._build_raw(),
                                   in_axes=(dict(in_axes), None)))
             self._batched_fns[key] = fn
-        out = fn(operands, jnp.float32(tol))
-        return self._package(out)
+        with obs.span("solver.solve", program=self.name,
+                      mode=self.mode, batched=True):
+            out = fn(operands, jnp.float32(tol))
+            if obs.enabled():
+                obs.block(jax.tree_util.tree_leaves(out))
+        res = self._package(out)
+        self._export_result(res, batched=True)
+        return res
 
     def describe(self) -> str:
         """Fusion-plan report for every compiled iteration-body piece."""
@@ -278,7 +329,19 @@ class LoopProgram(SolverProgram):
     def _run_inner(self, cs, env):
         """One nested iterate: its own `lax.while_loop` inside the
         enclosing loop's body trace. Inner state initializes from the
-        enclosing environment; yields export final inner state."""
+        enclosing environment; yields export final inner state. When
+        the enclosing environment is concrete (eager profiling) the
+        whole inner loop is timed as one `loop.inner` span — its body
+        runs under lax control flow, so per-kernel spans inside it
+        deliberately stay silent."""
+        ispec = cs.stage
+        timed = obs.enabled() and obs.concrete(env.values())
+        with (obs.span("loop.inner", program=self.name,
+                       counter=ispec.counter) if timed
+              else obs.NULL_SPAN):
+            self._run_inner_body(cs, env)
+
+    def _run_inner_body(self, cs, env):
         ispec = cs.stage
         state = self._init_fields(ispec.state, env)
         stop = ispec.stop

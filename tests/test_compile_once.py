@@ -1,0 +1,84 @@
+"""Compile-once gate, promoted from the solver benchmark into tier-1.
+
+The driver wraps every iteration in one jitted `lax.while_loop`, so a
+whole solve must trace its body exactly once — a retrace per iteration
+is the regression the benchmark's trace-count gate was built to catch,
+and this file makes the same invariant fail fast under pytest for all
+four JSON loop specs. Recompiling the same spec must also hit the
+digest-keyed lowering cache: the body programs compile once per
+process, not once per Executable.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import blas
+from repro.core import lowering
+from repro.solvers import specs
+from repro.solvers.iterative import jacobi_dinv
+
+N = 24
+
+
+def _spd(n, seed=0):
+    k = jax.random.PRNGKey(seed)
+    m = jax.random.normal(k, (n, n), jnp.float32)
+    return m @ m.T / n + jnp.eye(n, dtype=jnp.float32)
+
+
+def _nonsym(n, seed=3):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (n, n), jnp.float32) / jnp.sqrt(n) \
+        + 3.0 * jnp.eye(n)
+
+
+def _diag_dominant(n, seed=0):
+    a = _spd(n, seed)
+    return a + 2.0 * jnp.diag(jnp.sum(jnp.abs(a), axis=1))
+
+
+def _case(name):
+    x0 = jnp.zeros(N, jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (N,), jnp.float32)
+    if name == "cg":
+        return specs.CG_LOOP, {"A": _spd(N), "b": b, "x0": x0}
+    if name == "jacobi":
+        A = _diag_dominant(N)
+        return specs.JACOBI_LOOP, {"A": A, "b": b, "x0": x0,
+                                   "dinv": jacobi_dinv(A),
+                                   "omega": jnp.float32(1.0)}
+    if name == "bicgstab":
+        return specs.BICGSTAB_LOOP, {"A": _nonsym(N), "b": b, "x0": x0}
+    assert name == "gmres"
+    return specs.GMRES_LOOP, {"A": _nonsym(N), "b": b, "x0": x0}
+
+
+@pytest.mark.parametrize("name", ["cg", "jacobi", "bicgstab", "gmres"])
+def test_loop_body_traces_once(name):
+    """tol=0 forces the full max_iters iterations (no early exit), so
+    a per-iteration retrace cannot hide behind fast convergence."""
+    spec, ops = _case(name)
+    max_iters = 2 if name == "gmres" else 4   # one gmres iter = restart
+    exe = blas.compile(spec, max_iters=max_iters)
+    res = exe.run(tol=0.0, **ops)
+    assert res.x.shape == (N,)
+    assert int(res.iterations) == max_iters
+    assert exe.trace_count == 1
+    # more solves through the same handle still never retrace
+    exe.run(tol=0.0, **ops)
+    assert exe.trace_count == 1
+
+
+@pytest.mark.parametrize("name", ["cg", "jacobi", "bicgstab", "gmres"])
+def test_recompile_hits_lowering_cache(name):
+    spec, ops = _case(name)
+    max_iters = 2 if name == "gmres" else 4
+    blas.compile(spec, max_iters=max_iters).run(tol=0.0, **ops)
+    before = lowering.cache_stats()
+    exe = blas.compile(spec, max_iters=max_iters)
+    exe.run(tol=0.0, **ops)
+    after = lowering.cache_stats()
+    # every body/setup stage program of the recompile is a cache hit
+    assert after["hits"] > before["hits"]
+    assert after["misses"] == before["misses"]
+    assert exe.trace_count == 1

@@ -1,0 +1,298 @@
+"""repro.obs: registry semantics, JSONL + CLI, and the instrumentation
+threaded through lowering / fusion / codegen / solver driver — plus the
+`Executable.profile` drift report for both program kinds.
+
+Tests that need recording ON use `obs.capture()` so nothing leaks into
+the process registry other tests (and the disabled-by-default gate in
+test_perf_paths) rely on.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import blas, obs
+from repro.obs.__main__ import main as obs_cli
+from repro.solvers import specs
+
+# uniquely named copies of the canonical anchored chain: a cached
+# compile skips the pipeline entirely (and so emits no spans/events),
+# so instrumentation tests must force a fresh lowering
+def _gemv_chain(name):
+    return {
+        "name": name,
+        "routines": [
+            {"blas": "gemv", "name": "mv",
+             "scalars": {"alpha": 1.0, "beta": 0.0},
+             "inputs": {"A": "A", "x": "p", "y": "y0"},
+             "connections": {"out": "up.x"}, "outputs": {"out": "q"}},
+            {"blas": "axpy", "name": "up",
+             "scalars": {"alpha": {"input": "neg_alpha"}},
+             "inputs": {"y": "r"},
+             "connections": {"out": "rn.x"},
+             "outputs": {"out": "r_next"}},
+            {"blas": "nrm2", "name": "rn", "outputs": {"out": "rnorm"}},
+        ],
+    }
+
+
+def _cg_ops(n=16):
+    return {"A": jnp.eye(n, dtype=jnp.float32) * 2.0,
+            "b": jnp.ones(n, jnp.float32),
+            "x0": jnp.zeros(n, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Registry core
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_by_default_records_nothing():
+    assert not obs.enabled()
+    assert obs.span("x") is obs.NULL_SPAN
+    obs.counter("c")
+    obs.event("e")
+    assert obs.records() == []
+    assert obs.counters() == {}
+
+
+def test_span_counter_event_record_shapes():
+    with obs.capture() as reg:
+        with obs.span("outer", program="p"):
+            with obs.span("inner"):
+                pass
+            obs.counter("hits", 2, mode="dataflow")
+            obs.event("decided", reason="because")
+        recs = list(reg.records)
+    inner, ctr, evt, outer = recs       # spans record on exit
+    assert inner["kind"] == "span" and inner["name"] == "inner"
+    assert inner["path"] == "outer/inner"       # nesting is recorded
+    assert inner["dur_s"] >= 0.0
+    assert outer["name"] == "outer"
+    assert outer["attrs"] == {"program": "p"}
+    assert outer["dur_s"] >= inner["dur_s"]
+    assert ctr == {"kind": "counter", "name": "hits", "n": 2,
+                   "attrs": {"mode": "dataflow"}}
+    assert evt["kind"] == "event" and evt["name"] == "decided"
+    assert evt["attrs"] == {"reason": "because"}
+    assert reg.counters == {"hits": 2}
+
+
+def test_capture_is_scoped():
+    with obs.capture() as inner_reg:
+        obs.event("inside")
+        assert obs.enabled()
+        assert len(inner_reg.records) == 1
+    assert not obs.enabled()        # outer (disabled) registry restored
+    assert obs.records() == []      # nothing leaked
+
+
+def test_enable_disable_reset():
+    obs.enable()
+    try:
+        obs.event("a")
+        obs.counter("c")
+        assert len(obs.records()) == 2
+        obs.reset()
+        assert obs.records() == [] and obs.counters() == {}
+    finally:
+        obs.disable()
+        obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# JSONL export + CLI
+# ---------------------------------------------------------------------------
+
+
+def _write_jsonl(tmp_path):
+    with obs.capture() as reg:
+        with obs.span("work", stage="s"):
+            obs.counter("widgets", 3)
+        obs.event("done", ok=True)
+        path = reg.export_jsonl(tmp_path / "trace.jsonl")
+    return path
+
+
+def test_jsonl_roundtrip_and_summary(tmp_path):
+    path = _write_jsonl(tmp_path)
+    recs = obs.load_jsonl(path)
+    assert [r["kind"] for r in recs] == ["counter", "span", "event"]
+    s = obs.summarize_records(recs)
+    assert s["spans"]["work"]["count"] == 1
+    assert s["counters"]["widgets"] == 3
+    assert s["events"]["done"] == 1
+    assert "work" in obs.format_summary(s)
+
+
+def test_cli_summarize_trace_diff(tmp_path, capsys):
+    path = str(_write_jsonl(tmp_path))
+    assert obs_cli(["summarize", path]) == 0
+    out = capsys.readouterr().out
+    assert "work" in out and "widgets" in out
+    assert obs_cli(["trace", path, "--kind", "span", "--limit", "5"]) == 0
+    assert "[span] work" in capsys.readouterr().out
+    assert obs_cli(["diff", path, path]) == 0
+    assert "B/A" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Pipeline instrumentation: lowering spans, cache counters, fusion
+# decisions, codegen group tags
+# ---------------------------------------------------------------------------
+
+
+def test_lowering_spans_and_cache_counters():
+    spec = _gemv_chain("obs_probe_lowering")
+    with obs.capture() as reg:
+        blas.compile(spec)                       # miss: full pipeline
+        blas.compile(spec)                       # hit: cached IR
+        recs = list(reg.records)
+        ctrs = dict(reg.counters)
+    span_names = {r["name"] for r in recs if r["kind"] == "span"}
+    assert {"lowering.parse", "lowering.graph", "lowering.infer",
+            "lowering.fuse", "lowering.place",
+            "lowering.emit"} <= span_names
+    assert ctrs.get("lowering.cache.miss", 0) == 1
+    assert ctrs.get("lowering.cache.hit", 0) == 1
+    done = [r for r in recs if r["kind"] == "event"
+            and r["name"] == "lowering.done"]
+    assert len(done) == 1                        # once per fresh lower
+    assert done[0]["attrs"]["program"] == "obs_probe_lowering"
+
+
+def test_fusion_decision_events():
+    """The anchored chain absorbs its level-1 consumers: the planner's
+    reasoning surfaces as one decision event per anchor candidate."""
+    with obs.capture() as reg:
+        blas.compile(_gemv_chain("obs_probe_fusion"))
+        evts = [r for r in reg.records if r["kind"] == "event"
+                and r["name"] in ("fusion.absorb", "fusion.reject")]
+    absorbs = [e for e in evts if e["name"] == "fusion.absorb"]
+    assert absorbs, "gemv anchor must absorb its axpy/nrm2 consumers"
+    for e in evts:
+        a = e["attrs"]
+        assert a["program"] == "obs_probe_fusion"
+        assert a["anchor"] == "mv"
+        assert a["direction"] in ("down", "up")
+        if e["name"] == "fusion.reject":
+            assert a["reason"]
+
+
+def test_codegen_group_events_tag_every_group():
+    with obs.capture() as reg:
+        exe = blas.compile(_gemv_chain("obs_probe_codegen"))
+        evts = [r for r in reg.records if r["kind"] == "event"
+                and r["name"] == "codegen.group"]
+    assert len(evts) == len(exe._impl.ir.groups)
+    kinds = {e["attrs"]["kind"] for e in evts}
+    assert "anchored" in kinds                  # the gemv group
+    anchored = [e for e in evts if e["attrs"]["kind"] == "anchored"]
+    assert anchored[0]["attrs"]["anchor"] == "mv"
+    assert "mv" in anchored[0]["attrs"]["routines"]
+
+
+# ---------------------------------------------------------------------------
+# Solver telemetry (satellite: history + per-solve export)
+# ---------------------------------------------------------------------------
+
+
+def test_solver_result_event_and_history_trimmed():
+    exe = blas.compile(specs.CG_LOOP, max_iters=8)
+    ops = _cg_ops()
+    with obs.capture() as reg:
+        res = exe.run(**ops)
+        evts = [r for r in reg.records if r["kind"] == "event"
+                and r["name"] == "solver.result"]
+    assert len(evts) == 1
+    a = evts[0]["attrs"]
+    assert a["program"] == "cg"
+    assert a["iterations"] == int(res.iterations)
+    assert a["converged"] == bool(res.converged)
+    assert a["final_residual"] == pytest.approx(float(res.residual))
+    # history_trimmed drops the NaN tail past the stopping point
+    trimmed = res.history_trimmed()
+    assert len(trimmed) == int(res.iterations) + 1
+    assert not jnp.isnan(jnp.asarray(trimmed)).any()
+    assert jnp.isnan(res.history).sum() == len(res.history) - len(trimmed)
+
+
+def test_solver_result_event_batched():
+    exe = blas.compile(specs.CG_LOOP, max_iters=8)
+    n, nrhs = 16, 3
+    A = jnp.eye(n, dtype=jnp.float32) * 2.0
+    B = jnp.stack([jnp.ones(n), 2.0 * jnp.ones(n),
+                   3.0 * jnp.ones(n)]).astype(jnp.float32)
+    with obs.capture() as reg:
+        res = exe.batched(A=A, b=B, x0=jnp.zeros_like(B),
+                          axes={"A": None})
+        evts = [r for r in reg.records if r["kind"] == "event"
+                and r["name"] == "solver.result"]
+    assert len(evts) == 1
+    a = evts[0]["attrs"]
+    assert a["batch"] == nrhs
+    assert a["iterations"] == [int(k) for k in res.iterations]
+    assert a["converged"] == [bool(c) for c in res.converged]
+    trimmed = res.history_trimmed()
+    assert len(trimmed) == nrhs
+    for lane, k in enumerate(res.iterations):
+        assert len(trimmed[lane]) == int(k) + 1
+
+
+# ---------------------------------------------------------------------------
+# profile(): the modeled-vs-measured drift report (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+def test_profile_dataflow_axpydot():
+    import repro.core as core
+    exe = blas.compile(core.AXPYDOT_SPEC)
+    n = 64
+    rep = exe.profile({"v": n, "w": n, "u": n}, iters=2)
+    assert rep.kind == "dataflow" and rep.iters == 2
+    assert len(rep.rows) == len(exe._impl.ir.groups)
+    row = rep.rows[0]
+    assert set(row.routines) == {"zcalc", "zdot"}   # fused group
+    assert row.modeled_bytes > 0
+    assert row.modeled_time_s > 0
+    assert row.measured_s is not None and row.measured_s > 0
+    assert row.drift == pytest.approx(
+        row.measured_s / row.modeled_time_s)
+    # modeled bytes apply the fusion savings in dataflow mode
+    cr = exe.cost_report({"v": n, "w": n, "u": n})
+    assert rep.modeled_bytes == cr.bytes
+    j = rep.to_json()
+    assert j["drift"] == rep.drift
+    assert j["groups"][0]["routines"] == list(row.routines)
+    json.dumps(j)                                # JSON-serializable
+
+
+def test_profile_loop_cg():
+    exe = blas.compile(specs.CG_LOOP, max_iters=4)
+    rep = exe.profile({"A": (16, 16), "b": 16, "x0": 16}, iters=2)
+    assert rep.kind == "loop"
+    programs = {r.program for r in rep.rows}
+    assert "cg_matvec" in programs               # the gemv body stage
+    assert all(r.measured_s is not None for r in rep.rows)
+    assert all((r.drift or 0) > 0 for r in rep.rows)
+    assert rep.modeled_bytes > 0
+    assert str(rep)                              # table renders
+
+
+def test_profile_runs_without_enabling_obs():
+    exe = blas.compile(specs.CG_LOOP, max_iters=4)
+    assert not obs.enabled()
+    exe.profile({"A": (16, 16), "b": 16, "x0": 16}, iters=1)
+    assert not obs.enabled()
+    assert obs.records() == []                   # scoped, no leakage
+
+
+def test_profile_rejects_bad_iters_and_class_solvers():
+    from repro.solvers import BiCGStab
+    exe = blas.compile(specs.CG_LOOP)
+    with pytest.raises(ValueError):
+        exe.profile({"A": (8, 8), "b": 8, "x0": 8}, iters=0)
+    wrapped = blas.Executable.from_solver(BiCGStab())
+    with pytest.raises(TypeError):
+        wrapped.profile({"A": (8, 8), "b": 8})

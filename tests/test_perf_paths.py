@@ -51,3 +51,32 @@ def test_moe_grouped_dispatch_matches_reference():
     want = moe_ffn_reference(p, x, n_experts=e, top_k=k)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Observability off-switch: disabled instrumentation must cost nothing
+# ---------------------------------------------------------------------------
+
+
+def test_obs_disabled_adds_no_records_and_no_retrace():
+    """With `repro.obs` disabled (the default), the instrumented
+    compile/solve paths must leave zero records behind and must not
+    change jit retrace behaviour: the loop body still traces once and
+    repeated solves reuse the compiled loop."""
+    from repro import blas, obs
+    from repro.solvers import specs
+
+    assert not obs.enabled()
+    n = 16
+    A = jnp.eye(n, dtype=jnp.float32) * 2.0
+    b = jnp.ones(n, jnp.float32)
+    ops = {"A": A, "b": b, "x0": jnp.zeros(n, jnp.float32)}
+
+    exe = blas.compile(specs.CG_LOOP, max_iters=4)
+    exe.run(tol=0.0, **ops)
+    exe.run(tol=0.0, **ops)
+    assert exe.trace_count == 1          # no retrace from span guards
+    assert obs.records() == []           # nothing recorded
+    assert obs.counters() == {}
+    # the disabled span is the shared null object — no per-call cost
+    assert obs.span("kernel.group") is obs.NULL_SPAN

@@ -54,15 +54,26 @@ def test_serve_engine_greedy_matches_decode_math():
     res2 = ServeEngine(cfg, params, max_len=48, batch_size=2).generate(
         prompts, max_new_tokens=6)
     assert res.tokens == res2.tokens
+    # valid=1 marks row 1 as batch filler: same decode, row dropped
+    res3 = ServeEngine(cfg, params, max_len=48, batch_size=2).generate(
+        prompts, max_new_tokens=6, valid=1)
+    assert len(res3.tokens) == 1
+    assert res3.tokens[0] == res.tokens[0]
 
 
 def test_pad_and_batch():
     batches = pad_and_batch([[1, 2], [3, 4, 5], [6]], batch_size=2,
                             pad_id=0)
     assert len(batches) == 2
-    assert batches[0].shape == (2, 3)
-    np.testing.assert_array_equal(np.asarray(batches[0][0]),
-                                  [0, 1, 2])
+    (full, full_valid), (short, short_valid) = batches
+    assert full.shape == (2, 3)
+    assert full_valid == 2
+    np.testing.assert_array_equal(np.asarray(full[0]), [0, 1, 2])
+    # the short final chunk fills with a repeat of its last request,
+    # and the valid count is how callers tell the filler apart
+    assert short.shape == (2, 1)
+    assert short_valid == 1
+    np.testing.assert_array_equal(np.asarray(short), [[6], [6]])
 
 
 def test_placement_hints_applied():
