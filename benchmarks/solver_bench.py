@@ -38,9 +38,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from repro.solvers import (CG, BiCGStab, Jacobi, LoopProgram,
                            PowerIteration, specs)
 from repro.solvers.iterative import jacobi_dinv
+from repro.tune.config import current_device_kind
 
 try:                              # under benchmarks/run.py
     from benchmarks import fused_l2_bench
@@ -192,10 +194,17 @@ def main(sizes=DEFAULT_SIZES, max_iters=20, json_path=None):
                                  n, max_iters)
             for rname, mode, nn, iters, us, tc in rows:
                 print(f"{rname},{mode},{nn},{iters},{us:.1f}")
+                # machine context so BENCH_solvers.json trajectories
+                # are comparable across hosts; `tiles` records the
+                # tile policy the solve compiled under ("auto" =
+                # whatever the persisted tuning table held)
                 timing_rows.append({"solver": rname, "mode": mode,
                                     "n": nn, "iters": iters,
                                     "us_per_iter": us,
-                                    "trace_count": tc})
+                                    "trace_count": tc,
+                                    "device_kind": current_device_kind(),
+                                    "interpret": default_interpret(),
+                                    "tiles": "auto"})
                 if tc > 1:
                     trace_violations.append(
                         f"{rname} mode={mode} n={nn}: iteration body "

@@ -36,6 +36,7 @@ from repro.core.runtime import (Program, Results, _synth_matrix,
                                 _synth_vector)
 from repro.core.spec import LoopSpec, ProgramSpec, SpecError
 from repro.solvers.driver import LoopProgram, SolverProgram, SolverResult
+from repro.tune import config as tile_config, store as tune_store
 
 from .builder import ProgramBuilder
 
@@ -307,12 +308,18 @@ class Executable:
     program, or a wrapped class-based solver."""
 
     def __init__(self, impl, raw: Optional[Mapping], kind: str,
-                 mode: str, interpret: Optional[bool]):
+                 mode: str, interpret: Optional[bool],
+                 fuse: Optional[bool] = None,
+                 anchor: Optional[bool] = None, tiles="auto"):
         self._impl = impl
         self._raw = raw
         self.kind = kind            # "dataflow" | "loop"
         self.mode = mode
         self.interpret = interpret
+        self.fuse = fuse
+        self.anchor = anchor
+        self.tiles = tiles          # the compile-time tiles request
+        self.tune_report = None     # set by .tune()
         self._jit_run = None        # dataflow: lazily jitted program
         self._batched_fns = {}
 
@@ -736,6 +743,98 @@ class Executable:
         return obs.join_drift(self.name, self.mode, "loop", iters,
                               model_rows, records)
 
+    # -- autotuning ------------------------------------------------------
+
+    def tune(self, shapes: Mapping, *, budget: Optional[int] = None,
+             iters: int = 3) -> "Executable":
+        """Sweep tile candidates for this program at the given operand
+        shapes and return a **new** Executable recompiled with the
+        winners (this handle is untouched). Winners persist in the
+        tuning store, so later `tiles="auto"` compiles — in this or
+        any other process on the same device kind — pick them up for
+        free. `budget` caps timed candidate measurements.
+
+        Loop programs tune each distinct top-level body stage program;
+        the stage shapes are taken from the loop operands by name."""
+        from repro.tune import autotuner
+
+        if self._raw is None:
+            raise ValueError(
+                f"{self.name!r} wraps a class-based solver with no "
+                f"JSON spec; there is nothing to re-lower with tuned "
+                f"tiles")
+        shapes = {k: v if isinstance(v, int) else _norm_shape(v)
+                  for k, v in shapes.items()}
+        if self.kind == "dataflow":
+            report = autotuner.tune_program(
+                self._raw, shapes, mode=self.mode, fuse=self.fuse,
+                anchor=self.anchor, interpret=self.interpret,
+                budget=budget, iters=iters)
+            reports = [report]
+        else:
+            reports = self._tune_loop_stages(shapes, budget=budget,
+                                             iters=iters)
+        tuned = compile(self._raw, mode=self.mode, fuse=self.fuse,
+                        anchor=self.anchor, interpret=self.interpret,
+                        max_iters=getattr(self._impl, "max_iters",
+                                          None)
+                        if self.kind == "loop" else None,
+                        tiles="auto")
+        tuned.tune_report = reports[0] if len(reports) == 1 else reports
+        return tuned
+
+    def _tune_loop_stages(self, shapes: Mapping, *, budget, iters):
+        """Tune the distinct ProgramStage specs of a loop body (and
+        setup), inferring each stage's input shapes from the loop
+        operand shapes via the stage's input bindings."""
+        from repro.tune import autotuner
+
+        lir = self._impl.lir
+        dim_of = {}
+        for oname, okind in lir.lspec.operands.items():
+            if okind == "scalar" or oname not in shapes:
+                continue
+            sh = shapes[oname]
+            dim_of[oname] = sh if isinstance(sh, tuple) else (sh,)
+        n_fallback = max(
+            (sh[0] for sh in dim_of.values() if len(sh) == 1),
+            default=max((sh[0] for sh in dim_of.values()), default=256))
+
+        seen, reports = set(), []
+
+        def visit(compiled):
+            for st in compiled:
+                if st.tag == "program":
+                    if st.ir.digest in seen:
+                        continue
+                    seen.add(st.ir.digest)
+                    st_shapes = {}
+                    for pub, kind in st.ir.io.input_kinds.items():
+                        env_name = st.inputs.get(pub, pub)
+                        if kind == "scalar":
+                            continue
+                        sh = dim_of.get(env_name)
+                        if sh is None:
+                            sh = ((n_fallback, n_fallback)
+                                  if kind == "matrix"
+                                  else (n_fallback,))
+                        elif kind == "matrix" and len(sh) == 1:
+                            sh = (sh[0], sh[0])
+                        st_shapes[pub] = sh
+                    reports.append(autotuner.tune_program(
+                        st.ir.raw, st_shapes, mode=self.mode,
+                        interpret=self.interpret, budget=budget,
+                        iters=iters))
+                elif st.tag == "cond":
+                    visit(st.then)
+                    visit(st.orelse)
+                elif st.tag == "loop":
+                    visit(st.body)
+
+        visit(lir.setup)
+        visit(lir.body)
+        return reports
+
     # -- persistence -----------------------------------------------------
 
     def save(self, path) -> pathlib.Path:
@@ -780,15 +879,23 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
             fuse: Optional[bool] = None,
             anchor: Optional[bool] = None,
             interpret: Optional[bool] = None,
-            max_iters: Optional[int] = None) -> Executable:
+            max_iters: Optional[int] = None,
+            tiles="auto") -> Executable:
     """The one front door: lower anything spec-shaped to an Executable.
 
     Dataflow specs go through the digest-keyed program cache
     (`core.lowering.compile_cached`); loop specs (an `iterate`
     section) lower to a generic LoopProgram whose stage programs hit
     the same cache. `fuse`/`anchor` (level-2 anchored fusion, default
-    follows `fuse`) and `max_iters` apply to the respective kind
-    only."""
+    follows `fuse`) and `max_iters` apply to the respective kind only.
+
+    `tiles` picks kernel block shapes: `"auto"` (default) consults the
+    persistent tuning table under `~/.cache/repro/` — a cold table
+    just keeps kernel defaults, never triggering measurement;
+    `"default"` skips the table; a `tune.TileConfig` applies one
+    explicit shape everywhere. Dataflow compiles with `tiles="auto"`
+    also persist a digest-keyed artifact (spec + resolved plan), so a
+    later process resolves this program with one table lookup."""
     raw = _to_raw(spec_or_builder)
     # the handle keeps its own copy: later caller-side mutation of the
     # spec dict must not make save()/spec/builder() disagree with the
@@ -800,17 +907,30 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
                 "fuse/anchor apply to dataflow programs; loop-program "
                 "stages fuse according to the mode")
         impl = LoopProgram(raw, mode=mode, max_iters=max_iters,
-                           interpret=interpret)
+                           interpret=interpret, tiles=tiles)
         return Executable(impl=impl, raw=raw, kind="loop", mode=mode,
-                          interpret=interpret)
+                          interpret=interpret, tiles=tiles)
     if max_iters is not None:
         raise ValueError(
             "max_iters applies to loop programs; this spec has no "
             "iterate section")
     ir = lowering.compile_cached(raw, mode=mode, fuse=fuse,
-                                 anchor=anchor, interpret=interpret)
+                                 anchor=anchor, interpret=interpret,
+                                 tiles=tiles)
+    if tiles == "auto":
+        # persist the compiled artifact once: the tuned flag (and a
+        # tuned plan) belongs to the autotuner, so an existing record
+        # is never overwritten by a plain compile
+        store = tune_store.get_store()
+        dk = tile_config.current_device_kind()
+        if store.artifact_spec(ir.digest, ir.mode, ir.fuse, ir.anchor,
+                               dk) is None:
+            store.put_artifact(ir.digest, ir.mode, ir.fuse, ir.anchor,
+                               dk, spec=ir.raw, plan=ir.tile_plan,
+                               tuned=False)
     return Executable(impl=Program.from_ir(ir), raw=raw,
-                      kind="dataflow", mode=mode, interpret=interpret)
+                      kind="dataflow", mode=mode, interpret=interpret,
+                      fuse=ir.fuse, anchor=ir.anchor, tiles=tiles)
 
 
 def load(path, **compile_kwargs) -> Executable:

@@ -41,6 +41,7 @@ from repro.kernels.common import (LANES, as_2d, cdiv, default_interpret,
 from repro.kernels.dot import iamax_block
 from repro.kernels.gemv import gemv_block
 from repro.kernels.symv import symv_block
+from repro.tune import config as tile_config
 
 from . import routines as R
 from .fusion import FusionGroup
@@ -64,19 +65,25 @@ _KERNEL_CALL: Dict[str, Callable] = {
     "nrm2": lambda s, i, kw: ops.nrm2(i["x"], **kw),
     "iamax": lambda s, i, kw: ops.iamax(i["x"], **kw),
     "gemv": lambda s, i, kw: ops.gemv(s["alpha"], i["A"], i["x"],
-                                      s["beta"], i["y"]),
+                                      s["beta"], i["y"], **kw),
     "gemvt": lambda s, i, kw: ops.gemvt(s["alpha"], i["A"], i["x"],
-                                        s["beta"], i["y"]),
-    "transpose": lambda s, i, kw: ops.transpose(i["A"]),
+                                        s["beta"], i["y"], **kw),
+    "transpose": lambda s, i, kw: ops.transpose(i["A"], **kw),
     "symv": lambda s, i, kw: ops.symv(s["alpha"], i["A"], i["x"],
-                                      s["beta"], i["y"]),
-    "ger": lambda s, i, kw: ops.ger(s["alpha"], i["x"], i["y"], i["A"]),
+                                      s["beta"], i["y"], **kw),
+    "ger": lambda s, i, kw: ops.ger(s["alpha"], i["x"], i["y"], i["A"],
+                                    **kw),
     "gemm": lambda s, i, kw: ops.gemm(s["alpha"], i["A"], i["B"],
-                                      s["beta"], i["C"]),
+                                      s["beta"], i["C"], **kw),
 }
 
+# level-2/3 kernels taking block-shape kwargs (symv's square window is
+# a single `block=`)
+_L2_BLOCK = {"gemv", "gemvt", "symv", "ger", "transpose", "gemm"}
 
-def _call_standalone(rspec, scalars, inputs, mode, interpret):
+
+def _call_standalone(rspec, scalars, inputs, mode, interpret,
+                     tile_cfg=None):
     rdef = rspec.rdef
     if mode == "reference" or rdef.kernel is None or \
             rspec.blas not in _KERNEL_CALL:
@@ -84,8 +91,44 @@ def _call_standalone(rspec, scalars, inputs, mode, interpret):
         return rdef.reference(scalars, *args)
     kw = {}
     if rdef.level == 1:
-        kw = dict(block_rows=rspec.window_size, interpret=interpret)
+        br = rspec.window_size
+        if tile_cfg is not None and tile_cfg.block_rows is not None:
+            br = tile_cfg.block_rows
+        kw = dict(block_rows=br, interpret=interpret)
+    elif rspec.blas in _L2_BLOCK:
+        kw = dict(interpret=interpret)
+        if tile_cfg is not None:
+            if rspec.blas == "symv":
+                if tile_cfg.block_m is not None:
+                    kw["block"] = tile_cfg.block_m
+            else:
+                if tile_cfg.block_m is not None:
+                    kw["block_m"] = tile_cfg.block_m
+                if tile_cfg.block_n is not None:
+                    kw["block_n"] = tile_cfg.block_n
+                if rspec.blas == "gemm" and \
+                        tile_cfg.block_k is not None:
+                    kw["block_k"] = tile_cfg.block_k
     return _KERNEL_CALL[rspec.blas](scalars, inputs, kw)
+
+
+def _standalone_dims(rspec, ins):
+    """The dims a standalone node's tile config is bucketed against —
+    must mirror the autotuner's `_discover_sites` convention: matrix
+    shape for level-2 (gemm appends its contraction dim), vector
+    length otherwise."""
+    rdef = rspec.rdef
+    for port, kind in rdef.inputs.items():
+        if kind == R.MAT:
+            sh = tuple(int(d) for d in ins[port].shape)
+            if rspec.blas == "gemm" and len(sh) == 2:
+                sh = (sh[0], sh[1], sh[1])
+            return sh
+    for port in rdef.inputs:
+        v = ins[port]
+        if getattr(v, "ndim", 0) >= 1:
+            return (int(v.shape[0]),)
+    return ()
 
 
 # ---------------------------------------------------------------------------
@@ -260,13 +303,42 @@ def _build_fused_kernel(graph: DataflowGraph, group: FusionGroup,
 
 
 def make_group_callable(graph: DataflowGraph, group: FusionGroup,
-                        dtype, *, interpret=None):
+                        dtype, *, interpret=None, tile_resolve=None):
     """Returns fn(scalars: {(r,s): val}, vec_ins: {(r,p): 1-D array})
-    -> {(r,p): value} for a fused group."""
+    -> {(r,p): value} for a fused group. `tile_resolve` is a
+    `TilePlan.lookup` resolver overriding the group's block_rows per
+    shape bucket."""
     interpret = default_interpret() if interpret is None else interpret
     sig = _group_signature(graph, group)
-    block_rows = max(graph.nodes[n].window_size for n in group.nodes)
+    default_rows = max(graph.nodes[n].window_size for n in group.nodes)
     kernel = _build_fused_kernel(graph, group, sig, dtype)
+    # one jitted pallas_call per (padded rows, block) — built once and
+    # reused, so eager re-execution (obs profiling) hits the jax
+    # dispatch cache instead of re-tracing the kernel every call
+    calls: Dict[tuple, Callable] = {}
+
+    def _call_for(rows, br):
+        fn = calls.get((rows, br))
+        if fn is not None:
+            return fn
+        vec_spec = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+        red_specs, red_shapes = _red_out_specs(graph, sig,
+                                               lambda i: (0, 0))
+        out_shapes = (
+            [jax.ShapeDtypeStruct((rows, LANES), dtype)
+             for _ in sig.elt_out_keys]
+            + red_shapes)
+        fn = jax.jit(pl.pallas_call(
+            kernel,
+            grid=(cdiv(rows, br),),
+            in_specs=[smem_scalar_spec()] * len(sig.scalar_keys)
+            + [vec_spec] * len(sig.vec_in_keys),
+            out_specs=[vec_spec] * len(sig.elt_out_keys) + red_specs,
+            out_shape=out_shapes,
+            interpret=interpret,
+        ))
+        calls[(rows, br)] = fn
+        return fn
 
     def run(scalars, vec_ins):
         vecs = [vec_ins[k] for k in sig.vec_in_keys]
@@ -281,27 +353,17 @@ def make_group_callable(graph: DataflowGraph, group: FusionGroup,
             v2d, _ = as_2d(v)
             v2ds.append(v2d)
         rows = v2ds[0].shape[0]
+        block_rows = default_rows
+        if tile_resolve is not None:
+            cfg = tile_resolve(n)
+            if cfg is not None and cfg.block_rows is not None:
+                block_rows = cfg.block_rows
         br = min(block_rows, rows)
         v2ds = [pad_to(v, br, axis=0) for v in v2ds]
         rows = v2ds[0].shape[0]
-        grid = (cdiv(rows, br),)
-        vec_spec = pl.BlockSpec((br, LANES), lambda i: (i, 0))
-        red_specs, red_shapes = _red_out_specs(graph, sig,
-                                               lambda i: (0, 0))
-        out_shapes = (
-            [jax.ShapeDtypeStruct((rows, LANES), dtype)
-             for _ in sig.elt_out_keys]
-            + red_shapes)
-        outs = pl.pallas_call(
-            kernel,
-            grid=grid,
-            in_specs=[smem_scalar_spec()] * len(sig.scalar_keys)
-            + [vec_spec] * len(v2ds),
-            out_specs=[vec_spec] * len(sig.elt_out_keys) + red_specs,
-            out_shape=out_shapes,
-            interpret=interpret,
-        )(*[jnp.reshape(scalars[k], (1,)).astype(jnp.float32)
-            for k in sig.scalar_keys], *v2ds)
+        outs = _call_for(rows, br)(
+            *[jnp.reshape(scalars[k], (1,)).astype(jnp.float32)
+              for k in sig.scalar_keys], *v2ds)
         return _collect_results(graph, sig, outs, n)
 
     run.signature = sig
@@ -367,11 +429,12 @@ def _anchored_signature(graph: DataflowGraph, group: FusionGroup
 
 
 def _build_anchored_kernel(graph: DataflowGraph, group: FusionGroup,
-                           sig: AnchoredSignature, out_dtype, nj: int):
+                           sig: AnchoredSignature, out_dtype,
+                           ni: int, nj: int):
     """Generate the Pallas kernel body for an anchored group.
 
-    Grid is (row blocks, col blocks), col axis innermost — the same
-    schedule as the standalone gemv/symv kernels. Per step: the
+    Grid is (ni row blocks, nj col blocks), col axis innermost — the
+    same schedule as the standalone gemv/symv kernels. Per step: the
     absorbed producer chain runs on the resident (bm, 1) row windows
     (values stay in trace scope for both phases; the recompute is a
     few VPU ops on VMEM-resident data), the accumulator scratch picks
@@ -379,12 +442,21 @@ def _build_anchored_kernel(graph: DataflowGraph, group: FusionGroup,
     block the finished output window feeds the spliced consumer
     emitters: element-wise outputs are written back, reductions
     accumulate across row blocks. The anchor's output vector exists
-    only in the VMEM scratch unless it is itself a program output."""
+    only in the VMEM scratch unless it is itself a program output.
+
+    The grid shape is static here, so a single-step grid (1, 1) —
+    every problem whose dims clamp below the block shape, i.e. the
+    whole small-n regime — compiles to straight-line code: no
+    `pl.when` phases, no cross-step accumulator staging, and (symv)
+    no second mirror-window operand, since the lone block's mirror is
+    its own transpose. In interpret mode those conds and the extra
+    window load were costing more than the absorbed level-1 work."""
     members = set(group.nodes)
     blas = graph.nodes[sig.anchor].blas
     ns, nv = len(sig.scalar_keys), len(sig.win_in_keys)
     ne = len(sig.elt_out_keys)
-    nm = 2 if blas == "symv" else 1
+    single = ni == 1 and nj == 1
+    nm = 2 if blas == "symv" and not single else 1
 
     def _is_idx(key):
         return graph.nodes[key[0]].rdef.index_reduction
@@ -394,9 +466,12 @@ def _build_anchored_kernel(graph: DataflowGraph, group: FusionGroup,
         mat_refs = refs[ns:ns + nm]
         v_refs = refs[ns + nm:ns + nm + nv]
         e_refs = refs[ns + nm + nv:ns + nm + nv + ne]
-        r_refs = refs[ns + nm + nv + ne:-1]
-        acc = refs[-1]                       # (bm, 1) f32 VMEM scratch
-        i, j = pl.program_id(0), pl.program_id(1)
+        r_refs = refs[ns + nm + nv + ne:len(refs) - (0 if single else 1)]
+        acc = None if single else refs[-1]   # (bm, 1) f32 VMEM scratch
+        if single:
+            i = j = jnp.int32(0)
+        else:
+            i, j = pl.program_id(0), pl.program_id(1)
 
         red_refs = _red_ref_map(sig, r_refs, _is_idx)
         scal_env = {key: s_refs[k][0]
@@ -414,22 +489,25 @@ def _build_anchored_kernel(graph: DataflowGraph, group: FusionGroup,
         beta = scal_env[(sig.anchor, "beta")]
         rows_val = env[sig.rows_key]
 
-        @pl.when(j == 0)
-        def _init_row():
-            acc[...] = beta * rows_val
-
         if blas == "symv":
-            contrib = symv_block(mat_refs[0][...], mat_refs[1][...],
+            mirror = mat_refs[0] if single else mat_refs[1]
+            contrib = symv_block(mat_refs[0][...], mirror[...],
                                  env[sig.cols_key], i, j)
         else:
             contrib = gemv_block(mat_refs[0][...], env[sig.cols_key])
-        acc[...] += alpha * contrib
 
-        @pl.when(j == nj - 1)
-        def _finish_row():
+        if not single:
+            @pl.when(j == 0)
+            def _init_row():
+                acc[...] = beta * rows_val
+
+            acc[...] += alpha * contrib
+
+        def _finish_body():
             fenv = dict(env)
             out_port = next(iter(graph.nodes[sig.anchor].rdef.outputs))
-            block = acc[...]
+            block = (beta * rows_val + alpha * contrib) if single \
+                else acc[...]
             for e in graph.consumers_of(sig.anchor, out_port):
                 if e.dst in members:
                     fenv[(e.dst, e.dst_port)] = block
@@ -440,11 +518,16 @@ def _build_anchored_kernel(graph: DataflowGraph, group: FusionGroup,
             for key, ref_ in zip(sig.elt_out_keys, e_refs):
                 ref_[...] = fenv[key].astype(out_dtype)
             # reductions accumulate once per row block; the i == 0
-            # select seeds them without a separate init step
+            # select seeds them without a separate init step (the
+            # single-step kernel just writes)
             for key in sig.red_out_keys:
                 if _is_idx(key):
                     val, gidx = fenv[key]
                     m_ref, i_ref = red_refs[key]
+                    if single:
+                        i_ref[0, 0] = gidx
+                        m_ref[0, 0] = val
+                        continue
                     prev_m = jnp.where(i == 0, jnp.float32(-1.0),
                                        m_ref[0, 0])
                     prev_i = jnp.where(i == 0, jnp.int32(0),
@@ -454,65 +537,62 @@ def _build_anchored_kernel(graph: DataflowGraph, group: FusionGroup,
                     m_ref[0, 0] = jnp.where(better, val, prev_m)
                 else:
                     (r_ref,) = red_refs[key]
+                    if single:
+                        r_ref[0, 0] = fenv[key]
+                        continue
                     prev = jnp.where(i == 0, jnp.float32(0.0),
                                      r_ref[0, 0])
                     r_ref[0, 0] = prev + fenv[key]
 
+        if single:
+            _finish_body()
+        else:
+            pl.when(j == nj - 1)(_finish_body)
+
+    kernel.single = single
+    kernel.nm = nm
     return kernel
 
 
 def make_anchored_callable(graph: DataflowGraph, group: FusionGroup,
-                           dtype, *, interpret=None):
+                           dtype, *, interpret=None, tile_resolve=None):
     """Returns fn(scalars: {(r,s): val}, vec_ins: {(r,p): array}) ->
     {(r,p): value} for a level-2 anchored group. vec_ins carries the
-    matrix operand under (anchor, A) alongside the vectors."""
+    matrix operand under (anchor, A) alongside the vectors.
+    `tile_resolve` is a `TilePlan.lookup` resolver overriding the
+    (bm, bn) matrix window per shape bucket."""
     interpret = default_interpret() if interpret is None else interpret
     sig = _anchored_signature(graph, group)
     blas = graph.nodes[sig.anchor].blas
+    # one generated kernel + jitted pallas_call per (m, n, bm, bn).
+    # Building these inside every run() call used to force a fresh
+    # trace/compile per eager execution — the 500x profile-vs-bench
+    # wall-clock drift the obs report flagged.
+    calls: Dict[tuple, Callable] = {}
 
-    def run(scalars, vec_ins):
-        a = vec_ins[sig.mat_key]
-        if a.ndim != 2:
-            raise ValueError(
-                f"anchored group {sig.anchor!r}: matrix operand must "
-                f"be 2-D, got shape {a.shape}")
-        m, n = a.shape
-        if blas == "symv":
-            if m != n:
-                raise ValueError(
-                    f"symv needs a square matrix, got {a.shape}")
-            bm = bn = min(symv_mod.DEFAULT_BLOCK, max(n, 1))
-        else:
-            bm = min(gemv_mod.DEFAULT_BLOCK_M, max(m, 1))
-            bn = min(gemv_mod.DEFAULT_BLOCK_N, max(n, 1))
-        ap = pad_to(pad_to(a, bm, axis=0), bn, axis=1)
-        mp, np_ = ap.shape
+    def _call_for(m, n, bm, bn):
+        key = (m, n, bm, bn)
+        fn = calls.get(key)
+        if fn is not None:
+            return fn
+        mp, np_ = cdiv(m, bm) * bm, cdiv(n, bn) * bn
         grid = (cdiv(mp, bm), cdiv(np_, bn))
 
-        win_args, win_specs = [], []
-        for key in sig.win_in_keys:
-            v = vec_ins[key]
-            want = n if key == sig.cols_key else m
-            if v.shape[0] != want:
-                raise ValueError(
-                    f"anchored group vectors disagree on length: "
-                    f"{key} has {v.shape[0]}, the {blas} anchor "
-                    f"wants {want}")
-            if key == sig.cols_key:
-                win_args.append(
-                    pad_to(v, bn, axis=0).reshape(-1, 1))
+        win_specs = []
+        for key_ in sig.win_in_keys:
+            if key_ == sig.cols_key:
                 win_specs.append(
                     pl.BlockSpec((bn, 1), lambda i, j: (j, 0)))
             else:
-                win_args.append(
-                    pad_to(v, bm, axis=0).reshape(-1, 1))
                 win_specs.append(
                     pl.BlockSpec((bm, 1), lambda i, j: (i, 0)))
 
-        mat_args = [ap]
+        kernel = _build_anchored_kernel(graph, group, sig, dtype,
+                                        grid[0], grid[1])
+
         mat_specs = [pl.BlockSpec((bm, bn), lambda i, j: (i, j))]
-        if blas == "symv":
-            mat_args.append(ap)   # mirror window (j, i), transposed
+        if kernel.nm == 2:
+            # mirror window (j, i), transposed
             mat_specs.append(
                 pl.BlockSpec((bn, bm), lambda i, j: (j, i)))
 
@@ -524,19 +604,63 @@ def make_anchored_callable(graph: DataflowGraph, group: FusionGroup,
              for _ in sig.elt_out_keys]
             + red_shapes)
 
-        kernel = _build_anchored_kernel(graph, group, sig, dtype,
-                                        grid[1])
-        outs = pl.pallas_call(
+        fn = jax.jit(pl.pallas_call(
             kernel,
             grid=grid,
             in_specs=[smem_scalar_spec()] * len(sig.scalar_keys)
             + mat_specs + win_specs,
             out_specs=[elt_spec] * len(sig.elt_out_keys) + red_specs,
             out_shape=out_shapes,
-            scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
+            scratch_shapes=[] if kernel.single
+            else [pltpu.VMEM((bm, 1), jnp.float32)],
             interpret=interpret,
-        )(*[jnp.reshape(scalars[k], (1,)).astype(jnp.float32)
-            for k in sig.scalar_keys], *mat_args, *win_args)
+        ))
+        calls[key] = (fn, kernel.nm)
+        return calls[key]
+
+    def run(scalars, vec_ins):
+        a = vec_ins[sig.mat_key]
+        if a.ndim != 2:
+            raise ValueError(
+                f"anchored group {sig.anchor!r}: matrix operand must "
+                f"be 2-D, got shape {a.shape}")
+        m, n = a.shape
+        if blas == "symv" and m != n:
+            raise ValueError(
+                f"symv needs a square matrix, got {a.shape}")
+        cfg = tile_resolve(m, n) if tile_resolve is not None else None
+        if blas == "symv":
+            bm = bn = min(
+                cfg.block_m if cfg is not None and
+                cfg.block_m is not None else symv_mod.DEFAULT_BLOCK,
+                max(n, 1))
+        else:
+            bm = min(
+                cfg.block_m if cfg is not None and
+                cfg.block_m is not None else gemv_mod.DEFAULT_BLOCK_M,
+                max(m, 1))
+            bn = min(
+                cfg.block_n if cfg is not None and
+                cfg.block_n is not None else gemv_mod.DEFAULT_BLOCK_N,
+                max(n, 1))
+        ap = pad_to(pad_to(a, bm, axis=0), bn, axis=1)
+
+        win_args = []
+        for key in sig.win_in_keys:
+            v = vec_ins[key]
+            want = n if key == sig.cols_key else m
+            if v.shape[0] != want:
+                raise ValueError(
+                    f"anchored group vectors disagree on length: "
+                    f"{key} has {v.shape[0]}, the {blas} anchor "
+                    f"wants {want}")
+            bv = bn if key == sig.cols_key else bm
+            win_args.append(pad_to(v, bv, axis=0).reshape(-1, 1))
+
+        fn, nm = _call_for(m, n, bm, bn)
+        outs = fn(
+            *[jnp.reshape(scalars[k], (1,)).astype(jnp.float32)
+              for k in sig.scalar_keys], *([ap] * nm), *win_args)
         outs = outs if isinstance(outs, (list, tuple)) else [outs]
         return _collect_results(graph, sig, outs, m)
 
@@ -550,13 +674,18 @@ def make_anchored_callable(graph: DataflowGraph, group: FusionGroup,
 
 
 def emit_program(graph: DataflowGraph, groups: List[FusionGroup],
-                 mode: str, *, interpret=None):
+                 mode: str, *, interpret=None, tiles=None):
     """Lower (graph, fusion plan) to one python callable over a dict of
-    program inputs, returning a dict of program outputs."""
+    program inputs, returning a dict of program outputs. `tiles` is
+    the resolved `TilePlan` (sites `g{i}` for fused groups,
+    `g{i}:{routine}` for standalone nodes); None/empty keeps kernel
+    defaults everywhere."""
     if mode not in ("dataflow", "nodataflow", "reference"):
         raise ValueError(f"unknown mode {mode!r}")
     interpret = default_interpret() if interpret is None else interpret
     dtype = graph.spec.dtype
+    if tiles is None:
+        tiles = tile_config.EMPTY_PLAN
 
     # public-input bindings: name -> list[(routine, port)]
     input_bindings: Dict[str, list] = {}
@@ -570,8 +699,19 @@ def emit_program(graph: DataflowGraph, groups: List[FusionGroup],
                 continue
             make = (make_anchored_callable if g.anchor
                     else make_group_callable)
-            fused_callables[gi] = make(graph, g, dtype,
-                                       interpret=interpret)
+            fused_callables[gi] = make(
+                graph, g, dtype, interpret=interpret,
+                tile_resolve=tiles.lookup(f"g{gi}") if tiles else None)
+
+    # call-time tile resolvers for standalone dispatches
+    standalone_resolvers = {}
+    if tiles and mode != "reference":
+        for gi, g in enumerate(groups):
+            if gi in fused_callables:
+                continue
+            for name in g.nodes:
+                standalone_resolvers[(gi, name)] = \
+                    tiles.lookup(f"g{gi}:{name}")
 
     if obs.enabled():
         # one tag per generated kernel / standalone dispatch so JSONL
@@ -633,8 +773,12 @@ def emit_program(graph: DataflowGraph, groups: List[FusionGroup],
                         s = {sn: scalar_value(rspec, sn)
                              for sn in rdef.scalars}
                         ins = {p: env[(name, p)] for p in rdef.inputs}
+                        resolve = standalone_resolvers.get((gi, name))
+                        cfg = None
+                        if resolve is not None:
+                            cfg = resolve(*_standalone_dims(rspec, ins))
                         out = _call_standalone(rspec, s, ins, mode,
-                                               interpret)
+                                               interpret, tile_cfg=cfg)
                         out_ports = list(rdef.outputs)
                         outs = out if isinstance(out, tuple) else (out,)
                         for port, val in zip(out_ports, outs):

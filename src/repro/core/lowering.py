@@ -14,9 +14,18 @@ each pass independently invocable and testable:
     emit       Pallas codegen -> python callable
 
 `lower()` runs the pipeline; `compile_cached()` memoizes whole IRs by
-(spec digest, mode, fuse, anchor, interpret) so a body spec that
-appears in many loop programs — or in repeated `Program.from_spec`
-calls — compiles exactly once per configuration.
+(spec digest, mode, fuse, anchor, interpret, tile-plan key) so a body
+spec that appears in many loop programs — or in repeated
+`Program.from_spec` calls — compiles exactly once per configuration.
+
+Tile resolution (`tiles=`) happens *before* the pipeline runs:
+`"auto"` (the default) consults the persistent tuning/artifact store
+(`repro.tune`) — digest-keyed artifact plan first, then per-pattern
+tuned entries, falling back to kernel defaults on a cold store —
+producing a concrete `TilePlan` whose content key is what the program
+cache keys on. Two different tile configs of one digest are two cache
+entries; an untuned store resolves to the empty plan, whose key equals
+`tiles="default"`, so cold-start compiles share one entry.
 
 `lower_loop()` lowers a LoopSpec: it compiles every stage program
 through the cache and performs the cross-stage def-use and kind
@@ -32,6 +41,8 @@ import pathlib
 from typing import Callable, List, Mapping, Optional, Tuple, Union
 
 from repro import obs
+from repro.tune import config as tile_config
+from repro.tune import store as tune_store
 
 from . import codegen, fusion, spec as spec_mod
 from .graph import (DataflowGraph, ProgramIO, check_port_kinds,
@@ -56,6 +67,9 @@ class ProgramIR:
     fuse: bool
     anchor: bool                     # level-2 anchored fusion enabled
     interpret: Optional[bool]
+    # resolved block-shape overrides (repro.tune.TilePlan); the empty
+    # plan means "kernel defaults everywhere"
+    tile_plan: tile_config.TilePlan = tile_config.EMPTY_PLAN
     spec: Optional[spec_mod.ProgramSpec] = None
     graph: Optional[DataflowGraph] = None
     io: Optional[ProgramIO] = None
@@ -105,7 +119,8 @@ def place_pass(ir: ProgramIR) -> None:
 
 def emit_pass(ir: ProgramIR) -> None:
     ir.fn = codegen.emit_program(ir.graph, ir.groups, ir.mode,
-                                 interpret=ir.interpret)
+                                 interpret=ir.interpret,
+                                 tiles=ir.tile_plan)
 
 
 PIPELINE: Tuple = (
@@ -140,13 +155,84 @@ def spec_digest(raw: Union[str, Mapping, pathlib.Path]) -> str:
     return hashlib.sha256(canon.encode()).hexdigest()
 
 
+# memo for "auto" tile resolution: (digest, mode, fuse, anchor,
+# device, store generation) -> TilePlan. Keyed on the store generation
+# so tuning (or an artifact write) invalidates exactly the affected
+# resolutions, and repeated compiles stay a dict lookup.
+_RESOLVE_CACHE: dict = {}
+
+
+def resolve_tiles(raw, *, mode: str = "dataflow",
+                  fuse: Optional[bool] = None,
+                  anchor: Optional[bool] = None, tiles="auto",
+                  digest: Optional[str] = None
+                  ) -> tile_config.TilePlan:
+    """Normalize a `tiles=` request to the concrete TilePlan lowering
+    will emit with. `"default"`/None -> the empty plan (kernel
+    defaults); a TileConfig applies everywhere; `"auto"` consults the
+    persistent store: the digest-keyed artifact plan when one exists
+    (fires `tune.cache.hit`), else per-pattern tuned entries gathered
+    by a cheap partial lowering (parse -> fuse, no codegen). A cold
+    store resolves to the empty plan — compile never enqueues sweeps."""
+    if isinstance(tiles, tile_config.TilePlan):
+        return tiles
+    if isinstance(tiles, tile_config.TileConfig):
+        return tile_config.TilePlan.everywhere(tiles)
+    if tiles in (None, "default"):
+        return tile_config.EMPTY_PLAN
+    if tiles != "auto":
+        raise ValueError(
+            f"tiles must be 'auto', 'default', a TileConfig, or a "
+            f"TilePlan; got {tiles!r}")
+    if fuse is None:
+        fuse = mode == "dataflow"
+    if anchor is None:
+        anchor = fuse
+    raw = _canonical_raw(raw)
+    if digest is None:
+        digest = spec_digest(raw)
+    store = tune_store.get_store()
+    dk = tile_config.current_device_kind()
+    key = (digest, mode, fuse, anchor, dk, store.generation)
+    hit = _RESOLVE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    plan = store.artifact_plan(digest, mode, fuse, anchor, dk)
+    if plan is None:
+        probe = lower(raw, mode=mode, fuse=fuse, anchor=anchor,
+                      upto="fuse", tiles="default")
+        sites = {}
+        for gi, g in enumerate(probe.groups or ()):
+            if g.fused and len(g.nodes) >= 2:
+                pattern = "+".join(probe.graph.nodes[n].blas
+                                   for n in g.nodes)
+                buckets = store.entries_for(pattern, mode, fuse,
+                                            anchor, dk)
+                if buckets:
+                    sites[f"g{gi}"] = buckets
+                continue
+            for name in g.nodes:
+                buckets = store.entries_for(
+                    probe.graph.nodes[name].blas, mode, fuse, anchor,
+                    dk)
+                if buckets:
+                    sites[f"g{gi}:{name}"] = buckets
+        plan = tile_config.TilePlan.from_dict(sites)
+    _RESOLVE_CACHE[key] = plan
+    return plan
+
+
 def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
           anchor: Optional[bool] = None, upto: Optional[str] = None,
-          interpret: Optional[bool] = None) -> ProgramIR:
+          interpret: Optional[bool] = None, tiles="auto") -> ProgramIR:
     """Run the pass pipeline over a raw spec. `upto` stops after the
     named pass (inclusive) for partial lowering in tests/tools.
     `anchor` gates level-2 anchored fusion groups (default: follows
-    `fuse`, so dataflow mode gets them and nodataflow does not)."""
+    `fuse`, so dataflow mode gets them and nodataflow does not).
+    `tiles` picks the block shapes the emitted kernels run with:
+    `"auto"` (default) resolves from the persistent tuning table,
+    `"default"` keeps kernel defaults, and a TileConfig/TilePlan
+    overrides explicitly (see `resolve_tiles`)."""
     if mode not in ("dataflow", "nodataflow", "reference"):
         raise ValueError(f"unknown mode {mode!r}")
     raw = _canonical_raw(raw)
@@ -158,8 +244,11 @@ def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
         raise ValueError(
             "anchor=True requires fuse=True: level-2 anchored groups "
             "are a tier of the fusion planner, not a standalone pass")
+    plan = resolve_tiles(raw, mode=mode, fuse=fuse, anchor=anchor,
+                         tiles=tiles)
     ir = ProgramIR(raw=raw, digest=spec_digest(raw), mode=mode,
-                   fuse=fuse, anchor=anchor, interpret=interpret)
+                   fuse=fuse, anchor=anchor, interpret=interpret,
+                   tile_plan=plan)
     known = [name for name, _ in PIPELINE]
     if upto is not None and upto not in known:
         raise ValueError(f"unknown pass {upto!r}; pipeline: {known}")
@@ -170,7 +259,9 @@ def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
         ir.passes_run.append(name)
         if name == upto:
             break
-    if obs.enabled():
+    # a partial lower (upto=...) is a probe — tile resolution and
+    # tests use it — not a completed lowering, so no "done" event
+    if obs.enabled() and upto is None:
         obs.event("lowering.done",
                   program=ir.spec.name if ir.spec else None,
                   digest=ir.digest[:12], mode=mode, fuse=fuse,
@@ -189,20 +280,28 @@ _STATS = {"hits": 0, "misses": 0}
 def compile_cached(raw, *, mode: str = "dataflow",
                    fuse: Optional[bool] = None,
                    anchor: Optional[bool] = None,
-                   interpret: Optional[bool] = None) -> ProgramIR:
+                   interpret: Optional[bool] = None,
+                   tiles="auto") -> ProgramIR:
     """Fully lower a spec, memoized by (digest, mode, fuse, anchor,
-    interpret).
+    interpret, resolved tile-plan key).
 
     Loop programs routinely reuse body specs (RESIDUAL appears in
     setup, in the Jacobi body, and in every class-based linear solver);
     the cache makes each distinct body compile once per configuration.
+    The tiles component is the *resolved* plan's content key — an
+    untuned store resolves "auto" to the empty plan, whose key equals
+    "default", so cold-store auto compiles share cache entries with
+    explicit-default ones and stay hits across repeated calls.
     """
     raw = _canonical_raw(raw)
     if fuse is None:
         fuse = mode == "dataflow"
     if anchor is None:
         anchor = fuse
-    key = (spec_digest(raw), mode, fuse, anchor, interpret)
+    digest = spec_digest(raw)
+    plan = resolve_tiles(raw, mode=mode, fuse=fuse, anchor=anchor,
+                         tiles=tiles, digest=digest)
+    key = (digest, mode, fuse, anchor, interpret, plan.key())
     hit = _CACHE.get(key)
     if hit is not None:
         _STATS["hits"] += 1
@@ -212,7 +311,7 @@ def compile_cached(raw, *, mode: str = "dataflow",
     _STATS["misses"] += 1
     obs.counter("lowering.cache.miss", digest=key[0][:12], mode=mode)
     ir = lower(raw, mode=mode, fuse=fuse, anchor=anchor,
-               interpret=interpret)
+               interpret=interpret, tiles=plan)
     _CACHE[key] = ir
     return ir
 
@@ -227,6 +326,7 @@ def cache_stats() -> Mapping[str, int]:
 
 def clear_cache() -> None:
     _CACHE.clear()
+    _RESOLVE_CACHE.clear()
     _STATS["hits"] = _STATS["misses"] = 0
 
 
@@ -365,7 +465,7 @@ def _state_kinds(state_fields, env_kinds, where_prefix):
 
 
 def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
-                  stacks=frozenset(), in_cond=False):
+                  tiles="auto", stacks=frozenset(), in_cond=False):
     """Lower a stage list against an env of name -> kind, enforcing
     single-assignment, no forward references, and port-kind typing.
     `stacks` names the innermost enclosing loop's stack state fields —
@@ -449,8 +549,8 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
                 bkinds = dict(kinds)
                 bcomp, bprod = _lower_stages(
                     sub, bkinds, f"{where}.cond.{label}",
-                    mode=mode, interpret=interpret, stacks=frozenset(),
-                    in_cond=True)
+                    mode=mode, interpret=interpret, tiles=tiles,
+                    stacks=frozenset(), in_cond=True)
                 branch_out.append((bcomp, bprod, bkinds))
             (then_c, then_p, then_k), (else_c, else_p, else_k) = \
                 branch_out
@@ -481,12 +581,12 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
         if isinstance(st, InnerLoopStage):
             compiled.append(_lower_inner_loop(
                 st, kinds, produced, where, mode=mode,
-                interpret=interpret, in_cond=in_cond))
+                interpret=interpret, tiles=tiles, in_cond=in_cond))
             continue
 
         assert isinstance(st, ProgramStage)
         ir = compile_cached(st.raw_program, mode=mode,
-                            interpret=interpret)
+                            interpret=interpret, tiles=tiles)
         unknown = set(st.inputs) - set(ir.io.input_kinds)
         if unknown:
             raise SpecError(
@@ -549,7 +649,8 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
 
 
 def _lower_inner_loop(st: InnerLoopStage, kinds, produced, where, *,
-                      mode, interpret, in_cond) -> CompiledStage:
+                      mode, interpret, tiles="auto",
+                      in_cond=False) -> CompiledStage:
     """Lower a nested iterate: inner state inits read the enclosing
     environment, the inner body is lowered against enclosing env +
     inner state (+ counter), and yields bind final inner state into
@@ -578,7 +679,8 @@ def _lower_inner_loop(st: InnerLoopStage, kinds, produced, where, *,
     inner_stacks = frozenset(f.name for f in st.state if f.is_stack)
     body, inner_produced = _lower_stages(
         st.body, inner_kinds, f"{where}.iterate.body",
-        mode=mode, interpret=interpret, stacks=inner_stacks)
+        mode=mode, interpret=interpret, tiles=tiles,
+        stacks=inner_stacks)
 
     for fname, src in st.feedback.items():
         fwhere = f"{where}.iterate.feedback.{fname}"
@@ -624,14 +726,17 @@ def _lower_inner_loop(st: InnerLoopStage, kinds, produced, where, *,
 
 
 def lower_loop(raw, *, mode: str = "dataflow",
-               interpret: Optional[bool] = None) -> LoopIR:
+               interpret: Optional[bool] = None,
+               tiles="auto") -> LoopIR:
     """Lower a loop spec: compile every stage program through the
-    cache and type-check the loop environment end to end."""
+    cache and type-check the loop environment end to end. `tiles`
+    is forwarded to every stage program's `compile_cached` call."""
     lspec = raw if isinstance(raw, LoopSpec) else spec_mod.parse_loop(raw)
 
     kinds = dict(lspec.operands)
     setup, _ = _lower_stages(lspec.setup, kinds, "setup",
-                             mode=mode, interpret=interpret)
+                             mode=mode, interpret=interpret,
+                             tiles=tiles)
     setup_kinds = dict(kinds)
 
     # state fields: bare-name inits inherit the referenced kind;
@@ -655,7 +760,7 @@ def lower_loop(raw, *, mode: str = "dataflow",
     stacks = frozenset(f.name for f in lspec.state if f.is_stack)
     body, produced = _lower_stages(lspec.body, body_env, "iterate.body",
                                    mode=mode, interpret=interpret,
-                                   stacks=stacks)
+                                   tiles=tiles, stacks=stacks)
 
     for fname, src in lspec.feedback.items():
         where = f"iterate.feedback.{fname}"

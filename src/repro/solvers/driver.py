@@ -244,7 +244,7 @@ class LoopProgram(SolverProgram):
 
     def __init__(self, spec, *, mode: Optional[str] = None,
                  max_iters: Optional[int] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, tiles="auto"):
         if isinstance(spec, lowering.LoopIR):
             # a pre-lowered IR fixes mode/interpret: its stage kernels
             # are already compiled for that configuration
@@ -262,7 +262,7 @@ class LoopProgram(SolverProgram):
         else:
             mode = "dataflow" if mode is None else mode
             lir = lowering.lower_loop(spec, mode=mode,
-                                      interpret=interpret)
+                                      interpret=interpret, tiles=tiles)
         self.lir = lir
         self.name = lir.lspec.name
         if "x" not in lir.lspec.solution:

@@ -1,0 +1,36 @@
+"""`repro.tune` — block-shape autotuning + the persistent tuning and
+compiled-artifact store.
+
+The config/store layer loads eagerly (core.lowering imports it to
+resolve `tiles="auto"`); the autotuner itself — which pulls in the
+blas runtime — loads lazily, keeping `import repro.core` cycle-free.
+
+    from repro import tune
+    report = tune.tune_routine("gemv", n=1024)
+    exe = blas.compile(spec, tiles="auto")     # picks the winners up
+
+CLI: `python -m repro.tune --smoke` (see __main__.py).
+"""
+from __future__ import annotations
+
+from .config import (EMPTY_PLAN, TileConfig, TilePlan,  # noqa: F401
+                     candidates_for, clamp, current_device_kind,
+                     shape_bucket)
+from .store import (SCHEMA, SCHEMA_VERSION, TuningTable,  # noqa: F401
+                    cache_dir, get_store, reset_store, validate_doc)
+
+__all__ = [
+    "EMPTY_PLAN", "SCHEMA", "SCHEMA_VERSION", "TileConfig", "TilePlan",
+    "TuneReport", "TuningTable", "cache_dir", "candidates_for",
+    "clamp", "current_device_kind", "get_store", "reset_store",
+    "shape_bucket", "tune_program", "tune_routine", "validate_doc",
+]
+
+_LAZY = ("tune_program", "tune_routine", "TuneReport", "Measurement")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from . import autotuner
+        return getattr(autotuner, name)
+    raise AttributeError(f"module 'repro.tune' has no attribute {name!r}")

@@ -16,6 +16,8 @@ from repro import blas
 from repro.core import lowering
 from repro.solvers import specs
 from repro.solvers.iterative import jacobi_dinv
+from repro.tune import config as tile_config
+from repro.tune import store as tune_store
 
 N = 24
 
@@ -82,3 +84,67 @@ def test_recompile_hits_lowering_cache(name):
     assert after["hits"] > before["hits"]
     assert after["misses"] == before["misses"]
     assert exe.trace_count == 1
+
+
+def test_trace_once_with_tuning_table_tiles(monkeypatch, tmp_path):
+    """Compile-once must survive tiles coming from the tuning table:
+    seed a tuned artifact for every stage of the CG loop, recompile
+    with the (default) tiles="auto", and assert the tile plans were
+    picked up without any extra body trace."""
+    monkeypatch.setenv(tune_store.ENV_CACHE_DIR, str(tmp_path))
+    tune_store.reset_store()
+    lowering.clear_cache()
+    try:
+        spec, ops = _case("cg")
+        exe = blas.compile(spec, max_iters=4)
+
+        # seed a wildcard winner for each distinct stage program (a
+        # 128-block clamps onto N=24, so numerics cannot change)
+        cfg = tile_config.TileConfig(block_m=128, block_n=128)
+        plan = tile_config.TilePlan.everywhere(cfg)
+        store = tune_store.get_store()
+        dk = tile_config.current_device_kind()
+
+        def visit(compiled):
+            for st in compiled:
+                if st.tag == "program":
+                    # fuse/anchor normalize to True in dataflow mode
+                    store.put_artifact(st.ir.digest, "dataflow", True,
+                                       True, dk, spec=st.ir.raw,
+                                       plan=plan, tuned=True)
+                elif st.tag == "cond":
+                    visit(st.then)
+                    visit(st.orelse)
+                elif st.tag == "loop":
+                    visit(st.body)
+
+        lir = exe._impl.lir
+        visit(lir.setup)
+        visit(lir.body)
+
+        lowering.clear_cache()
+        tuned = blas.compile(spec, max_iters=4)
+        planned = []
+
+        def collect(compiled):
+            for st in compiled:
+                if st.tag == "program":
+                    planned.append(bool(st.ir.tile_plan))
+                elif st.tag == "cond":
+                    collect(st.then)
+                    collect(st.orelse)
+                elif st.tag == "loop":
+                    collect(st.body)
+
+        collect(tuned._impl.lir.setup)
+        collect(tuned._impl.lir.body)
+        assert planned and all(planned)   # every stage got its plan
+        res = tuned.run(tol=0.0, **ops)
+        assert res.x.shape == (N,)
+        assert tuned.trace_count == 1
+        tuned.run(tol=0.0, **ops)
+        assert tuned.trace_count == 1
+    finally:
+        monkeypatch.delenv(tune_store.ENV_CACHE_DIR)
+        tune_store.reset_store()
+        lowering.clear_cache()

@@ -1,0 +1,380 @@
+"""repro.tune: tile configs/plans, the persistent tuning table, the
+autotuner sweep, and the tiles= threading through lowering and the
+blas API.
+
+Covers the cache-key correctness the tuning work leans on (two tile
+configs of one digest yield two lowering-cache entries with accurate
+hit/miss counters), the across-process persistence acceptance (second
+process fires `tune.cache.hit` and performs zero sweeps), and the
+profile-vs-bench drift regression (the per-call pallas rebuild that
+once made `Executable.profile` report ~500x the benchmark wall clock).
+
+Every store-touching test runs against a throwaway REPRO_CACHE_DIR so
+a developer's real ~/.cache/repro is never read or written.
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import blas, obs
+from repro.core import lowering
+from repro.tune import autotuner
+from repro.tune import config as C
+from repro.tune import store as S
+from repro.tune.__main__ import main as tune_cli
+
+N = 48
+
+
+@pytest.fixture
+def fresh_store(monkeypatch, tmp_path):
+    """Isolated on-disk table + cold lowering caches; restores the
+    process-wide store (and caches) afterwards so other test files
+    keep their digest-cache assumptions."""
+    monkeypatch.setenv(S.ENV_CACHE_DIR, str(tmp_path))
+    S.reset_store()
+    lowering.clear_cache()
+    yield S.get_store()
+    monkeypatch.delenv(S.ENV_CACHE_DIR)
+    S.reset_store()
+    lowering.clear_cache()
+
+
+def _chain(name):
+    return {
+        "name": name,
+        "routines": [
+            {"blas": "symv", "name": "mv",
+             "scalars": {"alpha": 1.0, "beta": 0.0},
+             "inputs": {"A": "A", "x": "x", "y": "x"},
+             "connections": {"out": "d.x"}},
+            {"blas": "dot", "name": "d", "inputs": {"y": "x"},
+             "outputs": {"out": "q"}},
+        ],
+    }
+
+
+def _chain_inputs(n, seed=0):
+    k = jax.random.PRNGKey(seed)
+    a = jax.random.normal(k, (n, n), jnp.float32)
+    return {"A": (a + a.T) / 2,
+            "x": jax.random.normal(jax.random.PRNGKey(1), (n,),
+                                   jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# TileConfig / buckets / TilePlan
+# ---------------------------------------------------------------------------
+
+
+def test_tile_config_key_and_json_roundtrip():
+    cfg = C.TileConfig(block_m=256, block_n=512)
+    assert cfg.key() == "m256.n512"
+    assert C.TileConfig().key() == "default"
+    assert C.TileConfig.from_json(cfg.to_json()) == cfg
+    assert C.TileConfig.from_json({}) == C.TileConfig()
+
+
+def test_tile_config_rejects_bad_values():
+    with pytest.raises(ValueError):
+        C.TileConfig(block_m=0)
+    with pytest.raises(ValueError):
+        C.TileConfig.from_json({"block_q": 128})
+
+
+def test_shape_bucket_pow2():
+    assert C.bucket_dim(1000) == 1024
+    assert C.bucket_dim(1024) == 1024
+    assert C.bucket_dim(1) == 1
+    assert C.shape_bucket(1000, 2000) == "1024x2048"
+    assert C.shape_bucket(48) == "64"
+    assert C.shape_bucket() == "scalar"
+
+
+def test_clamp_is_the_sweep_dedup_key():
+    big = C.TileConfig(block_m=512, block_n=1024)
+    small = C.TileConfig(block_m=128, block_n=128)
+    # at a tiny problem every oversized candidate clamps to one shape
+    assert C.clamp(big, (64, 64)) == C.clamp(
+        C.TileConfig(block_m=1024, block_n=1024), (64, 64))
+    assert C.clamp(small, (64, 64)) == C.TileConfig(block_m=64,
+                                                    block_n=64)
+    assert C.clamp(C.TileConfig(block_rows=512), (100,)) == \
+        C.TileConfig(block_rows=100)
+
+
+def test_tile_plan_wildcard_and_lookup():
+    cfg = C.TileConfig(block_m=128, block_n=128)
+    plan = C.TilePlan.everywhere(cfg)
+    assert plan.get("g0", "256x256") == cfg
+    assert plan.lookup("g7")(1000, 1000) == cfg
+    sited = C.TilePlan.from_dict({"g0": {"256x256": cfg}})
+    assert sited.get("g0", "256x256") == cfg
+    assert sited.get("g0", "512x512") is None
+    assert sited.get("g1", "256x256") is None
+    # lookup buckets the concrete dims before matching
+    assert sited.lookup("g0")(200, 200) == cfg
+
+
+def test_tile_plan_key_is_content_addressed():
+    cfg = C.TileConfig(block_m=128)
+    a = C.TilePlan.from_dict({"g0": {"*": cfg}})
+    b = C.TilePlan.from_dict({"g0": {"*": C.TileConfig(block_m=128)}})
+    c = C.TilePlan.from_dict({"g0": {"*": C.TileConfig(block_m=256)}})
+    assert a.key() == b.key() != c.key()
+    assert C.EMPTY_PLAN.key() == "default"
+    assert not C.EMPTY_PLAN and a
+
+
+# ---------------------------------------------------------------------------
+# The on-disk store
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_and_atomic_write(fresh_store, tmp_path):
+    st = fresh_store
+    cfg = C.TileConfig(block_m=256, block_n=256)
+    st.record_entry("symv+dot", "256x256", "dataflow", True, True,
+                    "cpu", tiles=cfg, us=10.0, default_us=15.0,
+                    sweeps=3)
+    st.put_artifact("a" * 64, "dataflow", True, True, "cpu",
+                    spec={"name": "p"}, plan=C.TilePlan.everywhere(cfg),
+                    tuned=True)
+    # no tmp droppings, one well-formed table
+    leftovers = [p for p in tmp_path.iterdir()
+                 if p.suffix == ".tmp"]
+    assert not leftovers
+    reread = S.TuningTable(tmp_path / S.TABLE_FILENAME)
+    assert reread.validate() == []
+    assert reread.entries_for("symv+dot", "dataflow", True, True,
+                              "cpu") == {"256x256": cfg}
+    assert reread.artifact_plan("a" * 64, "dataflow", True, True,
+                                "cpu").get("g0", "64x64") == cfg
+    assert reread.artifact_spec("a" * 64, "dataflow", True, True,
+                                "cpu") == {"name": "p"}
+
+
+def test_store_tolerates_corrupt_and_foreign_files(tmp_path):
+    path = tmp_path / S.TABLE_FILENAME
+    path.write_text("{not json")
+    assert S.TuningTable(path).doc["entries"] == {}
+    path.write_text(json.dumps({"schema": "repro.tune/v999",
+                                "version": 999, "entries": {"x": {}}}))
+    st = S.TuningTable(path)            # unknown version: start empty
+    assert st.doc["entries"] == {}
+    # and a write does not resurrect the foreign content
+    st.record_entry("gemv", "64x64", "dataflow", False, False, "cpu",
+                    tiles=C.TileConfig(block_m=64), us=1.0,
+                    default_us=1.0)
+    on_disk = json.loads(path.read_text())
+    assert on_disk["version"] == S.SCHEMA_VERSION
+    assert "x" not in on_disk["entries"]
+
+
+def test_put_artifact_merges_shape_buckets(fresh_store):
+    """A tune at one shape bucket must not erase another bucket's
+    persisted winner for the same digest."""
+    st = fresh_store
+    small = C.TileConfig(block_m=256, block_n=256)
+    large = C.TileConfig(block_m=512, block_n=512)
+    st.put_artifact("d" * 64, "dataflow", True, True, "cpu",
+                    spec={"name": "p"},
+                    plan=C.TilePlan.from_dict({"g0": {"256x256": small}}),
+                    tuned=True)
+    st.put_artifact("d" * 64, "dataflow", True, True, "cpu",
+                    spec={"name": "p"},
+                    plan=C.TilePlan.from_dict({"g0": {"1024x1024": large}}),
+                    tuned=True)
+    plan = st.artifact_plan("d" * 64, "dataflow", True, True, "cpu")
+    assert plan.get("g0", "256x256") == small
+    assert plan.get("g0", "1024x1024") == large
+
+
+def test_validate_doc_flags_malformed_tables():
+    bad = {"schema": S.SCHEMA, "version": S.SCHEMA_VERSION,
+           "entries": {"too|few|parts": {"us": 1.0}},
+           "artifacts": {}}
+    problems = S.validate_doc(bad)
+    assert any("malformed key" in p for p in problems)
+    assert any("missing 'tiles'" in p for p in problems)
+    assert S.validate_doc([]) != []
+    ok = {"schema": S.SCHEMA, "version": S.SCHEMA_VERSION,
+          "entries": {}, "artifacts": {}}
+    assert S.validate_doc(ok) == []
+
+
+# ---------------------------------------------------------------------------
+# Cache-key correctness: tiles in the lowering cache
+# ---------------------------------------------------------------------------
+
+
+def test_two_tile_configs_two_cache_entries(fresh_store):
+    spec = _chain("tune_cache_key_chain")
+    before = lowering.cache_stats()
+    a = lowering.compile_cached(spec, tiles=C.TileConfig(block_m=128,
+                                                         block_n=128))
+    b = lowering.compile_cached(spec, tiles=C.TileConfig(block_m=256,
+                                                         block_n=256))
+    assert a is not b                   # same digest, two entries
+    mid = lowering.cache_stats()
+    assert mid["misses"] == before["misses"] + 2
+    # recompiling either config is a pure hit
+    a2 = lowering.compile_cached(spec, tiles=C.TileConfig(block_m=128,
+                                                          block_n=128))
+    assert a2 is a
+    after = lowering.cache_stats()
+    assert after["hits"] == mid["hits"] + 1
+    assert after["misses"] == mid["misses"]
+
+
+def test_auto_on_cold_store_shares_the_default_entry(fresh_store):
+    """A cold store resolves "auto" to the empty plan, whose cache key
+    equals "default" — so auto/default compiles share one entry and a
+    cold fleet pays one lowering, not two."""
+    spec = _chain("tune_cold_auto_chain")
+    a = lowering.compile_cached(spec, tiles="auto")
+    before = lowering.cache_stats()
+    b = lowering.compile_cached(spec, tiles="default")
+    after = lowering.cache_stats()
+    assert b is a
+    assert after["hits"] == before["hits"] + 1
+    assert after["misses"] == before["misses"]
+
+
+def test_tuned_store_splits_the_cache_entry(fresh_store):
+    """Once the table holds a winner, "auto" resolves to a non-empty
+    plan and compiles apart from "default" — with correct numerics."""
+    spec = _chain("tune_split_chain")
+    inputs = _chain_inputs(N)
+    default_exe = blas.compile(spec, tiles="default")
+    want = default_exe.run(**inputs)["q"]
+    # seed a winning artifact directly (at N=48 a real sweep clamps
+    # every candidate onto the default shape and finds no winner)
+    cfg = C.TileConfig(block_m=32, block_n=32)
+    fresh_store.put_artifact(
+        lowering.spec_digest(spec), "dataflow", True, True,
+        C.current_device_kind(), spec=spec,
+        plan=C.TilePlan.from_dict({"g0": {C.shape_bucket(N, N): cfg}}),
+        tuned=True)
+    lowering.clear_cache()              # force fresh resolution
+    auto_ir = lowering.compile_cached(spec, tiles="auto")
+    assert auto_ir.tile_plan            # picked up the tuned plan
+    default_ir = lowering.compile_cached(spec, tiles="default")
+    assert auto_ir is not default_ir    # distinct cache entries
+    got = blas.compile(spec, tiles="auto").run(**inputs)["q"]
+    assert jnp.allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner end to end
+# ---------------------------------------------------------------------------
+
+
+def test_tune_program_persists_entries_and_artifact(fresh_store):
+    spec = _chain("tune_e2e_chain")
+    rep = autotuner.tune_program(spec, {"A": (N, N), "x": N},
+                                 budget=3, iters=1, store=fresh_store)
+    assert rep.sweeps <= 3
+    assert rep.baseline_us > 0 and rep.tuned_us > 0
+    assert rep.tuned_us <= rep.baseline_us          # never regresses
+    assert fresh_store.validate() == []
+    # the anchored group shows up as a pattern entry + tuned artifact
+    entries = fresh_store.entries_for("symv+dot", "dataflow", True,
+                                      True, C.current_device_kind())
+    assert C.shape_bucket(N, N) in entries
+    digest = lowering.spec_digest(spec)
+    plan = fresh_store.artifact_plan(digest, "dataflow", True, True,
+                                     C.current_device_kind())
+    assert plan is not None
+
+
+def test_executable_tune_returns_recompiled_handle(fresh_store):
+    spec = _chain("tune_exe_chain")
+    inputs = _chain_inputs(N)
+    exe = blas.compile(spec)
+    want = exe.run(**inputs)["q"]
+    tuned = exe.tune({"A": (N, N), "x": N}, budget=2, iters=1)
+    assert tuned is not exe
+    assert tuned.tune_report is not None
+    assert tuned.tune_report.sweeps <= 2
+    got = tuned.run(**inputs)["q"]
+    assert jnp.allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_cross_process_artifact_hit_with_zero_sweeps(fresh_store):
+    """The acceptance scenario: process 1 compiles (cold miss,
+    persists the artifact); "process 2" (fresh store handle + cold
+    lowering caches, same cache dir) compiles again — the artifact
+    hit fires `tune.cache.hit` and no sweep measurement runs."""
+    spec = _chain("tune_xproc_chain")
+    with obs.capture() as reg1:
+        blas.compile(spec)
+    recs1 = list(reg1.records)
+    assert any(r["name"] == "tune.cache.miss" for r in recs1)
+    assert not any(r["name"] == "tune.measure" for r in recs1)
+
+    # simulate the second process
+    S.reset_store()
+    lowering.clear_cache()
+    with obs.capture() as reg2:
+        blas.compile(spec)
+    recs2 = list(reg2.records)
+    hits = [r for r in recs2 if r["name"] == "tune.cache.hit"]
+    assert hits, "second process must hit the persisted artifact"
+    assert not any(r["name"] == "tune.cache.miss" for r in recs2)
+    assert not any(r["name"] == "tune.measure" for r in recs2)
+
+
+def test_cold_compile_enqueues_no_sweeps(fresh_store):
+    with obs.capture() as reg:
+        blas.compile(_chain("tune_cold_chain"), tiles="auto")
+    assert not any(r["name"] == "tune.measure" for r in reg.records)
+
+
+def test_tune_cli_smoke_validates_own_table(fresh_store, tmp_path,
+                                            capsys):
+    out = tmp_path / "table.json"
+    rc = tune_cli(["--smoke", "--n", "64", "--routines", "gemv",
+                   "--chains", "symv_dot", "--json", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert S.validate_doc(doc) == []
+    assert doc["entries"]
+    rc = tune_cli(["--validate", str(out)])
+    assert rc == 0
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# Drift regression: profile vs bench wall clock
+# ---------------------------------------------------------------------------
+
+
+def test_profile_and_bench_agree_within_an_order_of_magnitude():
+    """`Executable.profile` once rebuilt (and so re-traced) the fused
+    pallas_call on every eager run, reporting ~500x the benchmark wall
+    clock for the same kernel. With per-shape memoized calls the two
+    must agree within an order of magnitude at a kernel-dominated
+    size (eager per-op dispatch keeps profile the larger number)."""
+    n = 384
+    spec = _chain("drift_regression_chain")
+    exe = blas.compile(spec)
+    rep = exe.profile({"A": (n, n), "x": n}, iters=2)
+    assert rep.measured_s > 0
+    inputs = _chain_inputs(n)
+    out = exe.run(**inputs)
+    jax.block_until_ready(out["q"])
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        out = exe.run(**inputs)
+        jax.block_until_ready(out["q"])
+        best = min(best, time.perf_counter() - t0)
+    ratio = rep.measured_s / best
+    assert ratio < 10.0, (
+        f"profile {1e6 * rep.measured_s:.0f}us vs bench "
+        f"{1e6 * best:.0f}us: ratio {ratio:.1f} (profile is timing "
+        f"compilation again?)")
