@@ -27,7 +27,7 @@ def main():
     # ragged "requests" -> fixed batches (continuous-batching front)
     rng = jax.random.PRNGKey(1)
     requests = []
-    for i, ln in enumerate((5, 9, 7, 12)):
+    for ln in (5, 9, 7, 12):
         rng, k = jax.random.split(rng)
         requests.append(list(map(int, jax.random.randint(
             k, (ln,), 0, cfg.vocab_size))))

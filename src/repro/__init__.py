@@ -8,7 +8,7 @@ from importlib import import_module
 
 _SUBPACKAGES = ("blas", "checkpoint", "configs", "core", "data", "ft",
                 "kernels", "launch", "models", "obs", "optim", "serve",
-                "solvers", "train")
+                "solvers", "train", "verify")
 
 
 def __getattr__(name):

@@ -382,6 +382,19 @@ class Executable:
     def describe(self) -> str:
         return self._impl.describe()
 
+    def verify(self):
+        """Re-run the static analyzer over this executable's spec and
+        return the full `repro.verify.Report` — warnings and infos
+        included, which the compile-time gate (errors only) does not
+        surface. Raises for wrapped class-based solvers (no JSON
+        spec to analyze)."""
+        if self._raw is None:
+            raise ValueError(
+                f"{self.name!r} wraps a class-based solver with no "
+                f"JSON spec; there is nothing to verify")
+        from repro import verify as verify_mod
+        return verify_mod.analyze(self._raw, mode=self.mode)
+
     def __repr__(self):
         return (f"Executable({self.name!r}, kind={self.kind}, "
                 f"mode={self.mode})")
@@ -880,7 +893,7 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
             anchor: Optional[bool] = None,
             interpret: Optional[bool] = None,
             max_iters: Optional[int] = None,
-            tiles="auto") -> Executable:
+            tiles="auto", verify: bool = True) -> Executable:
     """The one front door: lower anything spec-shaped to an Executable.
 
     Dataflow specs go through the digest-keyed program cache
@@ -895,7 +908,13 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
     `"default"` skips the table; a `tune.TileConfig` applies one
     explicit shape everywhere. Dataflow compiles with `tiles="auto"`
     also persist a digest-keyed artifact (spec + resolved plan), so a
-    later process resolves this program with one table lookup."""
+    later process resolves this program with one table lookup.
+
+    `verify=True` (default) statically verifies the spec first
+    (`repro.verify`): any error-severity finding raises one
+    `VerifyError` listing every problem, before JAX sees the program.
+    `verify=False` restores the raise-at-first-problem lowering
+    behavior."""
     raw = _to_raw(spec_or_builder)
     # the handle keeps its own copy: later caller-side mutation of the
     # spec dict must not make save()/spec/builder() disagree with the
@@ -907,7 +926,8 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
                 "fuse/anchor apply to dataflow programs; loop-program "
                 "stages fuse according to the mode")
         impl = LoopProgram(raw, mode=mode, max_iters=max_iters,
-                           interpret=interpret, tiles=tiles)
+                           interpret=interpret, tiles=tiles,
+                           verify=verify)
         return Executable(impl=impl, raw=raw, kind="loop", mode=mode,
                           interpret=interpret, tiles=tiles)
     if max_iters is not None:
@@ -916,7 +936,7 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
             "iterate section")
     ir = lowering.compile_cached(raw, mode=mode, fuse=fuse,
                                  anchor=anchor, interpret=interpret,
-                                 tiles=tiles)
+                                 tiles=tiles, verify=verify)
     if tiles == "auto":
         # persist the compiled artifact once: the tuned flag (and a
         # tuned plan) belongs to the autotuner, so an existing record

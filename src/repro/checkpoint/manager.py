@@ -119,7 +119,7 @@ class CheckpointManager:
         if not mf.exists():
             return False
         manifest = json.loads(mf.read_text())
-        for key, meta in manifest["arrays"].items():
+        for meta in manifest["arrays"].values():
             f = d / meta["file"]
             if not f.exists():
                 return False

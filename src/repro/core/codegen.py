@@ -81,6 +81,12 @@ _KERNEL_CALL: Dict[str, Callable] = {
 # a single `block=`)
 _L2_BLOCK = {"gemv", "gemvt", "symv", "ger", "transpose", "gemm"}
 
+# Per-core VMEM capacity the verify analyzer lints fused-group window
+# footprints against (RV401). 16 MiB matches current TPU cores; a
+# group whose live windows approach it will spill or fail to lower.
+# Overridable per-part via the REPRO_VMEM_BUDGET env var (bytes).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
 
 def _call_standalone(rspec, scalars, inputs, mode, interpret,
                      tile_cfg=None):

@@ -212,7 +212,7 @@ def _evaluate(node, env):
 class Expr:
     """A parsed, validated scalar expression."""
     src: str
-    ast: Tuple = dataclasses.field(repr=False, default=None)
+    ast: Optional[Tuple] = dataclasses.field(repr=False, default=None)
     names: frozenset = frozenset()
 
     def evaluate(self, env: Mapping):

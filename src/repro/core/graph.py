@@ -23,7 +23,7 @@ import dataclasses
 from typing import List, Mapping, Optional
 
 from . import routines as R
-from .spec import ProgramSpec, RoutineSpec, SpecError
+from .spec import ProgramSpec, RoutineSpec, SpecError, spec_error
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +61,8 @@ class ProgramIO:
 
 
 class DataflowGraph:
-    def __init__(self, spec: ProgramSpec, *, validate: bool = True):
+    def __init__(self, spec: ProgramSpec, *, validate: bool = True,
+                 sink=None):
         self.spec = spec
         self.nodes: Mapping[str, RoutineSpec] = {
             r.name: r for r in spec.routines}
@@ -69,15 +70,23 @@ class DataflowGraph:
         self.in_edges: dict[tuple, Edge] = {}   # (dst, dst_port) -> edge
         self.out_edges: dict[tuple, list] = {}  # (src, src_port) -> [edges]
 
-        for r in spec.routines:
+        for ri, r in enumerate(spec.routines):
             for out_port, targets in r.connections.items():
                 for target in targets:
                     tname, tport = target.rsplit(".", 1)
                     e = Edge(r.name, out_port, tname, tport)
                     key = (tname, tport)
                     if key in self.in_edges:
-                        raise SpecError(
-                            f"input port {tname}.{tport} driven twice")
+                        spec_error(
+                            sink,
+                            f"input port {tname}.{tport} driven twice",
+                            code="RV106",
+                            path=f"routines[{ri}].connections"
+                                 f".{out_port}",
+                            hint="each input port takes exactly one "
+                                 "on-chip producer; fan-in needs an "
+                                 "explicit combining routine")
+                        continue
                     self.in_edges[key] = e
                     self.out_edges.setdefault(
                         (r.name, out_port), []).append(e)
@@ -125,7 +134,14 @@ class DataflowGraph:
 # ---------------------------------------------------------------------------
 
 
-def check_port_kinds(graph: DataflowGraph) -> None:
+def _routine_index(graph: DataflowGraph, name: str) -> int:
+    for i, r in enumerate(graph.spec.routines):
+        if r.name == name:
+            return i
+    return -1
+
+
+def check_port_kinds(graph: DataflowGraph, sink=None) -> None:
     """Edge typing: window outputs may only feed matching window ports;
     scalar (reduction) outputs cannot feed window ports at all."""
     for e in graph.edges:
@@ -136,14 +152,21 @@ def check_port_kinds(graph: DataflowGraph) -> None:
         ok = (out_kind == R.OUT_VEC and in_kind == R.VEC) or \
              (out_kind == R.OUT_MAT and in_kind == R.MAT)
         if not ok:
-            raise SpecError(
+            ri = _routine_index(graph, e.src)
+            spec_error(
+                sink,
                 f"type mismatch on edge {e.src}.{e.src_port} "
                 f"({out_kind}) -> {e.dst}.{e.dst_port} ({in_kind}); "
-                f"scalar outputs cannot feed window ports")
+                f"scalar outputs cannot feed window ports",
+                code="RV105",
+                path=f"routines[{ri}].connections.{e.src_port}",
+                hint="route scalar results through a scalar input "
+                     "binding, not an on-chip window edge")
 
 
-def topo_sort(graph: DataflowGraph) -> list:
-    """Deterministic topological order; raises SpecError on cycles."""
+def topo_sort(graph: DataflowGraph, sink=None) -> list:
+    """Deterministic topological order; raises SpecError on cycles
+    (or records the cycle on `sink` and returns the acyclic prefix)."""
     indeg = {n: 0 for n in graph.nodes}
     for e in graph.edges:
         indeg[e.dst] += 1
@@ -158,7 +181,12 @@ def topo_sort(graph: DataflowGraph) -> list:
                 ready.append(e.dst)
     if len(order) != len(graph.nodes):
         cyclic = sorted(set(graph.nodes) - set(order))
-        raise SpecError(f"dataflow graph has a cycle through {cyclic}")
+        spec_error(
+            sink,
+            f"dataflow graph has a cycle through {cyclic}",
+            code="RV107", path="routines",
+            hint="on-chip edges must form a DAG; break the cycle by "
+                 "routing one value through program IO")
     return order
 
 
@@ -166,7 +194,7 @@ _KIND_MAP = {R.OUT_VEC: "vector", R.OUT_MAT: "matrix",
              R.OUT_SCALAR: "scalar"}
 
 
-def collect_io(graph: DataflowGraph) -> ProgramIO:
+def collect_io(graph: DataflowGraph, sink=None) -> ProgramIO:
     """Infer the program boundary: unconnected ports become public
     inputs/outputs, with a deduped public-name -> kind map. Requires
     `graph.order` (run `topo_sort` first)."""
@@ -191,9 +219,15 @@ def collect_io(graph: DataflowGraph) -> ProgramIO:
     for pi in inputs:
         prev = in_kinds.get(pi.name)
         if prev is not None and prev != pi.kind:
-            raise SpecError(
+            spec_error(
+                sink,
                 f"program input {pi.name!r} bound at conflicting kinds "
-                f"{prev} and {pi.kind}")
+                f"{prev} and {pi.kind}",
+                code="RV108",
+                path=f"routines[{_routine_index(graph, pi.routine)}]",
+                hint="give the scalar stream and the window input "
+                     "distinct public names")
+            continue
         in_kinds[pi.name] = pi.kind
 
     outputs, out_kinds = [], {}
@@ -206,13 +240,23 @@ def collect_io(graph: DataflowGraph) -> ProgramIO:
                 continue  # internal edge only
             public = public or f"{name}.{port}"
             if public in out_kinds:
-                raise SpecError(
-                    f"duplicate program output name {public!r}")
+                spec_error(
+                    sink,
+                    f"duplicate program output name {public!r}",
+                    code="RV109",
+                    path=f"routines[{_routine_index(graph, name)}]"
+                         f".outputs.{port}",
+                    hint="alias one of the outputs to a distinct "
+                         "public name")
+                continue
             out_kinds[public] = _KIND_MAP[kind]
             outputs.append(ProgramOutput(public, name, port,
                                          _KIND_MAP[kind]))
     if not outputs:
-        raise SpecError("program has no outputs")
+        spec_error(sink, "program has no outputs", code="RV109",
+                   path="routines",
+                   hint="leave at least one output port unconnected "
+                        "(or alias it in 'outputs')")
 
     return ProgramIO(inputs=inputs, outputs=outputs,
                      input_kinds=in_kinds, output_kinds=out_kinds)

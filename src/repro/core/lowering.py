@@ -49,7 +49,7 @@ from .graph import (DataflowGraph, ProgramIO, check_port_kinds,
                     collect_io, topo_sort)
 from .spec import (CondStage, CountRule, InnerLoopStage, LetStage,
                    LoopSpec, ProgramStage, ReadStage, SpecError,
-                   StopRule, StoreStage)
+                   StopRule, StoreStage, spec_error)
 
 # ---------------------------------------------------------------------------
 # ProgramIR + passes
@@ -200,7 +200,7 @@ def resolve_tiles(raw, *, mode: str = "dataflow",
     plan = store.artifact_plan(digest, mode, fuse, anchor, dk)
     if plan is None:
         probe = lower(raw, mode=mode, fuse=fuse, anchor=anchor,
-                      upto="fuse", tiles="default")
+                      upto="fuse", tiles="default", verify=False)
         sites = {}
         for gi, g in enumerate(probe.groups or ()):
             if g.fused and len(g.nodes) >= 2:
@@ -224,7 +224,8 @@ def resolve_tiles(raw, *, mode: str = "dataflow",
 
 def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
           anchor: Optional[bool] = None, upto: Optional[str] = None,
-          interpret: Optional[bool] = None, tiles="auto") -> ProgramIR:
+          interpret: Optional[bool] = None, tiles="auto",
+          verify: bool = True) -> ProgramIR:
     """Run the pass pipeline over a raw spec. `upto` stops after the
     named pass (inclusive) for partial lowering in tests/tools.
     `anchor` gates level-2 anchored fusion groups (default: follows
@@ -232,10 +233,17 @@ def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
     `tiles` picks the block shapes the emitted kernels run with:
     `"auto"` (default) resolves from the persistent tuning table,
     `"default"` keeps kernel defaults, and a TileConfig/TilePlan
-    overrides explicitly (see `resolve_tiles`)."""
+    overrides explicitly (see `resolve_tiles`). `verify=True` (the
+    default) runs the `repro.verify` static analyzer first so a
+    malformed spec fails with a structured `VerifyError` before any
+    JAX tracing; `verify=False` preserves the pre-analyzer behavior
+    byte-for-byte."""
     if mode not in ("dataflow", "nodataflow", "reference"):
         raise ValueError(f"unknown mode {mode!r}")
     raw = _canonical_raw(raw)
+    if verify:
+        from repro import verify as verify_mod
+        verify_mod.check(raw, mode=mode)
     if fuse is None:
         fuse = mode == "dataflow"
     if anchor is None:
@@ -281,7 +289,7 @@ def compile_cached(raw, *, mode: str = "dataflow",
                    fuse: Optional[bool] = None,
                    anchor: Optional[bool] = None,
                    interpret: Optional[bool] = None,
-                   tiles="auto") -> ProgramIR:
+                   tiles="auto", verify: bool = True) -> ProgramIR:
     """Fully lower a spec, memoized by (digest, mode, fuse, anchor,
     interpret, resolved tile-plan key).
 
@@ -294,6 +302,13 @@ def compile_cached(raw, *, mode: str = "dataflow",
     explicit-default ones and stay hits across repeated calls.
     """
     raw = _canonical_raw(raw)
+    if verify:
+        # gate before the tile-resolution probe lowers anything, so a
+        # broken spec surfaces as one VerifyError, not the probe's
+        # first raise
+        from repro import verify as verify_mod
+
+        verify_mod.check(raw, mode=mode)
     if fuse is None:
         fuse = mode == "dataflow"
     if anchor is None:
@@ -311,7 +326,7 @@ def compile_cached(raw, *, mode: str = "dataflow",
     _STATS["misses"] += 1
     obs.counter("lowering.cache.miss", digest=key[0][:12], mode=mode)
     ir = lower(raw, mode=mode, fuse=fuse, anchor=anchor,
-               interpret=interpret, tiles=plan)
+               interpret=interpret, tiles=plan, verify=False)
     _CACHE[key] = ir
     return ir
 
@@ -374,14 +389,22 @@ class LoopIR:
     body_kinds: Mapping[str, str]    # env after one body iteration
 
 
-def _no_forward_ref(name, kinds, where):
+def _no_forward_ref(name, kinds, where, sink=None) -> bool:
+    """True when `name` is in scope; raises (or records RV201 on the
+    sink and returns False) otherwise."""
     if name not in kinds:
-        raise SpecError(
+        spec_error(
+            sink,
             f"{where}: {name!r} is not defined at this point in the "
             f"loop (operands, state, and values produced by earlier "
             f"stages are in scope); values from later stages cannot be "
             f"used — cyclic feedback must be routed through "
-            f"iterate.state")
+            f"iterate.state",
+            code="RV201", path=where,
+            hint="produce the value in an earlier stage, or route the "
+                 "cycle through iterate.state")
+        return False
+    return True
 
 
 def _stack_kind(of: str) -> str:
@@ -396,26 +419,44 @@ _READ_KINDS = {
     "vector": "scalar",
 }
 
+# the poisoned kind sink-mode analysis assigns after an error, so one
+# mistake does not cascade into kind errors on every downstream use.
+# It never appears when sink is None (the first error raises).
+_UNKNOWN = "unknown"
 
-def _check_scalar_expr(expr, kinds, where):
+
+def _check_scalar_expr(expr, kinds, where, sink=None) -> bool:
+    ok = True
     for n in sorted(expr.names):
-        _no_forward_ref(n, kinds, where)
-        if kinds[n] != "scalar":
-            raise SpecError(
+        if not _no_forward_ref(n, kinds, where, sink):
+            ok = False
+            continue
+        if kinds[n] not in ("scalar", _UNKNOWN):
+            spec_error(
+                sink,
                 f"{where}: expression {expr.src!r} uses {n!r} which "
-                f"is a {kinds[n]}, not a scalar")
+                f"is a {kinds[n]}, not a scalar",
+                code="RV208", path=where,
+                hint="scalar expressions may only reference scalars; "
+                     "reduce vectors with a routine (dot/nrm2) first")
+            ok = False
+    return ok
 
 
-def _bind_single(name, kinds, produced, where):
+def _bind_single(name, kinds, produced, where, sink=None):
     if name in kinds:
-        raise SpecError(
+        spec_error(
+            sink,
             f"{where}: binding {name!r} rebinds an existing name "
             f"(loop values are single-assignment per iteration; only "
-            f"stacks mutate, via store)")
+            f"stacks mutate, via store)",
+            code="RV202", path=where,
+            hint="pick a fresh name; loop values are "
+                 "single-assignment per iteration")
     produced.add(name)
 
 
-def _state_kinds(state_fields, env_kinds, where_prefix):
+def _state_kinds(state_fields, env_kinds, where_prefix, sink=None):
     """Infer/check the kind of every state field against the
     environment its inits are evaluated in. Bare-name inits inherit
     the referenced kind; composite expressions are scalar arithmetic;
@@ -424,53 +465,74 @@ def _state_kinds(state_fields, env_kinds, where_prefix):
     for f in state_fields:
         where = f"{where_prefix}.{f.name}"
         if f.is_stack:
-            if f.slot0 is not None:
-                _no_forward_ref(f.slot0, env_kinds, f"{where}.init.slot0")
-                if env_kinds[f.slot0] != f.of:
-                    raise SpecError(
+            if f.slot0 is not None and _no_forward_ref(
+                    f.slot0, env_kinds, f"{where}.init.slot0", sink):
+                if env_kinds[f.slot0] not in (f.of, _UNKNOWN):
+                    spec_error(
+                        sink,
                         f"{where}.init.slot0: {f.slot0!r} is a "
                         f"{env_kinds[f.slot0]}, but the stack holds "
-                        f"{f.of} slots")
-            if f.like is not None:
-                _no_forward_ref(f.like, env_kinds, f"{where}.like")
-                if env_kinds[f.like] != "vector":
-                    raise SpecError(
+                        f"{f.of} slots",
+                        code="RV208", path=f"{where}.init.slot0")
+            if f.like is not None and _no_forward_ref(
+                    f.like, env_kinds, f"{where}.like", sink):
+                if env_kinds[f.like] not in ("vector", _UNKNOWN):
+                    spec_error(
+                        sink,
                         f"{where}.like: {f.like!r} is a "
                         f"{env_kinds[f.like]}; the element-length "
-                        f"prototype must be a vector")
-            if f.source is not None:
-                _no_forward_ref(f.source, env_kinds, f"{where}.init.from")
+                        f"prototype must be a vector",
+                        code="RV208", path=f"{where}.like")
+            if f.source is not None and _no_forward_ref(
+                    f.source, env_kinds, f"{where}.init.from", sink):
                 want = (("matrix", "vector-stack") if f.of == "vector"
                         else ("vector", "scalar-stack"))
-                if env_kinds[f.source] not in want:
-                    raise SpecError(
+                if env_kinds[f.source] not in want + (_UNKNOWN,):
+                    spec_error(
+                        sink,
                         f"{where}.init.from: {f.source!r} is a "
                         f"{env_kinds[f.source]}; a {f.of} stack "
-                        f"adopts a {' or '.join(want)} buffer")
+                        f"adopts a {' or '.join(want)} buffer",
+                        code="RV208", path=f"{where}.init.from")
             out[f.name] = _stack_kind(f.of)
             continue
         bare = f.init.bare_name
         if bare is not None:
-            _no_forward_ref(bare, env_kinds, where)
-            inferred = env_kinds[bare]
+            if _no_forward_ref(bare, env_kinds, where, sink):
+                inferred = env_kinds[bare]
+            else:
+                inferred = _UNKNOWN
         else:
-            _check_scalar_expr(f.init, env_kinds, where)
+            _check_scalar_expr(f.init, env_kinds, where, sink)
             inferred = "scalar"
-        if f.kind is not None and f.kind != inferred:
-            raise SpecError(
+        if f.kind is not None and f.kind != inferred \
+                and inferred != _UNKNOWN:
+            spec_error(
+                sink,
                 f"{where}: declared kind {f.kind!r} but init "
-                f"{f.init.src!r} is a {inferred}")
+                f"{f.init.src!r} is a {inferred}",
+                code="RV208", path=where)
         out[f.name] = inferred
     return out
 
 
+_NO_STACKS: frozenset = frozenset()
+
+
 def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
-                  tiles="auto", stacks=frozenset(), in_cond=False):
+                  tiles="auto", stacks=_NO_STACKS, in_cond=False,
+                  sink=None):
     """Lower a stage list against an env of name -> kind, enforcing
     single-assignment, no forward references, and port-kind typing.
     `stacks` names the innermost enclosing loop's stack state fields —
     the only legal store targets. Mutates and returns `kinds`; returns
-    (compiled stages, produced names)."""
+    (compiled stages, produced names).
+
+    With `sink` set (the repro.verify analyzer) every violation is
+    recorded instead of raised, stage programs are probed with a
+    partial lowering (no codegen), and names whose kind an earlier
+    error obscured carry the poisoned kind "unknown" so one mistake
+    does not cascade."""
     compiled, produced = [], set()
     for i, st in enumerate(stages):
         where = f"{where_prefix}[{i}]"
@@ -481,76 +543,111 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
                     # a bare-name let aliases a value of ANY kind —
                     # the spec-level way for a cond branch to pass a
                     # vector through unchanged
-                    _no_forward_ref(bare, kinds, f"{where}.{name}")
-                    kind = kinds[bare]
+                    if _no_forward_ref(bare, kinds, f"{where}.{name}",
+                                       sink):
+                        kind = kinds[bare]
+                    else:
+                        kind = _UNKNOWN
                 else:
-                    _check_scalar_expr(expr, kinds, f"{where}.{name}")
+                    _check_scalar_expr(expr, kinds, f"{where}.{name}",
+                                       sink)
                     kind = "scalar"
-                _bind_single(name, kinds, produced, where)
+                _bind_single(name, kinds, produced, where, sink)
                 kinds[name] = kind
             compiled.append(CompiledStage(stage=st, tag="let"))
             continue
 
         if isinstance(st, ReadStage):
-            _no_forward_ref(st.source, kinds, f"{where}.read.from")
-            src_kind = kinds[st.source]
-            if src_kind not in _READ_KINDS:
-                raise SpecError(
+            if _no_forward_ref(st.source, kinds, f"{where}.read.from",
+                               sink):
+                src_kind = kinds[st.source]
+            else:
+                src_kind = _UNKNOWN
+            if src_kind not in _READ_KINDS and src_kind != _UNKNOWN:
+                spec_error(
+                    sink,
                     f"{where}.read.from: {st.source!r} is a "
                     f"{src_kind}; reads slice stacks, matrices "
                     f"(rows), and vectors (elements) along their "
-                    f"leading axis")
-            _check_scalar_expr(st.slot, kinds, f"{where}.read.slot")
+                    f"leading axis",
+                    code="RV208", path=f"{where}.read.from")
+                src_kind = _UNKNOWN
+            _check_scalar_expr(st.slot, kinds, f"{where}.read.slot",
+                               sink)
             _bind_single(st.name, kinds, produced,
-                         f"{where}.read.name")
-            kinds[st.name] = _READ_KINDS[src_kind]
+                         f"{where}.read.name", sink)
+            kinds[st.name] = _READ_KINDS.get(src_kind, _UNKNOWN)
             compiled.append(CompiledStage(stage=st, tag="read"))
             continue
 
         if isinstance(st, StoreStage):
             if in_cond:
-                raise SpecError(
+                spec_error(
+                    sink,
                     f"{where}.store: stores are not allowed inside "
                     f"cond branches (branches are value-level; route "
-                    f"the value out and store unconditionally)")
+                    f"the value out and store unconditionally)",
+                    code="RV210", path=f"{where}.store",
+                    hint="compute the value in the branch, then store "
+                         "it after the cond")
             if st.into not in stacks:
-                raise SpecError(
+                spec_error(
+                    sink,
                     f"{where}.store.into: {st.into!r} is not a stack "
                     f"state field of the enclosing loop (stores "
                     f"mutate the loop's own stacks; declared stacks: "
-                    f"{sorted(stacks)})")
-            _check_scalar_expr(st.slot, kinds, f"{where}.store.slot")
-            _no_forward_ref(st.value, kinds, f"{where}.store.value")
-            elem = _READ_KINDS[kinds[st.into]]
+                    f"{sorted(stacks)})",
+                    code="RV208", path=f"{where}.store.into",
+                    hint=f"declared stacks: {sorted(stacks)}")
+                elem = _UNKNOWN
+                into_kind = _UNKNOWN
+            else:
+                into_kind = kinds[st.into]
+                elem = _READ_KINDS[into_kind]
+            _check_scalar_expr(st.slot, kinds, f"{where}.store.slot",
+                               sink)
+            if _no_forward_ref(st.value, kinds,
+                               f"{where}.store.value", sink):
+                vkind = kinds[st.value]
+            else:
+                vkind = _UNKNOWN
             if st.at is not None:
-                if kinds[st.into] != "vector-stack":
-                    raise SpecError(
+                if into_kind not in ("vector-stack", _UNKNOWN):
+                    spec_error(
+                        sink,
                         f"{where}.store.at: element stores need a "
                         f"vector stack, {st.into!r} is a "
-                        f"{kinds[st.into]}")
-                _check_scalar_expr(st.at, kinds, f"{where}.store.at")
-                if kinds[st.value] != "scalar":
-                    raise SpecError(
+                        f"{into_kind}",
+                        code="RV208", path=f"{where}.store.at")
+                _check_scalar_expr(st.at, kinds, f"{where}.store.at",
+                                   sink)
+                if vkind not in ("scalar", _UNKNOWN):
+                    spec_error(
+                        sink,
                         f"{where}.store.value: an element store "
                         f"writes a scalar, {st.value!r} is a "
-                        f"{kinds[st.value]}")
-            elif kinds[st.value] != elem:
-                raise SpecError(
+                        f"{vkind}",
+                        code="RV208", path=f"{where}.store.value")
+            elif vkind != elem and _UNKNOWN not in (vkind, elem):
+                spec_error(
+                    sink,
                     f"{where}.store.value: {st.value!r} is a "
-                    f"{kinds[st.value]}, but {st.into!r} holds "
-                    f"{elem} slots")
+                    f"{vkind}, but {st.into!r} holds "
+                    f"{elem} slots",
+                    code="RV208", path=f"{where}.store.value")
             compiled.append(CompiledStage(stage=st, tag="store"))
             continue
 
         if isinstance(st, CondStage):
-            _check_scalar_expr(st.pred, kinds, f"{where}.cond.if")
+            _check_scalar_expr(st.pred, kinds, f"{where}.cond.if",
+                               sink)
             branch_out = []
             for label, sub in (("then", st.then), ("else", st.orelse)):
                 bkinds = dict(kinds)
                 bcomp, bprod = _lower_stages(
                     sub, bkinds, f"{where}.cond.{label}",
                     mode=mode, interpret=interpret, tiles=tiles,
-                    stacks=frozenset(), in_cond=True)
+                    stacks=_NO_STACKS, in_cond=True, sink=sink)
                 branch_out.append((bcomp, bprod, bkinds))
             (then_c, then_p, then_k), (else_c, else_p, else_k) = \
                 branch_out
@@ -559,18 +656,25 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
                 # branches are value-level (no stores, no nested
                 # loops), so a cond surviving nothing is pure waste —
                 # almost always a missing else or a branch-name typo
-                raise SpecError(
+                spec_error(
+                    sink,
                     f"{where}.cond: no name is produced by BOTH "
                     f"branches (then: {sorted(then_p)}, else: "
                     f"{sorted(else_p)}); only branch-common names "
                     f"survive a cond, so this cond can have no "
-                    f"effect")
+                    f"effect",
+                    code="RV210", path=f"{where}.cond",
+                    hint="produce the surviving value under the same "
+                         "name in both branches")
             for n in common:
-                if then_k[n] != else_k[n]:
-                    raise SpecError(
+                if then_k[n] != else_k[n] \
+                        and _UNKNOWN not in (then_k[n], else_k[n]):
+                    spec_error(
+                        sink,
                         f"{where}.cond: {n!r} is a {then_k[n]} in "
                         f"'then' but a {else_k[n]} in 'else'; a name "
-                        f"surviving the cond must have one kind")
+                        f"surviving the cond must have one kind",
+                        code="RV208", path=f"{where}.cond")
                 kinds[n] = then_k[n]
                 produced.add(n)
             compiled.append(CompiledStage(
@@ -581,30 +685,65 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
         if isinstance(st, InnerLoopStage):
             compiled.append(_lower_inner_loop(
                 st, kinds, produced, where, mode=mode,
-                interpret=interpret, tiles=tiles, in_cond=in_cond))
+                interpret=interpret, tiles=tiles, in_cond=in_cond,
+                sink=sink))
             continue
 
         assert isinstance(st, ProgramStage)
-        ir = compile_cached(st.raw_program, mode=mode,
-                            interpret=interpret, tiles=tiles)
+        if sink is None:
+            ir = compile_cached(st.raw_program, mode=mode,
+                                interpret=interpret, tiles=tiles,
+                                verify=False)
+        else:
+            # analysis probe: parse -> graph -> infer only, so the
+            # verifier never touches codegen (or JAX); inner-spec
+            # findings surface as diagnostics at this stage's path
+            try:
+                ir = lower(st.raw_program, mode=mode, upto="infer",
+                           tiles="default", verify=False)
+            except SpecError as e:
+                inner_path = f"{where}.program" + (
+                    f".{e.path}" if getattr(e, "path", None) else "")
+                sink.error(f"{where}.program: {e}",
+                           code=getattr(e, "code", None) or "RV100",
+                           path=inner_path,
+                           hint=getattr(e, "hint", None))
+                for env_name in st.outputs.values():
+                    if isinstance(env_name, str) and \
+                            spec_mod._IDENT.match(env_name):
+                        kinds[env_name] = _UNKNOWN
+                        produced.add(env_name)
+                compiled.append(CompiledStage(
+                    stage=st, tag="program", ir=None,
+                    inputs=dict(st.inputs), outputs=dict(st.outputs)))
+                continue
         unknown = set(st.inputs) - set(ir.io.input_kinds)
         if unknown:
-            raise SpecError(
+            spec_error(
+                sink,
                 f"{where}: input bindings for unknown program inputs "
                 f"{sorted(unknown)}; program {ir.spec.name!r} takes "
-                f"{sorted(ir.io.input_kinds)}")
+                f"{sorted(ir.io.input_kinds)}",
+                code="RV211", path=where,
+                hint=f"program {ir.spec.name!r} takes "
+                     f"{sorted(ir.io.input_kinds)}")
         unknown = set(st.outputs) - set(ir.io.output_kinds)
         if unknown:
-            raise SpecError(
+            spec_error(
+                sink,
                 f"{where}: output bindings for unknown program outputs "
                 f"{sorted(unknown)}; program {ir.spec.name!r} produces "
-                f"{sorted(ir.io.output_kinds)}")
+                f"{sorted(ir.io.output_kinds)}",
+                code="RV211", path=where,
+                hint=f"program {ir.spec.name!r} produces "
+                     f"{sorted(ir.io.output_kinds)}")
 
         in_bind = {}
         for pub, kind in ir.io.input_kinds.items():
             env_name = st.inputs.get(pub, pub)
-            _no_forward_ref(env_name, kinds,
-                            f"{where} input {pub!r}")
+            if not _no_forward_ref(env_name, kinds,
+                                   f"{where} input {pub!r}", sink):
+                continue
             have = kinds[env_name]
             # a stack buffer is directly usable one level up: a stack
             # of vectors is a (slots, n) matrix window, a stack of
@@ -612,32 +751,44 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
             # Krylov basis to gemv
             stack_ok = (kind == "matrix" and have == "vector-stack") \
                 or (kind == "vector" and have == "scalar-stack")
-            if have != kind and not stack_ok:
+            if have != kind and not stack_ok and have != _UNKNOWN:
                 if kind in ("vector", "matrix") and have == "scalar":
-                    raise SpecError(
+                    spec_error(
+                        sink,
                         f"{where}: scalar value {env_name!r} cannot "
                         f"feed window port {pub!r} of program "
                         f"{ir.spec.name!r} (scalars travel on streams, "
-                        f"windows carry {kind}s)")
-                raise SpecError(
-                    f"{where}: {env_name!r} is a {have} but program "
-                    f"input {pub!r} wants a {kind}")
+                        f"windows carry {kind}s)",
+                        code="RV208", path=where,
+                        hint="feed the port a vector/matrix value; "
+                             "scalars bind to scalar input streams")
+                else:
+                    spec_error(
+                        sink,
+                        f"{where}: {env_name!r} is a {have} but "
+                        f"program input {pub!r} wants a {kind}",
+                        code="RV208", path=where)
             in_bind[pub] = env_name
 
         out_bind = {}
         for pub, kind in ir.io.output_kinds.items():
             env_name = st.outputs.get(pub, pub)
             if not spec_mod._IDENT.match(env_name):
-                raise SpecError(
+                spec_error(
+                    sink,
                     f"{where}: program output {pub!r} needs an "
                     f"identifier environment name (alias it in the "
                     f"stage's 'outputs' or the inner spec), got "
-                    f"{env_name!r}")
+                    f"{env_name!r}",
+                    code="RV211", path=where)
+                continue
             if env_name in kinds:
-                raise SpecError(
+                spec_error(
+                    sink,
                     f"{where}: output {pub!r} -> {env_name!r} rebinds "
                     f"an existing name (loop values are "
-                    f"single-assignment per iteration)")
+                    f"single-assignment per iteration)",
+                    code="RV202", path=where)
             kinds[env_name] = kind
             out_bind[pub] = env_name
             produced.add(env_name)
@@ -650,100 +801,136 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
 
 def _lower_inner_loop(st: InnerLoopStage, kinds, produced, where, *,
                       mode, interpret, tiles="auto",
-                      in_cond=False) -> CompiledStage:
+                      in_cond=False, sink=None) -> CompiledStage:
     """Lower a nested iterate: inner state inits read the enclosing
     environment, the inner body is lowered against enclosing env +
     inner state (+ counter), and yields bind final inner state into
     the enclosing environment."""
     if in_cond:
-        raise SpecError(
+        spec_error(
+            sink,
             f"{where}.iterate: nested loops are not allowed inside "
-            f"cond branches (branches are value-level)")
+            f"cond branches (branches are value-level)",
+            code="RV210", path=f"{where}.iterate",
+            hint="hoist the inner loop out of the cond branch")
     inner_kinds = dict(kinds)
     if st.counter is not None:
         if st.counter in inner_kinds:
-            raise SpecError(
+            spec_error(
+                sink,
                 f"{where}.iterate.counter: {st.counter!r} rebinds an "
-                f"existing name")
+                f"existing name",
+                code="RV202", path=f"{where}.iterate.counter")
         inner_kinds[st.counter] = "scalar"
 
-    skinds = _state_kinds(st.state, kinds, f"{where}.iterate.state")
+    skinds = _state_kinds(st.state, kinds, f"{where}.iterate.state",
+                          sink)
     for f in st.state:
         if f.name in inner_kinds:
-            raise SpecError(
+            spec_error(
+                sink,
                 f"{where}.iterate.state.{f.name}: shadows an "
                 f"enclosing value (pick a fresh name; enclosing "
-                f"values stay readable inside the inner body)")
+                f"values stay readable inside the inner body)",
+                code="RV202", path=f"{where}.iterate.state.{f.name}",
+                hint="pick a fresh name; enclosing values stay "
+                     "readable inside the inner body")
     inner_kinds.update(skinds)
 
     inner_stacks = frozenset(f.name for f in st.state if f.is_stack)
     body, inner_produced = _lower_stages(
         st.body, inner_kinds, f"{where}.iterate.body",
         mode=mode, interpret=interpret, tiles=tiles,
-        stacks=inner_stacks)
+        stacks=inner_stacks, sink=sink)
 
     for fname, src in st.feedback.items():
         fwhere = f"{where}.iterate.feedback.{fname}"
-        _no_forward_ref(src, inner_kinds, fwhere)
-        if inner_kinds[src] != skinds[fname]:
-            raise SpecError(
+        if not _no_forward_ref(src, inner_kinds, fwhere, sink):
+            continue
+        if inner_kinds[src] != skinds[fname] \
+                and _UNKNOWN not in (inner_kinds[src], skinds[fname]):
+            spec_error(
+                sink,
                 f"{fwhere}: cannot feed a {inner_kinds[src]} back "
-                f"into {skinds[fname]} state field {fname!r}")
+                f"into {skinds[fname]} state field {fname!r}",
+                code="RV208", path=fwhere)
 
     stop = st.stop
     if isinstance(stop, CountRule):
         # the trip count is fixed at loop entry: enclosing scope only
         _check_scalar_expr(stop.count, kinds,
-                           f"{where}.iterate.while.count")
+                           f"{where}.iterate.while.count", sink)
     else:
         assert isinstance(stop, StopRule)
         swhere = f"{where}.iterate.while"
         if stop.metric not in inner_produced:
-            raise SpecError(
+            spec_error(
+                sink,
                 f"{swhere}.metric: {stop.metric!r} is not produced "
-                f"by the inner loop body")
-        if inner_kinds[stop.metric] != "scalar":
-            raise SpecError(
+                f"by the inner loop body",
+                code="RV209", path=f"{swhere}.metric",
+                hint="the stop metric must be a scalar the body "
+                     "computes each iteration")
+        elif inner_kinds[stop.metric] not in ("scalar", _UNKNOWN):
+            spec_error(
+                sink,
                 f"{swhere}.metric: {stop.metric!r} is a "
-                f"{inner_kinds[stop.metric]}, not a scalar")
-        _no_forward_ref(stop.init_metric, kinds, f"{swhere}.init")
-        if kinds[stop.init_metric] != "scalar":
-            raise SpecError(
+                f"{inner_kinds[stop.metric]}, not a scalar",
+                code="RV209", path=f"{swhere}.metric")
+        if _no_forward_ref(stop.init_metric, kinds, f"{swhere}.init",
+                           sink) \
+                and kinds[stop.init_metric] not in ("scalar", _UNKNOWN):
+            spec_error(
+                sink,
                 f"{swhere}.init: {stop.init_metric!r} is a "
-                f"{kinds[stop.init_metric]}, not a scalar")
+                f"{kinds[stop.init_metric]}, not a scalar",
+                code="RV209", path=f"{swhere}.init")
         if isinstance(stop.scale, str):
-            _no_forward_ref(stop.scale, kinds, f"{swhere}.scale")
-            if kinds[stop.scale] != "scalar":
-                raise SpecError(
+            if _no_forward_ref(stop.scale, kinds, f"{swhere}.scale",
+                               sink) \
+                    and kinds[stop.scale] not in ("scalar", _UNKNOWN):
+                spec_error(
+                    sink,
                     f"{swhere}.scale: {stop.scale!r} is a "
-                    f"{kinds[stop.scale]}, not a scalar")
+                    f"{kinds[stop.scale]}, not a scalar",
+                    code="RV209", path=f"{swhere}.scale")
 
     for outer_name, field in st.yields.items():
         _bind_single(outer_name, kinds, produced,
-                     f"{where}.iterate.yield.{outer_name}")
-        kinds[outer_name] = skinds[field]
+                     f"{where}.iterate.yield.{outer_name}", sink)
+        kinds[outer_name] = skinds.get(field, _UNKNOWN)
     return CompiledStage(stage=st, tag="loop", body=body)
 
 
 def lower_loop(raw, *, mode: str = "dataflow",
                interpret: Optional[bool] = None,
-               tiles="auto") -> LoopIR:
+               tiles="auto", sink=None,
+               verify: bool = True) -> LoopIR:
     """Lower a loop spec: compile every stage program through the
     cache and type-check the loop environment end to end. `tiles`
-    is forwarded to every stage program's `compile_cached` call."""
+    is forwarded to every stage program's `compile_cached` call.
+
+    `verify=True` (the default) runs the `repro.verify` analyzer over
+    the raw spec first, so malformed programs fail with a structured
+    `VerifyError` before any JAX tracing. `sink` is the analyzer's
+    way in: with a sink set, violations are recorded instead of
+    raised and verification is skipped (the sink IS the verifier)."""
+    if verify and sink is None and not isinstance(raw, LoopSpec):
+        from repro import verify as verify_mod
+        verify_mod.check(raw, mode=mode)
     lspec = raw if isinstance(raw, LoopSpec) else spec_mod.parse_loop(raw)
 
     kinds = dict(lspec.operands)
     setup, _ = _lower_stages(lspec.setup, kinds, "setup",
                              mode=mode, interpret=interpret,
-                             tiles=tiles)
+                             tiles=tiles, sink=sink)
     setup_kinds = dict(kinds)
 
     # state fields: bare-name inits inherit the referenced kind;
     # composite expressions are scalar arithmetic over scalars;
     # stacks check their slot0/like/from references
     state_kinds = _state_kinds(lspec.state, setup_kinds,
-                               "iterate.state")
+                               "iterate.state", sink)
 
     body_env = dict(setup_kinds)
     for sname, skind in state_kinds.items():
@@ -752,44 +939,68 @@ def lower_loop(raw, *, mode: str = "dataflow",
     # body environment so cond predicates can express early exits
     # like BiCGStab's ‖s‖ test; the name is reserved
     if "threshold" in body_env:
-        raise SpecError(
+        spec_error(
+            sink,
             "'threshold' is a reserved loop-body name (the driver "
             "binds it to the stop threshold tol * scale); rename the "
-            "conflicting operand/setup value/state field")
+            "conflicting operand/setup value/state field",
+            code="RV207", path="iterate.state",
+            hint="rename the conflicting operand/setup value/state "
+                 "field")
     body_env["threshold"] = "scalar"
     stacks = frozenset(f.name for f in lspec.state if f.is_stack)
     body, produced = _lower_stages(lspec.body, body_env, "iterate.body",
                                    mode=mode, interpret=interpret,
-                                   tiles=tiles, stacks=stacks)
+                                   tiles=tiles, stacks=stacks,
+                                   sink=sink)
 
     for fname, src in lspec.feedback.items():
         where = f"iterate.feedback.{fname}"
-        _no_forward_ref(src, body_env, where)
-        if body_env[src] != state_kinds[fname]:
-            raise SpecError(
+        if not _no_forward_ref(src, body_env, where, sink):
+            continue
+        if body_env[src] != state_kinds.get(fname, _UNKNOWN) \
+                and _UNKNOWN not in (body_env[src],
+                                     state_kinds.get(fname, _UNKNOWN)):
+            spec_error(
+                sink,
                 f"{where}: cannot feed a {body_env[src]} back into "
-                f"{state_kinds[fname]} state field {fname!r}")
+                f"{state_kinds[fname]} state field {fname!r}",
+                code="RV208", path=where)
 
     stop = lspec.stop
     if stop.metric not in produced:
-        raise SpecError(
+        spec_error(
+            sink,
             f"iterate.while.metric: {stop.metric!r} is not produced by "
-            f"the loop body")
-    if body_env[stop.metric] != "scalar":
-        raise SpecError(
+            f"the loop body",
+            code="RV209", path="iterate.while.metric",
+            hint="the stop metric must be a scalar the body computes "
+                 "each iteration")
+    elif body_env[stop.metric] not in ("scalar", _UNKNOWN):
+        spec_error(
+            sink,
             f"iterate.while.metric: {stop.metric!r} is a "
-            f"{body_env[stop.metric]}, not a scalar")
-    _no_forward_ref(stop.init_metric, setup_kinds, "iterate.while.init")
-    if setup_kinds[stop.init_metric] != "scalar":
-        raise SpecError(
+            f"{body_env[stop.metric]}, not a scalar",
+            code="RV209", path="iterate.while.metric")
+    if _no_forward_ref(stop.init_metric, setup_kinds,
+                       "iterate.while.init", sink) \
+            and setup_kinds[stop.init_metric] not in ("scalar",
+                                                      _UNKNOWN):
+        spec_error(
+            sink,
             f"iterate.while.init: {stop.init_metric!r} is a "
-            f"{setup_kinds[stop.init_metric]}, not a scalar")
+            f"{setup_kinds[stop.init_metric]}, not a scalar",
+            code="RV209", path="iterate.while.init")
     if isinstance(stop.scale, str):
-        _no_forward_ref(stop.scale, setup_kinds, "iterate.while.scale")
-        if setup_kinds[stop.scale] != "scalar":
-            raise SpecError(
+        if _no_forward_ref(stop.scale, setup_kinds,
+                           "iterate.while.scale", sink) \
+                and setup_kinds[stop.scale] not in ("scalar",
+                                                    _UNKNOWN):
+            spec_error(
+                sink,
                 f"iterate.while.scale: {stop.scale!r} is a "
-                f"{setup_kinds[stop.scale]}, not a scalar")
+                f"{setup_kinds[stop.scale]}, not a scalar",
+                code="RV209", path="iterate.while.scale")
 
     return LoopIR(lspec=lspec, mode=mode, interpret=interpret,
                   setup=setup, body=body, setup_kinds=setup_kinds,

@@ -62,7 +62,38 @@ DEFAULT_VECTOR_WIDTH = 128  # lanes — the AIE 512-bit vector-width knob
 
 
 class SpecError(ValueError):
-    pass
+    """A spec-level validation error.
+
+    Beyond the message, a SpecError may carry structured fields the
+    `repro.verify` analyzer surfaces as typed diagnostics: a stable
+    diagnostic `code` (e.g. "RV104"), a JSON `path` into the offending
+    spec (e.g. "routines[1].connections.out"), and a one-line fix-it
+    `hint`. Call sites that predate the analyzer may omit them; the
+    analyzer falls back to a generic code and an empty path.
+    """
+
+    def __init__(self, message: str, *, code: Optional[str] = None,
+                 path: Optional[str] = None,
+                 hint: Optional[str] = None):
+        super().__init__(message)
+        self.code = code
+        self.path = path
+        self.hint = hint
+
+
+def spec_error(sink, message, *, code=None, path=None, hint=None):
+    """Raise a SpecError — or, when `sink` is not None, record the
+    finding on it and return so validation can continue.
+
+    This is the bridge between the enforcing path (lowering raises at
+    the first error, exactly as before) and the `repro.verify`
+    analyzer (which passes a diagnostics sink to collect *every*
+    finding in one run). The sink is duck-typed: anything with an
+    `.error(message, code=..., path=..., hint=...)` method works.
+    """
+    if sink is None:
+        raise SpecError(message, code=code, path=path, hint=hint)
+    sink.error(message, code=code, path=path, hint=hint)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,7 +136,7 @@ class ProgramSpec:
         raise KeyError(name)
 
 
-def _parse_scalar(name, raw) -> ScalarBinding:
+def _parse_scalar(name, raw, path=None) -> ScalarBinding:
     if isinstance(raw, (int, float)):
         return ScalarBinding("value", value=float(raw))
     if isinstance(raw, Mapping):
@@ -113,7 +144,10 @@ def _parse_scalar(name, raw) -> ScalarBinding:
             return ScalarBinding("value", value=float(raw["value"]))
         if "input" in raw:
             return ScalarBinding("input", input_name=str(raw["input"]))
-    raise SpecError(f"bad scalar binding for {name!r}: {raw!r}")
+    raise SpecError(f"bad scalar binding for {name!r}: {raw!r}",
+                    code="RV103", path=path,
+                    hint="bind a scalar as a number, {'value': v}, or "
+                         "{'input': name}")
 
 
 def parse(spec: Union[str, Mapping, pathlib.Path]) -> ProgramSpec:
@@ -128,46 +162,71 @@ def parse(spec: Union[str, Mapping, pathlib.Path]) -> ProgramSpec:
     name = spec.get("name", "program")
     dtype_name = spec.get("dtype", "float32")
     if dtype_name not in _DTYPES:
-        raise SpecError(f"unsupported dtype {dtype_name!r}")
+        raise SpecError(f"unsupported dtype {dtype_name!r}",
+                        code="RV111", path="dtype",
+                        hint=f"pick one of {sorted(_DTYPES)}")
     g_window = int(spec.get("window_size", DEFAULT_WINDOW))
     g_vw = int(spec.get("vector_width", DEFAULT_VECTOR_WIDTH))
     if g_vw % 128 != 0:
         raise SpecError(
             f"vector_width must be a multiple of 128 lanes (TPU VPU), "
-            f"got {g_vw}")
+            f"got {g_vw}",
+            code="RV112", path="vector_width",
+            hint="use 128, 256, 384, ... (whole vector registers)")
 
     raw_routines = spec.get("routines")
     if not raw_routines:
-        raise SpecError("spec has no routines")
+        raise SpecError("spec has no routines", code="RV100",
+                        path="routines",
+                        hint="add at least one routine entry")
 
     seen = set()
     parsed = []
-    for raw in raw_routines:
+    for ri, raw in enumerate(raw_routines):
+        rpath = f"routines[{ri}]"
         blas = raw.get("blas")
-        rdef = R.get(blas)  # raises on unknown routine
+        try:
+            rdef = R.get(blas)
+        except KeyError as e:
+            # R.get raises a bare KeyError; surface it as a spec error
+            # with the JSON path so the CLI/verify report can point at
+            # the offending entry
+            raise SpecError(str(e.args[0]) if e.args else
+                            f"unknown BLAS routine {blas!r}",
+                            code="RV101", path=f"{rpath}.blas",
+                            hint=f"available routines: "
+                                 f"{sorted(R.names())}") from None
         rname = raw.get("name", blas)
         if rname in seen:
-            raise SpecError(f"duplicate routine name {rname!r}")
+            raise SpecError(f"duplicate routine name {rname!r}",
+                            code="RV102", path=f"{rpath}.name",
+                            hint="give each routine instance a unique "
+                                 "'name'")
         seen.add(rname)
 
         scalars = {}
         raw_scalars = raw.get("scalars", {})
         for s in rdef.scalars:
             if s in raw_scalars:
-                scalars[s] = _parse_scalar(s, raw_scalars[s])
+                scalars[s] = _parse_scalar(s, raw_scalars[s],
+                                           path=f"{rpath}.scalars.{s}")
             else:
                 scalars[s] = ScalarBinding("input",
                                            input_name=f"{rname}.{s}")
         for s in raw_scalars:
             if s not in rdef.scalars:
                 raise SpecError(
-                    f"{rname}: routine {blas!r} has no scalar {s!r}")
+                    f"{rname}: routine {blas!r} has no scalar {s!r}",
+                    code="RV103", path=f"{rpath}.scalars.{s}",
+                    hint=f"{blas!r} scalars: {sorted(rdef.scalars)}")
 
         conns = {}
         for port, targets in dict(raw.get("connections", {})).items():
             if port not in rdef.outputs:
                 raise SpecError(
-                    f"{rname}: no output port {port!r} on {blas!r}")
+                    f"{rname}: no output port {port!r} on {blas!r}",
+                    code="RV103", path=f"{rpath}.connections.{port}",
+                    hint=f"{blas!r} outputs: {sorted(rdef.outputs)}")
             if isinstance(targets, str):
                 targets = (targets,)
             elif isinstance(targets, (list, tuple)):
@@ -176,52 +235,75 @@ def parse(spec: Union[str, Mapping, pathlib.Path]) -> ProgramSpec:
                 raise SpecError(
                     f"{rname}.{port}: connection target must be a "
                     f"'routine.port' string or a list of them, got "
-                    f"{targets!r}")
+                    f"{targets!r}",
+                    code="RV104", path=f"{rpath}.connections.{port}")
             for t in targets:
                 if not isinstance(t, str):
                     raise SpecError(
                         f"{rname}.{port}: connection target must be a "
-                        f"'routine.port' string, got {t!r}")
+                        f"'routine.port' string, got {t!r}",
+                        code="RV104",
+                        path=f"{rpath}.connections.{port}")
             conns[port] = targets
         in_aliases = dict(raw.get("inputs", {}))
         for port in in_aliases:
             if port not in rdef.inputs:
                 raise SpecError(
-                    f"{rname}: no input port {port!r} on {blas!r}")
+                    f"{rname}: no input port {port!r} on {blas!r}",
+                    code="RV103", path=f"{rpath}.inputs.{port}",
+                    hint=f"{blas!r} inputs: {sorted(rdef.inputs)}")
         out_aliases = dict(raw.get("outputs", {}))
         for port in out_aliases:
             if port not in rdef.outputs:
                 raise SpecError(
-                    f"{rname}: no output port {port!r} on {blas!r}")
+                    f"{rname}: no output port {port!r} on {blas!r}",
+                    code="RV103", path=f"{rpath}.outputs.{port}",
+                    hint=f"{blas!r} outputs: {sorted(rdef.outputs)}")
 
         placement = {k: tuple(v) for k, v in raw.get("placement",
                                                      {}).items()}
+        r_vw = int(raw.get("vector_width", g_vw))
+        if r_vw % 128 != 0:
+            # per-routine overrides get the same lane check as the
+            # global setting — previously they slipped through
+            raise SpecError(
+                f"{rpath}: vector_width must be a multiple of 128 "
+                f"lanes (TPU VPU), got {r_vw}",
+                code="RV112", path=f"{rpath}.vector_width",
+                hint="use 128, 256, 384, ... (whole vector registers)")
         parsed.append(RoutineSpec(
             blas=blas, name=rname, scalars=scalars, connections=conns,
             input_aliases=in_aliases, output_aliases=out_aliases,
             window_size=int(raw.get("window_size", g_window)),
-            vector_width=int(raw.get("vector_width", g_vw)),
+            vector_width=r_vw,
             placement=placement,
         ))
 
     # validate connection targets
     by_name = {r.name: r for r in parsed}
-    for r in parsed:
+    for ri, r in enumerate(parsed):
         for out_port, targets in r.connections.items():
+            cpath = f"routines[{ri}].connections.{out_port}"
             for target in targets:
                 if "." not in target:
                     raise SpecError(
                         f"{r.name}.{out_port}: connection target must be "
-                        f"'routine.port', got {target!r}")
+                        f"'routine.port', got {target!r}",
+                        code="RV104", path=cpath)
                 tname, tport = target.rsplit(".", 1)
                 if tname not in by_name:
                     raise SpecError(
                         f"{r.name}.{out_port}: unknown target routine "
-                        f"{tname!r}")
+                        f"{tname!r}",
+                        code="RV104", path=cpath,
+                        hint=f"declared routines: {sorted(by_name)}")
                 if tport not in by_name[tname].rdef.inputs:
                     raise SpecError(
                         f"{r.name}.{out_port}: target {tname!r} has no "
-                        f"input port {tport!r}")
+                        f"input port {tport!r}",
+                        code="RV104", path=cpath,
+                        hint=f"{by_name[tname].blas!r} inputs: "
+                             f"{sorted(by_name[tname].rdef.inputs)}")
 
     return ProgramSpec(
         name=name, dtype=_DTYPES[dtype_name], routines=tuple(parsed),
@@ -542,7 +624,8 @@ def _parse_ident(name, where) -> str:
     if not isinstance(name, str) or not _IDENT.match(name):
         raise SpecError(
             f"{where}: {name!r} is not a valid identifier (loop names "
-            f"must be expression-referencable)")
+            f"must be expression-referencable)",
+            code="RV211", path=where)
     return name
 
 
@@ -550,14 +633,16 @@ def _parse_expr(src, where) -> Expr:
     try:
         return parse_expr(src)
     except ExprError as e:
-        raise SpecError(f"{where}: {e}") from None
+        raise SpecError(f"{where}: {e}", code="RV211",
+                        path=where) from None
 
 
 def _parse_pred(src, where) -> Expr:
     try:
         return parse_pred(src)
     except ExprError as e:
-        raise SpecError(f"{where}: {e}") from None
+        raise SpecError(f"{where}: {e}", code="RV211",
+                        path=where) from None
 
 
 STAGE_KINDS = ("let", "program", "cond", "read", "store", "iterate")
@@ -579,7 +664,10 @@ def _parse_stage(raw, where, *, dtype_name):
     if len(tags) != 1:
         raise SpecError(
             f"{where}: stage must have exactly one of "
-            f"{'/'.join(STAGE_KINDS)}, got keys {sorted(raw)}")
+            f"{'/'.join(STAGE_KINDS)}, got keys {sorted(raw)}",
+            code="RV211", path=where,
+            hint=f"tag each stage with exactly one of "
+                 f"{'/'.join(STAGE_KINDS)}")
     tag = tags[0]
 
     if tag == "let":
@@ -799,20 +887,27 @@ def _parse_feedback(it, state, where):
         if fname not in state_names:
             raise SpecError(
                 f"{where}: unknown state field {fname!r}; "
-                f"declared state: {sorted(state_names)}")
+                f"declared state: {sorted(state_names)}",
+                code="RV211", path=f"{where}.{fname}",
+                hint=f"declared state: {sorted(state_names)}")
         if fname in stacks:
             raise SpecError(
                 f"{where}.{fname}: stack state feeds back "
                 f"automatically (the buffer as mutated by the "
-                f"iteration's stores); remove the explicit edge")
+                f"iteration's stores); remove the explicit edge",
+                code="RV211", path=f"{where}.{fname}")
         if not isinstance(src, str) or not _IDENT.match(src):
             raise SpecError(
                 f"{where}.{fname}: source must be an "
-                f"environment name, got {src!r}")
+                f"environment name, got {src!r}",
+                code="RV211", path=f"{where}.{fname}")
     if not feedback and not stacks:
         raise SpecError(
             f"{where} is empty: a loop with no feedback edge "
-            f"computes the same iterate forever")
+            f"computes the same iterate forever",
+            code="RV211", path=where,
+            hint="add a feedback edge (state field -> body value) or "
+                 "a stack state field")
     return feedback
 
 
@@ -915,12 +1010,17 @@ def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
     if unknown:
         raise SpecError(
             f"loop spec: unknown top-level keys {sorted(unknown)} "
-            f"(did a section escape 'iterate'?)")
+            f"(did a section escape 'iterate'?)",
+            code="RV211", path=sorted(unknown)[0],
+            hint="move solver sections (state/body/feedback/while/"
+                 "solution) inside 'iterate'")
 
     name = raw.get("name", "loop")
     dtype_name = raw.get("dtype", "float32")
     if dtype_name not in _DTYPES:
-        raise SpecError(f"unsupported dtype {dtype_name!r}")
+        raise SpecError(f"unsupported dtype {dtype_name!r}",
+                        code="RV111", path="dtype",
+                        hint=f"supported: {', '.join(sorted(_DTYPES))}")
 
     raw_ops = raw.get("operands")
     if not isinstance(raw_ops, Mapping) or not raw_ops:
@@ -933,7 +1033,10 @@ def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
         if okind not in OPERAND_KINDS:
             raise SpecError(
                 f"operand {oname!r}: unknown kind {okind!r}; expected "
-                f"one of {OPERAND_KINDS}")
+                f"one of {OPERAND_KINDS}",
+                code="RV211", path=f"operands.{oname}",
+                hint=f"declare each operand as one of "
+                     f"{'|'.join(OPERAND_KINDS)}")
         operands[oname] = okind
 
     setup = tuple(
@@ -993,13 +1096,16 @@ def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
 
     solution = dict(it.get("solution", {"x": "x"}))
     if not solution:
-        raise SpecError("iterate.solution must not be empty")
+        raise SpecError("iterate.solution must not be empty",
+                        code="RV211", path="iterate.solution")
     for pub, src in solution.items():
         if src not in state_names:
             raise SpecError(
                 f"iterate.solution.{pub}: source {src!r} is not a "
                 f"state field (solutions are read from the final "
-                f"loop state)")
+                f"loop state)",
+                code="RV211", path=f"iterate.solution.{pub}",
+                hint=f"declared state: {sorted(state_names)}")
 
     return LoopSpec(
         name=name, dtype=_DTYPES[dtype_name], operands=operands,

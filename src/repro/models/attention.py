@@ -212,6 +212,5 @@ def decode_attention_mla(q_lat, q_rope, ckv_cache, krope_cache, pos, *,
     valid = jnp.arange(smax)[None, None, :] <= pos
     s = jnp.where(valid, s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhs,bsr->bhr", p.astype(ckv_cache.dtype),
-                     ckv_cache, preferred_element_type=jnp.float32)
-    return ctx
+    return jnp.einsum("bhs,bsr->bhr", p.astype(ckv_cache.dtype),
+                      ckv_cache, preferred_element_type=jnp.float32)

@@ -195,7 +195,8 @@ def init_params(cfg: ArchConfig, key, dtype=None):
     for (kind, count), k in zip(cfg.segments, keys[1:-2]):
         lkeys = jax.random.split(k, count)
         segs.append(jax.vmap(
-            lambda kk: _BLOCK_INIT[kind](cfg, kk, dtype))(lkeys))
+            lambda kk, _init=_BLOCK_INIT[kind]: _init(cfg, kk, dtype)
+        )(lkeys))
     params["segments"] = segs
     params["final_norm"] = jnp.ones((d,), dtype)
     if not (cfg.tie_embeddings and cfg.input_mode == "tokens"):
@@ -421,8 +422,8 @@ def forward_hidden(params, cfg: ArchConfig, inputs, *, remat=True,
                    want_cache=False):
     x = constrain_tokens(_embed_inputs(params, cfg, inputs))
     caches = []
-    for seg_params, (kind, count) in zip(params["segments"],
-                                         cfg.segments):
+    for seg_params, (kind, _count) in zip(params["segments"],
+                                          cfg.segments):
         def body(h, layer_p, _kind=kind):
             layer_p = constrain_param_tree(layer_p)
             h2, c = _block_fwd(_kind, layer_p, h, cfg, want_cache)
@@ -710,7 +711,7 @@ def decode_step(params, cfg: ArchConfig, inputs_t, caches, pos):
         x = inputs_t
     x = constrain_tokens(x)
     new_caches = []
-    for seg_params, seg_cache, (kind, count) in zip(
+    for seg_params, seg_cache, (kind, _count) in zip(
             params["segments"], caches, cfg.segments):
         def body(h, xs, _kind=kind):
             layer_p, layer_c = xs
@@ -744,7 +745,7 @@ def prefill(params, cfg: ArchConfig, inputs, max_len: int):
     logits = _unembed(params, cfg, h[:, -1])
     s_att = _swa_cache_len(cfg, max_len)
     caches = []
-    for raw, (kind, count) in zip(raw_caches, cfg.segments):
+    for raw, (kind, _count) in zip(raw_caches, cfg.segments):
         if kind in ("attn", "attn_moe") and cfg.attn_kind == "mla":
             pad = max_len - s
             c = {"ckv": jnp.pad(raw["ckv"],

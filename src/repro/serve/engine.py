@@ -74,7 +74,7 @@ class ServeEngine:
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         outs = [tok]
         done = jnp.zeros((b,), bool)
-        for i in range(max_new_tokens - 1):
+        for _ in range(max_new_tokens - 1):
             self.key, sub = jax.random.split(self.key)
             tok, caches = self._step(self.params, caches, tok, pos,
                                      sub)

@@ -244,7 +244,8 @@ class LoopProgram(SolverProgram):
 
     def __init__(self, spec, *, mode: Optional[str] = None,
                  max_iters: Optional[int] = None,
-                 interpret: Optional[bool] = None, tiles="auto"):
+                 interpret: Optional[bool] = None, tiles="auto",
+                 verify: bool = True):
         if isinstance(spec, lowering.LoopIR):
             # a pre-lowered IR fixes mode/interpret: its stage kernels
             # are already compiled for that configuration
@@ -262,7 +263,8 @@ class LoopProgram(SolverProgram):
         else:
             mode = "dataflow" if mode is None else mode
             lir = lowering.lower_loop(spec, mode=mode,
-                                      interpret=interpret, tiles=tiles)
+                                      interpret=interpret, tiles=tiles,
+                                      verify=verify)
         self.lir = lir
         self.name = lir.lspec.name
         if "x" not in lir.lspec.solution:

@@ -245,8 +245,11 @@ def tune_program(raw, shapes: Mapping, *, mode: str = "dataflow",
     dk = C.current_device_kind()
 
     def lower_with(plan):
+        # candidate sweeps re-lower an already-validated spec; skip
+        # re-running the static analyzer per plan
         return lowering.lower(raw, mode=mode, fuse=fuse, anchor=anchor,
-                              interpret=interpret, tiles=plan)
+                              interpret=interpret, tiles=plan,
+                              verify=False)
 
     ir0 = lower_with(C.EMPTY_PLAN)
     inputs = _synthesize(ir0, shapes)

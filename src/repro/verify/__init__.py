@@ -1,0 +1,30 @@
+"""`repro.verify` — whole-program static analyzer for BLAS specs.
+
+Runs before any JAX tracing and reports typed diagnostics (stable
+``RVnnn`` codes, severity, JSON path into the spec, fix-it hint) over
+both spec kinds: dataflow programs (graph structure, port typing,
+dtype policy, fusion/VMEM footprint) and loop programs (environment
+dataflow, stack bounds, expression numerics).
+
+    from repro import verify
+    report = verify.analyze(spec)        # never raises
+    verify.check(spec)                   # raises VerifyError on errors
+
+Lowering calls `check` by default (`lower(..., verify=True)`), so a
+malformed spec fails with every finding at once and zero trace frames;
+``python -m repro.verify`` is the CLI over the same engine. The
+diagnostic catalog lives in `diagnostics.CATALOG` and docs/verify.md.
+"""
+from .diagnostics import (CATALOG, Diagnostic, DiagnosticSink, Report,
+                          VerifyError)
+from .engine import analyze, check
+
+__all__ = [
+    "CATALOG",
+    "Diagnostic",
+    "DiagnosticSink",
+    "Report",
+    "VerifyError",
+    "analyze",
+    "check",
+]

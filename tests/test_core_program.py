@@ -31,8 +31,12 @@ def test_parse_axpydot_spec():
 
 
 def test_unknown_routine_rejected():
-    with pytest.raises(KeyError):
+    # the registry's bare KeyError surfaces as a typed spec error
+    # pointing at the offending entry
+    with pytest.raises(SpecError, match="unknown BLAS routine") as ei:
         spec_mod.parse({"routines": [{"blas": "nosuch"}]})
+    assert (ei.value.code, ei.value.path) == ("RV101",
+                                              "routines[0].blas")
 
 
 def test_bad_connection_target_rejected():

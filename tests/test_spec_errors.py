@@ -76,24 +76,30 @@ def test_feedback_unknown_state_field():
     bad = _loop()
     bad["iterate"] = {**bad["iterate"],
                       "feedback": {"q": "r_next", "x": "x"}}
-    with pytest.raises(SpecError, match="unknown state field"):
+    with pytest.raises(SpecError, match="unknown state field") as ei:
         spec_mod.parse_loop(bad)
+    assert (ei.value.code, ei.value.path) == \
+        ("RV211", "iterate.feedback.q")
 
 
 def test_feedback_source_must_exist():
     bad = _loop()
     bad["iterate"] = {**bad["iterate"],
                       "feedback": {"r": "nosuch", "x": "x"}}
-    with pytest.raises(SpecError, match="not defined"):
-        lowering.lower_loop(bad)
+    with pytest.raises(SpecError, match="not defined") as ei:
+        lowering.lower_loop(bad, verify=False)
+    assert (ei.value.code, ei.value.path) == \
+        ("RV201", "iterate.feedback.r")
 
 
 def test_feedback_kind_mismatch_scalar_into_vector():
     bad = _loop()
     bad["iterate"] = {**bad["iterate"],
                       "feedback": {"r": "rnorm", "x": "x"}}
-    with pytest.raises(SpecError, match="cannot feed a scalar"):
-        lowering.lower_loop(bad)
+    with pytest.raises(SpecError, match="cannot feed a scalar") as ei:
+        lowering.lower_loop(bad, verify=False)
+    assert (ei.value.code, ei.value.path) == \
+        ("RV208", "iterate.feedback.r")
 
 
 def test_scalar_cannot_feed_window_port():
@@ -490,5 +496,62 @@ def test_conflicting_public_input_kinds_rejected():
         {"blas": "axpy", "name": "a",
          "scalars": {"alpha": {"input": "v"}},
          "inputs": {"x": "v"}}]}
-    with pytest.raises(SpecError, match="conflicting kinds"):
+    with pytest.raises(SpecError, match="conflicting kinds") as ei:
         lowering.lower(bad, upto="infer")
+    assert (ei.value.code, ei.value.path) == ("RV108", "routines[0]")
+
+
+# ---------------------------------------------------------------------------
+# Structured diagnostics: every SpecError carries a typed code + JSON
+# path that matches the repro.verify catalog
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mutate,expect_code,expect_path", [
+    (lambda s: s.update(operands={"A": "tensor"}),
+     "RV211", "operands.A"),
+    (lambda s: s.update(solution={"x": "x"}),
+     "RV211", "solution"),
+    (lambda s: s.update(setup=[{"nonsense": 1}]),
+     "RV211", "setup[0]"),
+    (lambda s: s.update(dtype="float64"),
+     "RV111", "dtype"),
+    (lambda s: s["iterate"].update(feedback={}),
+     "RV211", "iterate.feedback"),
+    (lambda s: s["iterate"].update(solution={"x": "r_next"}),
+     "RV211", "iterate.solution.x"),
+    (lambda s: s["iterate"].update(
+        {"while": {"metric": "bnorm", "init": "rnorm0",
+                   "max_iters": 5}}),
+     "RV209", "iterate.while.metric"),
+])
+def test_spec_errors_carry_code_and_path(mutate, expect_code,
+                                         expect_path):
+    bad = _loop()
+    bad["iterate"] = dict(bad["iterate"])
+    mutate(bad)
+    with pytest.raises(SpecError) as ei:
+        lowering.lower_loop(bad, verify=False)
+    assert ei.value.code == expect_code
+    assert ei.value.path == expect_path
+    # every emitted code must exist in the published catalog
+    from repro.verify import CATALOG
+    assert expect_code in CATALOG
+
+
+def test_dataflow_parse_errors_carry_code_and_path():
+    from repro.verify import CATALOG
+    cases = [
+        ({"routines": []}, "RV100", "routines"),
+        ({"routines": [{"blas": "nope", "name": "n"}]},
+         "RV101", "routines[0].blas"),
+        ({"routines": [{"blas": "scal", "name": "sc",
+                        "connections": {"out": ["d.x", "d.nope"]}},
+                       {"blas": "dot", "name": "d"}]},
+         "RV104", "routines[0].connections.out"),
+    ]
+    for bad, code, path in cases:
+        with pytest.raises(SpecError) as ei:
+            spec_mod.parse(bad)
+        assert (ei.value.code, ei.value.path) == (code, path)
+        assert code in CATALOG

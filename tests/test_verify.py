@@ -1,0 +1,490 @@
+"""repro.verify: one triggering golden per diagnostic code (asserting
+the code and its JSON path), clean passes over every shipped spec, the
+raising/reporting API contract, and the CLI."""
+import json
+
+import pytest
+
+from repro import verify
+from repro.core import lowering, spec as spec_mod
+from repro.core.spec import SpecError
+from repro.solvers import specs
+from repro.verify import VerifyError
+
+
+def _loop(**over):
+    """Minimal valid loop spec (Richardson on A) to mutate. Its
+    `x -> x` feedback edge intentionally trips the RV204 lint."""
+    base = {
+        "name": "mini",
+        "operands": {"A": "matrix", "b": "vector", "x0": "vector"},
+        "setup": [
+            {"program": specs.NRM2, "inputs": {"x": "b"},
+             "outputs": {"norm": "bnorm"}},
+            {"program": specs.RESIDUAL, "inputs": {"x": "x0"},
+             "outputs": {"r": "r0", "rnorm": "rnorm0"}},
+        ],
+        "iterate": {
+            "state": {"x": {"init": "x0"}, "r": {"init": "r0"}},
+            "body": [
+                {"program": specs.RESIDUAL, "inputs": {"x": "x"},
+                 "outputs": {"r": "r_next", "rnorm": "rnorm"}},
+            ],
+            "feedback": {"x": "x", "r": "r_next"},
+            "while": {"metric": "rnorm", "init": "rnorm0",
+                      "scale": "bnorm", "max_iters": 5},
+            "solution": {"x": "x"},
+        },
+    }
+    base.update(over)
+    return base
+
+
+def _body(*stages):
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "body": list(stages) + bad["iterate"]["body"],
+    }
+    return bad
+
+
+def _find(report, code):
+    hits = report.by_code(code)
+    assert hits, (f"expected {code} in "
+                  f"{[d.code for d in report.diagnostics]}")
+    return hits[0]
+
+
+def _assert_fires(raw, code, path, *, severity="error",
+                  mode="dataflow"):
+    report = verify.analyze(raw, mode=mode)
+    d = _find(report, code)
+    assert d.severity == severity
+    assert d.path == path, f"{code}: {d.path!r} != {path!r}"
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Golden broken specs: every diagnostic code fires with its JSON path
+# ---------------------------------------------------------------------------
+
+
+def test_rv100_no_routines():
+    _assert_fires({"routines": []}, "RV100", "routines")
+
+
+def test_rv101_unknown_routine():
+    _assert_fires({"routines": [{"blas": "nope", "name": "n"}]},
+                  "RV101", "routines[0].blas")
+
+
+def test_rv102_duplicate_routine_name():
+    _assert_fires(
+        {"routines": [{"blas": "dot", "name": "d"},
+                      {"blas": "dot", "name": "d"}]},
+        "RV102", "routines[1].name")
+
+
+def test_rv103_unknown_port():
+    _assert_fires(
+        {"routines": [{"blas": "dot", "name": "d",
+                       "connections": {"nope": ["d.x"]}}]},
+        "RV103", "routines[0].connections.nope")
+
+
+def test_rv104_bad_connection_target():
+    _assert_fires(
+        {"routines": [{"blas": "scal", "name": "s",
+                       "connections": {"out": ["zz.x"]}},
+                      {"blas": "dot", "name": "d"}]},
+        "RV104", "routines[0].connections.out")
+
+
+def test_rv105_scalar_output_feeds_window_port():
+    _assert_fires(
+        {"routines": [{"blas": "dot", "name": "d",
+                       "connections": {"out": ["s.x"]}},
+                      {"blas": "scal", "name": "s"}]},
+        "RV105", "routines[0].connections.out")
+
+
+def test_rv106_port_driven_twice():
+    _assert_fires(
+        {"routines": [{"blas": "scal", "name": "sc",
+                       "connections": {"out": ["d.x", "d.x"]}},
+                      {"blas": "dot", "name": "d"}]},
+        "RV106", "routines[0].connections.out")
+
+
+def test_rv107_dataflow_cycle():
+    _assert_fires(
+        {"routines": [{"blas": "copy", "name": "c1",
+                       "connections": {"out": ["c2.x"]}},
+                      {"blas": "copy", "name": "c2",
+                       "connections": {"out": ["c1.x"]}}]},
+        "RV107", "routines")
+
+
+def test_rv108_conflicting_input_kinds():
+    _assert_fires(
+        {"routines": [{"blas": "axpy", "name": "a",
+                       "scalars": {"alpha": {"input": "v"}},
+                       "inputs": {"x": "v"}}]},
+        "RV108", "routines[0]")
+
+
+def test_rv109_duplicate_output_name():
+    _assert_fires(
+        {"routines": [{"blas": "scal", "name": "s1",
+                       "outputs": {"out": "y"}},
+                      {"blas": "scal", "name": "s2",
+                       "outputs": {"out": "y"}}]},
+        "RV109", "routines[1].outputs.out")
+
+
+def test_rv110_reduced_precision_reduction():
+    _assert_fires(
+        {"dtype": "bfloat16",
+         "routines": [{"blas": "dot", "name": "d"}]},
+        "RV110", "routines[0]", severity="warning")
+
+
+def test_rv111_unsupported_dtype():
+    _assert_fires(
+        {"dtype": "float64",
+         "routines": [{"blas": "dot", "name": "d"}]},
+        "RV111", "dtype")
+
+
+def test_rv112_bad_vector_width():
+    _assert_fires(
+        {"vector_width": 100,
+         "routines": [{"blas": "dot", "name": "d"}]},
+        "RV112", "vector_width")
+
+
+def test_rv112_per_routine_override_checked_too():
+    # regression: per-routine overrides used to skip the lane check
+    _assert_fires(
+        {"routines": [{"blas": "dot", "name": "d",
+                       "vector_width": 100}]},
+        "RV112", "routines[0].vector_width")
+
+
+def test_rv201_undefined_name():
+    bad = _body({"let": {"z": "nosuch * 2"}})
+    _assert_fires(bad, "RV201", "iterate.body[0].z")
+
+
+def test_rv202_rebind():
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "body": bad["iterate"]["body"] + [
+            {"program": specs.RESIDUAL, "inputs": {"x": "x"},
+             "outputs": {"r": "r_next", "rnorm": "rn2"}},
+        ],
+    }
+    _assert_fires(bad, "RV202", "iterate.body[1]")
+
+
+def test_rv203_dead_binding():
+    bad = _body({"let": {"unused": "rnorm0 * 2"}})
+    _assert_fires(bad, "RV203", "iterate.body[0].unused",
+                  severity="warning")
+
+
+def test_rv203_underscore_opts_out():
+    bad = _body({"let": {"_scratch": "rnorm0 * 2"}})
+    assert not verify.analyze(bad).by_code("RV203")
+
+
+def test_rv204_feedback_never_updated():
+    # the base fixture's x -> x edge is exactly this lint
+    _assert_fires(_loop(), "RV204", "iterate.feedback.x",
+                  severity="warning")
+
+
+def test_rv205_constant_cond_predicate():
+    bad = _body({"cond": {"if": "1 <= 2",
+                          "then": [{"let": {"z": "1"}}],
+                          "else": [{"let": {"z": "2"}}]}})
+    _assert_fires(bad, "RV205", "iterate.body[0].cond.if",
+                  severity="warning")
+
+
+def _stacked(*stages, slots=3):
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "state": {**bad["iterate"]["state"],
+                  "S": {"kind": "stack", "slots": slots,
+                        "of": "scalar"}},
+        "body": [{"let": {"one": "1"}}] + list(stages)
+        + bad["iterate"]["body"],
+    }
+    return bad
+
+
+def test_rv206_provably_out_of_range_store():
+    bad = _stacked({"store": {"into": "S", "slot": "5",
+                              "value": "one"}})
+    _assert_fires(bad, "RV206", "iterate.body[1].store.slot")
+
+
+def test_rv206_counter_range_overflow_warns():
+    # j runs 0..4 against a 3-slot stack: only the upper end violates
+    bad = _stacked({"iterate": {
+        "counter": "j",
+        "state": {"h": {"init": "rnorm0"}},
+        "body": [{"read": {"name": "sj", "from": "S", "slot": "j"}},
+                 {"let": {"h2": "h * sj"}}],
+        "feedback": {"h": "h2"},
+        "while": {"count": 5},
+    }})
+    d = _find(verify.analyze(bad), "RV206")
+    assert d.severity == "warning"
+    assert d.path == "iterate.body[1].iterate.body[0].read.slot"
+
+
+def test_rv207_reserved_threshold():
+    bad = _loop()
+    bad["operands"] = {**bad["operands"], "threshold": "scalar"}
+    _assert_fires(bad, "RV207", "iterate.state")
+
+
+def test_rv208_store_kind_mismatch():
+    bad = _stacked({"store": {"into": "S", "slot": "0", "value": "r"}})
+    _assert_fires(bad, "RV208", "iterate.body[1].store.value")
+
+
+def test_rv209_metric_not_produced():
+    bad = _loop()
+    bad["iterate"] = {**bad["iterate"],
+                      "while": {"metric": "bnorm", "init": "rnorm0",
+                                "max_iters": 5}}
+    _assert_fires(bad, "RV209", "iterate.while.metric")
+
+
+def test_rv210_store_inside_cond():
+    bad = _stacked({"cond": {
+        "if": "rnorm0 <= 1",
+        "then": [{"store": {"into": "S", "slot": "0", "value": "one"}},
+                 {"let": {"z": "1"}}],
+        "else": [{"let": {"z": "2"}}]}})
+    _assert_fires(bad, "RV210",
+                  "iterate.body[1].cond.then[0].store")
+
+
+def test_rv211_unknown_program_input_binding():
+    bad = _loop()
+    bad["iterate"] = {
+        **bad["iterate"],
+        "body": [{"program": specs.RESIDUAL,
+                  "inputs": {"nope": "x"},
+                  "outputs": {"r": "r_next", "rnorm": "rnorm"}}],
+    }
+    _assert_fires(bad, "RV211", "iterate.body[0]")
+
+
+def test_rv301_division_by_constant_zero():
+    bad = _body({"let": {"z": "rnorm0 / (2 - 2)"}})
+    _assert_fires(bad, "RV301", "iterate.body[0].z")
+
+
+def test_rv302_sqrt_of_negative_constant():
+    bad = _body({"let": {"z": "sqrt(0 - 1)"}})
+    _assert_fires(bad, "RV302", "iterate.body[0].z")
+
+
+def test_rv302_unprovable_sqrt_warns():
+    bad = _body({"let": {"z": "sqrt(rnorm0 - 1)"}})
+    d = _find(verify.analyze(bad), "RV302")
+    assert d.severity == "warning"
+    assert d.path == "iterate.body[0].z"
+
+
+def test_rv302_square_sum_is_provably_safe():
+    ok = _body({"let": {"z": "sqrt(rnorm0 * rnorm0 + 1)"}})
+    assert not verify.analyze(ok).by_code("RV302")
+
+
+def test_rv303_runtime_denominator_is_info():
+    bad = _body({"let": {"z": "rnorm0 / bnorm"}})
+    _assert_fires(bad, "RV303", "iterate.body[0].z", severity="info")
+
+
+def test_rv401_vmem_budget_exceeded():
+    # 4096^2 f32 matrix windows on every gemm port: ~256 MiB >> 16 MiB
+    _assert_fires(
+        {"window_size": 4096,
+         "routines": [{"blas": "gemm", "name": "g"}]},
+        "RV401", "routines[0]")
+
+
+def test_rv402_window_not_vector_width_aligned():
+    _assert_fires(
+        {"window_size": 200,
+         "routines": [{"blas": "dot", "name": "d"}]},
+        "RV402", "routines[0].window_size", severity="warning")
+
+
+def test_rv403_duplicate_slot_store():
+    bad = _stacked(
+        {"store": {"into": "S", "slot": "0", "value": "one"}},
+        {"store": {"into": "S", "slot": "0", "value": "one"}})
+    _assert_fires(bad, "RV403", "iterate.body[2].store",
+                  severity="warning")
+
+
+def test_catalog_covers_every_emitted_code():
+    assert set(verify.CATALOG) >= {
+        "RV100", "RV101", "RV102", "RV103", "RV104", "RV105", "RV106",
+        "RV107", "RV108", "RV109", "RV110", "RV111", "RV112", "RV201",
+        "RV202", "RV203", "RV204", "RV205", "RV206", "RV207", "RV208",
+        "RV209", "RV210", "RV211", "RV301", "RV302", "RV303", "RV401",
+        "RV402", "RV403"}
+
+
+# ---------------------------------------------------------------------------
+# Clean pass: every shipped spec verifies with zero errors/warnings
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,raw", [
+    ("CG_LOOP", specs.CG_LOOP),
+    ("JACOBI_LOOP", specs.JACOBI_LOOP),
+    ("BICGSTAB_LOOP", specs.BICGSTAB_LOOP),
+    ("GMRES_LOOP", specs.GMRES_LOOP),
+])
+def test_shipped_loop_specs_verify_clean(name, raw):
+    report = verify.analyze(raw)
+    assert report.errors == (), report.format()
+    assert report.warnings == (), report.format()
+
+
+def test_all_routine_specs_verify_clean():
+    from repro.blas import functional
+    from repro.core import routines as R
+    for name in R.names():
+        report = verify.analyze(functional.routine_spec(name))
+        assert report.ok and not report.warnings, report.format()
+
+
+# ---------------------------------------------------------------------------
+# API contract: raising gate, multi-error reports, opt-out
+# ---------------------------------------------------------------------------
+
+
+def test_verify_error_carries_all_diagnostics():
+    bad = _body({"let": {"z": "nosuch * 2"}},
+                {"let": {"w": "alsomissing + 1"}})
+    with pytest.raises(VerifyError) as ei:
+        lowering.lower_loop(bad)
+    report = ei.value.report
+    assert len(report.by_code("RV201")) == 2
+    # the exception reproduces the raise-site messages verbatim
+    assert "not defined" in str(ei.value)
+    assert ei.value.code == "RV201"
+
+
+def test_verify_error_is_a_spec_error():
+    with pytest.raises(SpecError):
+        lowering.lower({"routines": []})
+
+
+def test_malformed_spec_fails_with_zero_jax_frames():
+    bad = _body({"let": {"z": "nosuch * 2"}})
+    with pytest.raises(VerifyError) as ei:
+        lowering.lower_loop(bad)
+    frames = ei.traceback
+    assert not any("/jax/" in str(f.path) or "/jax_" in str(f.path)
+                   for f in frames), [str(f.path) for f in frames]
+
+
+def test_verify_false_preserves_raise_at_first_site():
+    bad = _body({"let": {"z": "nosuch * 2"}})
+    with pytest.raises(SpecError) as ei:
+        lowering.lower_loop(bad, verify=False)
+    assert not isinstance(ei.value, VerifyError)
+    assert "nosuch" in str(ei.value)
+
+
+def test_verify_false_dataflow_matches_legacy():
+    bad = {"routines": [{"blas": "axpy", "name": "a",
+                         "scalars": {"alpha": {"input": "v"}},
+                         "inputs": {"x": "v"}}]}
+    with pytest.raises(SpecError, match="conflicting kinds") as ei:
+        lowering.lower(bad, upto="infer", verify=False)
+    assert not isinstance(ei.value, VerifyError)
+
+
+def test_structured_fields_on_spec_error():
+    with pytest.raises(SpecError) as ei:
+        spec_mod.parse({"routines": [{"blas": "nope", "name": "n"}]})
+    assert ei.value.code == "RV101"
+    assert ei.value.path == "routines[0].blas"
+    assert "available" in (ei.value.hint or "")
+
+
+def test_executable_verify_reports():
+    import repro.blas as blas
+    exe = blas.compile({"routines": [{"blas": "dot", "name": "d"}]})
+    report = exe.verify()
+    assert report.ok and report.kind == "dataflow"
+
+
+def test_compile_gate_rejects_broken_spec():
+    import repro.blas as blas
+    with pytest.raises(VerifyError):
+        blas.compile({"routines": [{"blas": "dot", "name": "d",
+                                    "connections": {"out": ["d.x"]}}]})
+
+
+def test_report_json_round_trip():
+    report = verify.analyze(_loop())
+    doc = json.loads(report.to_json())
+    assert doc["program"] == "mini"
+    assert doc["kind"] == "loop"
+    codes = {d["code"] for d in doc["diagnostics"]}
+    assert "RV204" in codes
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_all_shipped_clean(capsys):
+    from repro.verify.__main__ import main
+    assert main(["--all-shipped", "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] and len(doc["specs"]) >= 21
+
+
+def test_cli_broken_fixture_fails(tmp_path, capsys):
+    from repro.verify.__main__ import main
+    p = tmp_path / "broken.json"
+    p.write_text(json.dumps(
+        {"routines": [{"blas": "nope", "name": "n"}]}))
+    assert main([str(p), "--json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert not doc["ok"]
+    assert doc["specs"][0]["diagnostics"][0]["code"] == "RV101"
+    assert doc["specs"][0]["diagnostics"][0]["path"] == \
+        "routines[0].blas"
+
+
+def test_cli_repo_broken_fixture(capsys):
+    # the same fixture the CI verify-smoke job runs against
+    import pathlib
+
+    from repro.verify.__main__ import main
+    fixture = str(pathlib.Path(__file__).parent / "fixtures"
+                  / "broken_spec.json")
+    assert main([fixture, "--json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    codes = {d["code"] for s in doc["specs"]
+             for d in s["diagnostics"]}
+    assert {"RV201", "RV301", "RV203", "RV204"} <= codes
