@@ -43,14 +43,16 @@ from .builder import (BuilderError, InputRef, Port,  # noqa: F401
 from .executable import (CostReport, Executable, compile,  # noqa: F401
                          load)
 from .solvers import (bicgstab, cg, gmres, jacobi,  # noqa: F401
-                      power_iteration)
+                      power_iteration, solve)
+from repro.guard.escalate import (EscalationPolicy,  # noqa: F401
+                                  RecoveryError)
 
 __all__ = [
-    "BuilderError", "CostReport", "Executable", "InputRef", "Port",
-    "ProgramBuilder", "StateRef", "api_table", "bicgstab", "cg",
-    "compile", "cond", "gmres", "inner_loop", "jacobi", "let", "load",
-    "power_iteration", "program", "read", "routines", "stage",
-    "store",
+    "BuilderError", "CostReport", "EscalationPolicy", "Executable",
+    "InputRef", "Port", "ProgramBuilder", "RecoveryError", "StateRef",
+    "api_table", "bicgstab", "cg", "compile", "cond", "gmres",
+    "inner_loop", "jacobi", "let", "load", "power_iteration",
+    "program", "read", "routines", "solve", "stage", "store",
 ]
 
 api_table = _functional.api_table

@@ -506,11 +506,14 @@ class ProgramBuilder:
 
     def iterate(self, *, state: Optional[Mapping] = None, body,
                 feedback: Optional[Mapping] = None,
-                stop: Mapping, solution: Optional[Mapping] = None
+                stop: Mapping, solution: Optional[Mapping] = None,
+                guards: Optional[Mapping] = None
                 ) -> "ProgramBuilder":
         """Declare the loop: state fields with init expressions, the
-        staged body, feedback edges, the `while` stop rule, and the
-        solution mapping. `state`/`feedback` default to what
+        staged body, feedback edges, the `while` stop rule, the
+        solution mapping, and optional in-loop `guards` (nonfinite /
+        breakdown / divergence / stagnation predicates — see
+        docs/robustness.md). `state`/`feedback` default to what
         `b.state(...)` / `b.feedback(...)` accumulated. See
         docs/spec.md for the JSON semantics."""
         self._want_loop("an iterate section")
@@ -546,6 +549,8 @@ class ProgramBuilder:
             "feedback": feedback_map,
             "while": dict(stop),
         }
+        if guards is not None:
+            it["guards"] = copy.deepcopy(dict(guards))
         if solution is not None:
             it["solution"] = {k: _name_of(v)
                               for k, v in dict(solution).items()}

@@ -893,7 +893,8 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
             anchor: Optional[bool] = None,
             interpret: Optional[bool] = None,
             max_iters: Optional[int] = None,
-            tiles="auto", verify: bool = True) -> Executable:
+            tiles="auto", verify: bool = True,
+            fault=None) -> Executable:
     """The one front door: lower anything spec-shaped to an Executable.
 
     Dataflow specs go through the digest-keyed program cache
@@ -914,7 +915,12 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
     (`repro.verify`): any error-severity finding raises one
     `VerifyError` listing every problem, before JAX sees the program.
     `verify=False` restores the raise-at-first-problem lowering
-    behavior."""
+    behavior.
+
+    `fault` (a `repro.guard.chaos.FaultPlan`) arms deterministic fault
+    injection: matching program outputs are corrupted at lowering
+    time. Faulted compiles bypass the clean lowering cache and are
+    never persisted to the tuning store."""
     raw = _to_raw(spec_or_builder)
     # the handle keeps its own copy: later caller-side mutation of the
     # spec dict must not make save()/spec/builder() disagree with the
@@ -927,7 +933,7 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
                 "stages fuse according to the mode")
         impl = LoopProgram(raw, mode=mode, max_iters=max_iters,
                            interpret=interpret, tiles=tiles,
-                           verify=verify)
+                           verify=verify, fault=fault)
         return Executable(impl=impl, raw=raw, kind="loop", mode=mode,
                           interpret=interpret, tiles=tiles)
     if max_iters is not None:
@@ -936,8 +942,9 @@ def compile(spec_or_builder, *, mode: str = "dataflow",
             "iterate section")
     ir = lowering.compile_cached(raw, mode=mode, fuse=fuse,
                                  anchor=anchor, interpret=interpret,
-                                 tiles=tiles, verify=verify)
-    if tiles == "auto":
+                                 tiles=tiles, verify=verify,
+                                 fault=fault)
+    if tiles == "auto" and fault is None:
         # persist the compiled artifact once: the tuned flag (and a
         # tuned plan) belongs to the autotuner, so an existing record
         # is never overwritten by a plain compile

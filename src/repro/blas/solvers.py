@@ -113,6 +113,24 @@ def gmres(A, b, x0=None, *, tol: float = 1e-6, restart: int = 20,
     return exe.run(A=A, b=b, x0=x0, tol=tol)
 
 
+def solve(A, b, x0=None, *, tol: float = 1e-6, max_iters: int = 500,
+          policy=None, mode: str = "dataflow",
+          interpret: Optional[bool] = None,
+          fault=None) -> SolverResult:
+    """Robust solve with graceful degradation: runs the guarded
+    iterative solvers under an `EscalationPolicy` (default
+    CG -> BiCGStab -> GMRES -> float64 dense direct), reacting to
+    `repro.guard.status` failure codes with retries and fallbacks.
+    The attempt log rides back on `result.attempts`; a full-ladder
+    failure raises `guard.RecoveryError`. A `guard.chaos.FaultPlan`
+    passed as `fault` corrupts the FIRST attempt only — the recovery
+    path always runs clean. See docs/robustness.md."""
+    from repro.guard import escalate
+    return escalate.solve_with_policy(
+        A, b, x0, tol=tol, policy=policy, max_iters=max_iters,
+        mode=mode, interpret=interpret, fault=fault)
+
+
 def power_iteration(A, v0=None, *, tol: float = 1e-6,
                     max_iters: int = 1000, mode: str = "dataflow",
                     interpret: Optional[bool] = None) -> SolverResult:

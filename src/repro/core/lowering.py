@@ -225,7 +225,7 @@ def resolve_tiles(raw, *, mode: str = "dataflow",
 def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
           anchor: Optional[bool] = None, upto: Optional[str] = None,
           interpret: Optional[bool] = None, tiles="auto",
-          verify: bool = True) -> ProgramIR:
+          verify: bool = True, fault=None) -> ProgramIR:
     """Run the pass pipeline over a raw spec. `upto` stops after the
     named pass (inclusive) for partial lowering in tests/tools.
     `anchor` gates level-2 anchored fusion groups (default: follows
@@ -237,7 +237,12 @@ def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
     default) runs the `repro.verify` static analyzer first so a
     malformed spec fails with a structured `VerifyError` before any
     JAX tracing; `verify=False` preserves the pre-analyzer behavior
-    byte-for-byte."""
+    byte-for-byte.
+
+    `fault` (a `repro.guard.chaos.FaultPlan`) wraps the emitted
+    callable so the plan's target outputs come back deterministically
+    corrupted — the chaos-testing hook. A plan that does not match
+    this program's name is inert."""
     if mode not in ("dataflow", "nodataflow", "reference"):
         raise ValueError(f"unknown mode {mode!r}")
     raw = _canonical_raw(raw)
@@ -274,6 +279,13 @@ def lower(raw, *, mode: str = "dataflow", fuse: Optional[bool] = None,
                   program=ir.spec.name if ir.spec else None,
                   digest=ir.digest[:12], mode=mode, fuse=fuse,
                   anchor=anchor, passes=list(ir.passes_run))
+    if fault is not None and ir.fn is not None and ir.spec is not None \
+            and fault.matches(ir.spec.name):
+        from repro.guard import chaos as _chaos
+        ir.fn = _chaos.wrap_program_fn(ir.fn, fault)
+        obs.event("guard.fault.armed", program=ir.spec.name,
+                  kind=fault.kind, output=fault.output,
+                  iteration=fault.iteration)
     return ir
 
 
@@ -289,7 +301,8 @@ def compile_cached(raw, *, mode: str = "dataflow",
                    fuse: Optional[bool] = None,
                    anchor: Optional[bool] = None,
                    interpret: Optional[bool] = None,
-                   tiles="auto", verify: bool = True) -> ProgramIR:
+                   tiles="auto", verify: bool = True,
+                   fault=None) -> ProgramIR:
     """Fully lower a spec, memoized by (digest, mode, fuse, anchor,
     interpret, resolved tile-plan key).
 
@@ -316,6 +329,12 @@ def compile_cached(raw, *, mode: str = "dataflow",
     digest = spec_digest(raw)
     plan = resolve_tiles(raw, mode=mode, fuse=fuse, anchor=anchor,
                          tiles=tiles, digest=digest)
+    if fault is not None and fault.matches(raw.get("name")):
+        # faulted compiles never enter (or serve from) the clean
+        # cache: compile fresh with the corruption wrapper installed
+        return lower(raw, mode=mode, fuse=fuse, anchor=anchor,
+                     interpret=interpret, tiles=plan, verify=False,
+                     fault=fault)
     key = (digest, mode, fuse, anchor, interpret, plan.key())
     hit = _CACHE.get(key)
     if hit is not None:
@@ -521,7 +540,7 @@ _NO_STACKS: frozenset = frozenset()
 
 def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
                   tiles="auto", stacks=_NO_STACKS, in_cond=False,
-                  sink=None):
+                  sink=None, fault=None):
     """Lower a stage list against an env of name -> kind, enforcing
     single-assignment, no forward references, and port-kind typing.
     `stacks` names the innermost enclosing loop's stack state fields —
@@ -647,7 +666,8 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
                 bcomp, bprod = _lower_stages(
                     sub, bkinds, f"{where}.cond.{label}",
                     mode=mode, interpret=interpret, tiles=tiles,
-                    stacks=_NO_STACKS, in_cond=True, sink=sink)
+                    stacks=_NO_STACKS, in_cond=True, sink=sink,
+                    fault=fault)
                 branch_out.append((bcomp, bprod, bkinds))
             (then_c, then_p, then_k), (else_c, else_p, else_k) = \
                 branch_out
@@ -686,14 +706,14 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
             compiled.append(_lower_inner_loop(
                 st, kinds, produced, where, mode=mode,
                 interpret=interpret, tiles=tiles, in_cond=in_cond,
-                sink=sink))
+                sink=sink, fault=fault))
             continue
 
         assert isinstance(st, ProgramStage)
         if sink is None:
             ir = compile_cached(st.raw_program, mode=mode,
                                 interpret=interpret, tiles=tiles,
-                                verify=False)
+                                verify=False, fault=fault)
         else:
             # analysis probe: parse -> graph -> infer only, so the
             # verifier never touches codegen (or JAX); inner-spec
@@ -801,7 +821,8 @@ def _lower_stages(stages, kinds, where_prefix, *, mode, interpret,
 
 def _lower_inner_loop(st: InnerLoopStage, kinds, produced, where, *,
                       mode, interpret, tiles="auto",
-                      in_cond=False, sink=None) -> CompiledStage:
+                      in_cond=False, sink=None,
+                      fault=None) -> CompiledStage:
     """Lower a nested iterate: inner state inits read the enclosing
     environment, the inner body is lowered against enclosing env +
     inner state (+ counter), and yields bind final inner state into
@@ -841,7 +862,7 @@ def _lower_inner_loop(st: InnerLoopStage, kinds, produced, where, *,
     body, inner_produced = _lower_stages(
         st.body, inner_kinds, f"{where}.iterate.body",
         mode=mode, interpret=interpret, tiles=tiles,
-        stacks=inner_stacks, sink=sink)
+        stacks=inner_stacks, sink=sink, fault=fault)
 
     for fname, src in st.feedback.items():
         fwhere = f"{where}.iterate.feedback.{fname}"
@@ -905,7 +926,7 @@ def _lower_inner_loop(st: InnerLoopStage, kinds, produced, where, *,
 def lower_loop(raw, *, mode: str = "dataflow",
                interpret: Optional[bool] = None,
                tiles="auto", sink=None,
-               verify: bool = True) -> LoopIR:
+               verify: bool = True, fault=None) -> LoopIR:
     """Lower a loop spec: compile every stage program through the
     cache and type-check the loop environment end to end. `tiles`
     is forwarded to every stage program's `compile_cached` call.
@@ -914,7 +935,12 @@ def lower_loop(raw, *, mode: str = "dataflow",
     the raw spec first, so malformed programs fail with a structured
     `VerifyError` before any JAX tracing. `sink` is the analyzer's
     way in: with a sink set, violations are recorded instead of
-    raised and verification is skipped (the sink IS the verifier)."""
+    raised and verification is skipped (the sink IS the verifier).
+
+    `fault` (a `repro.guard.chaos.FaultPlan`) is forwarded to every
+    stage program compile: matching programs come back with their
+    outputs deterministically corrupted (chaos testing); faulted
+    compiles bypass the clean program cache."""
     if verify and sink is None and not isinstance(raw, LoopSpec):
         from repro import verify as verify_mod
         verify_mod.check(raw, mode=mode)
@@ -923,7 +949,7 @@ def lower_loop(raw, *, mode: str = "dataflow",
     kinds = dict(lspec.operands)
     setup, _ = _lower_stages(lspec.setup, kinds, "setup",
                              mode=mode, interpret=interpret,
-                             tiles=tiles, sink=sink)
+                             tiles=tiles, sink=sink, fault=fault)
     setup_kinds = dict(kinds)
 
     # state fields: bare-name inits inherit the referenced kind;
@@ -952,7 +978,7 @@ def lower_loop(raw, *, mode: str = "dataflow",
     body, produced = _lower_stages(lspec.body, body_env, "iterate.body",
                                    mode=mode, interpret=interpret,
                                    tiles=tiles, stacks=stacks,
-                                   sink=sink)
+                                   sink=sink, fault=fault)
 
     for fname, src in lspec.feedback.items():
         where = f"iterate.feedback.{fname}"
@@ -1002,6 +1028,44 @@ def lower_loop(raw, *, mode: str = "dataflow",
                 f"{setup_kinds[stop.scale]}, not a scalar",
                 code="RV209", path="iterate.while.scale")
 
+    if lspec.guards is not None:
+        _check_guards(lspec.guards, body_env, produced, sink)
+
     return LoopIR(lspec=lspec, mode=mode, interpret=interpret,
                   setup=setup, body=body, setup_kinds=setup_kinds,
                   state_kinds=state_kinds, body_kinds=body_env)
+
+
+def _check_guards(guards, body_env, produced, sink) -> None:
+    """Resolve `iterate.guards` names against the lowered body
+    environment: nonfinite targets must be body-iteration values of
+    any array kind; breakdown sentinels must be body-produced
+    scalars. Structural/parameter validation already happened in
+    `spec._parse_guards` (RV500/RV503)."""
+    for i, name in enumerate(guards.nonfinite):
+        where = f"iterate.guards.nonfinite[{i}]"
+        if name not in body_env:
+            spec_error(
+                sink,
+                f"{where}: {name!r} is not in the loop-body "
+                f"environment (guards watch operands, state, or "
+                f"body-produced values)",
+                code="RV501", path=where,
+                hint="guard a name the body environment defines")
+    for i, b in enumerate(guards.breakdown):
+        where = f"iterate.guards.breakdown[{i}].value"
+        if b.value not in produced:
+            spec_error(
+                sink,
+                f"{where}: {b.value!r} is not produced by the loop "
+                f"body (breakdown sentinels watch per-iteration "
+                f"scalars like p'Ap or rho)",
+                code="RV501", path=where,
+                hint="watch a scalar the body computes each iteration")
+        elif body_env[b.value] not in ("scalar", _UNKNOWN):
+            spec_error(
+                sink,
+                f"{where}: {b.value!r} is a {body_env[b.value]}, "
+                f"not a scalar",
+                code="RV502", path=where,
+                hint="breakdown guards compare |scalar| < below")

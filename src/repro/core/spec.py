@@ -455,7 +455,26 @@ def unparse_loop(lspec: "LoopSpec") -> dict:
         "while": _unparse_stop(lspec.stop),
         "solution": dict(lspec.solution),
     }
+    if lspec.guards is not None:
+        raw["iterate"]["guards"] = _unparse_guards(lspec.guards)
     return raw
+
+
+def _unparse_guards(g: "GuardSpec") -> dict:
+    out: dict = {}
+    if g.nonfinite:
+        out["nonfinite"] = list(g.nonfinite)
+    if g.breakdown:
+        out["breakdown"] = [{"value": b.value, "below": b.below}
+                            for b in g.breakdown]
+    if g.divergence is not None:
+        out["divergence"] = {"factor": g.divergence}
+    if g.stagnation is not None:
+        stag: dict = {"window": g.stagnation}
+        if g.min_drop:
+            stag["min_drop"] = g.min_drop
+        out["stagnation"] = stag
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -595,6 +614,38 @@ class StopRule:
 
 
 @dataclasses.dataclass(frozen=True)
+class BreakdownGuard:
+    """One Krylov-breakdown sentinel: trip when `|value| < below`
+    (`value` is a body-produced scalar — CG's p'Ap, BiCGStab's rho)."""
+    value: str
+    below: float
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardSpec:
+    """`iterate.guards` section: cheap in-loop failure predicates the
+    driver folds into the `lax.while_loop` so a poisoned solve exits
+    in O(1) iterations with a diagnosis instead of running all
+    `max_iters`. Any guards section (even an empty one) also makes the
+    driver check the stop metric with `isfinite` every iteration.
+
+    * `nonfinite`  — body-env names checked with `isfinite` (vectors
+      are reduced with `all`); a hit reports NONFINITE.
+    * `breakdown`  — `|scalar| < below` sentinels; report BREAKDOWN.
+    * `divergence` — metric > factor * max(init_metric, tiny); reports
+      DIVERGED.
+    * `stagnation` — `window` consecutive iterations without the
+      metric improving on its best by a relative `min_drop`; reports
+      STAGNATED.
+    """
+    nonfinite: Tuple[str, ...] = ()
+    breakdown: Tuple[BreakdownGuard, ...] = ()
+    divergence: Optional[float] = None   # factor over init_metric
+    stagnation: Optional[int] = None     # window (iterations)
+    min_drop: float = 0.0                # relative improvement to reset
+
+
+@dataclasses.dataclass(frozen=True)
 class LoopSpec:
     """A parsed loop program: the spec-level analogue of an iterative
     solver, executable by `repro.solvers.LoopProgram`."""
@@ -607,6 +658,7 @@ class LoopSpec:
     feedback: Mapping[str, str]       # state field -> env value name
     stop: StopRule
     solution: Mapping[str, str]       # public output -> state field
+    guards: Optional[GuardSpec] = None
 
     def state_field(self, name: str) -> StateField:
         for f in self.state:
@@ -990,6 +1042,106 @@ def _parse_inner_iterate(it, where, *, dtype_name) -> InnerLoopStage:
                           feedback=feedback, stop=stop, yields=yields)
 
 
+def _parse_guards(raw_guards, where) -> GuardSpec:
+    """Parse and structurally validate an `iterate.guards` section.
+    Name resolution (does `pq` exist, is it a scalar) happens in
+    `lowering.lower_loop` where body-env kinds are known."""
+    if not isinstance(raw_guards, Mapping):
+        raise SpecError(
+            f"{where}: guards must be a mapping, got "
+            f"{type(raw_guards).__name__}",
+            code="RV500", path=where,
+            hint="guards: {nonfinite: [...], breakdown: [...], "
+                 "divergence: {...}, stagnation: {...}}")
+    unknown = set(raw_guards) - {"nonfinite", "breakdown", "divergence",
+                                 "stagnation"}
+    if unknown:
+        raise SpecError(
+            f"{where}: unknown guard kinds {sorted(unknown)}",
+            code="RV500", path=where,
+            hint="known guard kinds: nonfinite, breakdown, "
+                 "divergence, stagnation")
+
+    raw_nf = raw_guards.get("nonfinite", [])
+    if not isinstance(raw_nf, (list, tuple)):
+        raise SpecError(
+            f"{where}.nonfinite must be a list of env value names",
+            code="RV500", path=f"{where}.nonfinite")
+    nonfinite = tuple(_parse_ident(n, f"{where}.nonfinite[{i}]")
+                      for i, n in enumerate(raw_nf))
+
+    raw_bd = raw_guards.get("breakdown", [])
+    if not isinstance(raw_bd, (list, tuple)):
+        raise SpecError(
+            f"{where}.breakdown must be a list of "
+            f"{{value, below}} sentinels",
+            code="RV500", path=f"{where}.breakdown")
+    breakdown = []
+    for i, b in enumerate(raw_bd):
+        bwhere = f"{where}.breakdown[{i}]"
+        if not isinstance(b, Mapping) or set(b) - {"value", "below"}:
+            raise SpecError(
+                f"{bwhere}: expected {{value, below}}, got {b!r}",
+                code="RV500", path=bwhere)
+        value = _parse_ident(b.get("value"), f"{bwhere}.value")
+        below = b.get("below", 1e-30)
+        if not isinstance(below, (int, float)) or \
+                isinstance(below, bool) or not below > 0:
+            raise SpecError(
+                f"{bwhere}.below must be a positive number, got "
+                f"{below!r}",
+                code="RV503", path=f"{bwhere}.below")
+        breakdown.append(BreakdownGuard(value=value, below=float(below)))
+
+    divergence = None
+    raw_dv = raw_guards.get("divergence")
+    if raw_dv is not None:
+        dwhere = f"{where}.divergence"
+        if not isinstance(raw_dv, Mapping) or set(raw_dv) - {"factor"}:
+            raise SpecError(
+                f"{dwhere}: expected {{factor}}, got {raw_dv!r}",
+                code="RV500", path=dwhere)
+        factor = raw_dv.get("factor", 1e5)
+        if not isinstance(factor, (int, float)) or \
+                isinstance(factor, bool) or not factor > 1:
+            raise SpecError(
+                f"{dwhere}.factor must be a number > 1, got {factor!r}",
+                code="RV503", path=f"{dwhere}.factor",
+                hint="divergence trips when the metric exceeds "
+                     "factor * its initial value")
+        divergence = float(factor)
+
+    stagnation, min_drop = None, 0.0
+    raw_sg = raw_guards.get("stagnation")
+    if raw_sg is not None:
+        swhere = f"{where}.stagnation"
+        if not isinstance(raw_sg, Mapping) or \
+                set(raw_sg) - {"window", "min_drop"}:
+            raise SpecError(
+                f"{swhere}: expected {{window, min_drop?}}, got "
+                f"{raw_sg!r}",
+                code="RV500", path=swhere)
+        window = raw_sg.get("window")
+        if not isinstance(window, int) or isinstance(window, bool) \
+                or window < 1:
+            raise SpecError(
+                f"{swhere}.window must be a positive int, got "
+                f"{window!r}",
+                code="RV503", path=f"{swhere}.window")
+        min_drop = raw_sg.get("min_drop", 0.0)
+        if not isinstance(min_drop, (int, float)) or \
+                isinstance(min_drop, bool) or not 0 <= min_drop < 1:
+            raise SpecError(
+                f"{swhere}.min_drop must be a number in [0, 1), got "
+                f"{min_drop!r}",
+                code="RV503", path=f"{swhere}.min_drop")
+        stagnation, min_drop = window, float(min_drop)
+
+    return GuardSpec(nonfinite=nonfinite, breakdown=tuple(breakdown),
+                     divergence=divergence, stagnation=stagnation,
+                     min_drop=min_drop)
+
+
 def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
     """Parse and structurally validate a loop-program spec.
 
@@ -1046,7 +1198,8 @@ def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
     it = raw["iterate"]
     if not isinstance(it, Mapping):
         raise SpecError("'iterate' must be a mapping")
-    unknown = set(it) - {"state", "body", "feedback", "while", "solution"}
+    unknown = set(it) - {"state", "body", "feedback", "while",
+                         "solution", "guards"}
     if unknown:
         raise SpecError(f"iterate: unknown keys {sorted(unknown)}")
 
@@ -1094,6 +1247,10 @@ def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
     if stop.max_iters <= 0:
         raise SpecError("iterate.while.max_iters must be positive")
 
+    guards = None
+    if "guards" in it:
+        guards = _parse_guards(it["guards"], "iterate.guards")
+
     solution = dict(it.get("solution", {"x": "x"}))
     if not solution:
         raise SpecError("iterate.solution must not be empty",
@@ -1110,4 +1267,4 @@ def parse_loop(raw: Union[str, Mapping, pathlib.Path]) -> LoopSpec:
     return LoopSpec(
         name=name, dtype=_DTYPES[dtype_name], operands=operands,
         setup=setup, state=state, body=body, feedback=feedback,
-        stop=stop, solution=solution)
+        stop=stop, solution=solution, guards=guards)

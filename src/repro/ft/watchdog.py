@@ -61,6 +61,11 @@ class HeartbeatMonitor:
         self._dead: Dict[str, bool] = {h: False for h in self.hosts}
 
     def beat(self, host: str):
+        if host not in self._dead:
+            # elastic join: an unknown host starts beating mid-run;
+            # register it instead of KeyError-ing in status()/poll()
+            self.hosts.append(host)
+            self._dead[host] = False
         self._last[host] = self.clock()
         if self._dead.get(host):
             # host came back: rejoin as fresh (elastic re-add)

@@ -1,0 +1,213 @@
+"""Deterministic fault injection for dataflow programs and files.
+
+`FaultPlan` describes ONE fault: which stage program to poison
+(`program`, by spec name, `"*"` for any), which of its outputs
+(`output`, None = all), at which outer-loop iteration (`iteration`,
+None = every call), and how (`kind`: nan | inf | bitflip | scale).
+Plans are frozen dataclasses, so a fault is a value — tests construct
+it, thread it through `lower()` / `compile_cached` /
+`LoopProgram(fault=...)`, and the corruption is baked into the traced
+computation as a `jnp.where` on the loop counter: fully
+deterministic, replayable, and safe under `interpret=True` (the
+wrapper is plain jnp ops, no pallas primitives).
+
+`bitflip` flips the second-highest exponent bit (0x40000000) of one
+float32 element chosen by `seed` — for values in [1, 2) that
+manufactures an Inf/NaN, elsewhere a wildly mis-scaled value, which
+is exactly the "single upset, huge blast radius" failure the guards
+must catch. `scale` multiplies by `factor` (use factor=0.0 to
+provoke breakdown sentinels).
+
+Iteration gating needs the loop counter, which only exists inside the
+driver's body trace: the driver publishes it via `loop_iteration(k)`
+around the staged body, and the wrapper reads `current_iteration()`.
+Outside any loop (setup stages, standalone dataflow programs) an
+iteration-targeted fault stays dormant; `iteration=None` fires
+everywhere.
+
+The filesystem helpers (`truncate_file`, `corrupt_json`,
+`torn_write`) are the chaos side of cache/checkpoint robustness: they
+manufacture the on-disk states — truncated JSON, byte-corrupted JSON,
+a write that died halfway — that `tune.store` quarantine and
+checkpoint recovery tests must survive.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import pathlib
+from typing import Optional
+
+FAULT_KINDS = ("nan", "inf", "bitflip", "scale")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One deterministic fault against a compiled program's outputs."""
+    program: str                     # stage program name, "*" = any
+    kind: str                        # nan | inf | bitflip | scale
+    output: Optional[str] = None     # output name, None = all outputs
+    iteration: Optional[int] = None  # outer-loop iteration, None = always
+    factor: float = 1e20             # scale kind multiplier
+    seed: int = 0                    # bitflip element choice
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{FAULT_KINDS}")
+        if not isinstance(self.program, str) or not self.program:
+            raise ValueError("FaultPlan.program must name a stage "
+                             "program (or '*')")
+
+    def matches(self, program_name) -> bool:
+        """True if the plan targets `program_name`. Loop drivers name
+        their stage programs `<loop>_<stage>`, so a plan targeting a
+        loop name hits every stage program of that loop."""
+        if self.program == "*":
+            return True
+        if not program_name:
+            return False
+        name = str(program_name)
+        return name == self.program or name.startswith(
+            self.program + "_")
+
+    def key(self) -> tuple:
+        """Content key, used to keep faulted compiles out of the clean
+        program cache."""
+        return (self.program, self.kind, self.output, self.iteration,
+                self.factor, self.seed)
+
+
+# -- loop-iteration context (driver publishes the traced counter) -----------
+
+_ITER_STACK: list = []
+
+
+@contextlib.contextmanager
+def loop_iteration(k):
+    """Driver-side: publish the traced loop counter around the staged
+    body so iteration-targeted faults can gate on it. Pure python
+    bookkeeping — adds nothing to the trace by itself."""
+    _ITER_STACK.append(k)
+    try:
+        yield
+    finally:
+        _ITER_STACK.pop()
+
+
+def current_iteration():
+    """The enclosing loop's traced iteration counter, or None outside
+    any driver body trace."""
+    return _ITER_STACK[-1] if _ITER_STACK else None
+
+
+# -- value corruption -------------------------------------------------------
+
+
+def _corrupted(value, plan: FaultPlan):
+    import jax
+    import jax.numpy as jnp
+
+    v = jnp.asarray(value)
+    if plan.kind == "nan":
+        return jnp.full_like(v, jnp.nan)
+    if plan.kind == "inf":
+        return jnp.full_like(v, jnp.inf)
+    if plan.kind == "scale":
+        return v * jnp.asarray(plan.factor, v.dtype)
+    # bitflip: one element, exponent bit 0x40000000, in f32 space
+    flat = jnp.ravel(jnp.asarray(v, jnp.float32))
+    n = flat.shape[0] if flat.shape else 1
+    idx = plan.seed % max(n, 1)
+    bits = jax.lax.bitcast_convert_type(flat, jnp.int32)
+    bits = bits.at[idx].set(bits[idx] ^ jnp.int32(0x40000000))
+    out = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    return jnp.reshape(out, jnp.shape(v)).astype(v.dtype)
+
+
+def corrupt(value, plan: FaultPlan):
+    """Apply the plan to one value, gated on the published loop
+    counter when the plan targets an iteration."""
+    import jax.numpy as jnp
+
+    if plan.iteration is None:
+        return _corrupted(value, plan)
+    k = current_iteration()
+    if k is None:        # outside a loop body: dormant
+        return value
+    v = jnp.asarray(value)
+    return jnp.where(jnp.asarray(k) == plan.iteration,
+                     _corrupted(v, plan), v)
+
+
+def wrap_program_fn(fn, plan: FaultPlan):
+    """Wrap an emitted program callable (inputs dict -> outputs dict)
+    so the plan's target outputs come back corrupted. jnp-only, so it
+    composes with jit, vmap, and interpret-mode kernels alike."""
+    def faulted(ins):
+        out = dict(fn(ins))
+        for name in out:
+            if plan.output is None or name == plan.output:
+                out[name] = corrupt(out[name], plan)
+        return out
+    return faulted
+
+
+# -- filesystem chaos -------------------------------------------------------
+
+
+class ChaosWriteError(OSError):
+    """Raised by `torn_write` at the configured failure point."""
+
+
+def truncate_file(path, *, keep: Optional[int] = None,
+                  fraction: float = 0.5) -> int:
+    """Truncate a file to `keep` bytes (or `fraction` of its size);
+    returns the new size. A truncated JSON document is the classic
+    crashed-mid-write artifact."""
+    path = pathlib.Path(path)
+    size = path.stat().st_size
+    new = keep if keep is not None else int(size * fraction)
+    new = max(0, min(new, size))
+    with open(path, "rb+") as f:
+        f.truncate(new)
+    return new
+
+
+def corrupt_json(path, *, seed: int = 0) -> None:
+    """Deterministically corrupt a JSON file so it no longer parses:
+    overwrite a seeded byte offset with garbage and knock out the
+    closing brace."""
+    path = pathlib.Path(path)
+    data = bytearray(path.read_bytes())
+    if not data:
+        data = bytearray(b"\xff")
+    else:
+        data[seed % len(data)] = 0xFF
+        data[-1] = ord("!")
+    path.write_bytes(bytes(data))
+    # sanity: the helper's contract is "no longer valid JSON"
+    try:
+        json.loads(bytes(data).decode("utf-8", errors="replace"))
+    except (json.JSONDecodeError, ValueError):
+        return
+    path.write_bytes(b"{corrupt!")
+
+
+def torn_write(path, text: str, *, fail_after: int) -> None:
+    """Simulate a write interrupted after `fail_after` bytes: the
+    partial content IS on disk (flushed), then ChaosWriteError raises
+    as the crash. Exercises recovery paths that must not trust a
+    non-atomically-written file."""
+    path = pathlib.Path(path)
+    data = text.encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(data[:fail_after])
+        f.flush()
+        os.fsync(f.fileno())
+    raise ChaosWriteError(
+        f"torn write: {path} died after {fail_after} of "
+        f"{len(data)} bytes")

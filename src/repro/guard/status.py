@@ -1,0 +1,41 @@
+"""Solver status codes.
+
+Deliberately a pure-constants module (no jax import): the loop driver,
+the escalation driver, the chaos harness, and the verify analyzer all
+share these without pulling each other in.
+
+The codes are int8 so a batched solve carries one byte per lane in
+the `lax.while_loop` carry. RUNNING is internal to the driver (a lane
+still iterating) and never appears in a returned `SolverResult`.
+"""
+from __future__ import annotations
+
+RUNNING = -1     # internal: lane still iterating
+CONVERGED = 0    # metric <= rtol * scale
+MAX_ITERS = 1    # iteration budget exhausted, no other diagnosis
+BREAKDOWN = 2    # a breakdown sentinel scalar collapsed (|v| < below)
+NONFINITE = 3    # NaN/Inf in a guarded value or the stop metric
+DIVERGED = 4     # metric exceeded factor * its initial value
+STAGNATED = 5    # no metric improvement for `window` iterations
+
+STATUS_NAMES = {
+    RUNNING: "RUNNING",
+    CONVERGED: "CONVERGED",
+    MAX_ITERS: "MAX_ITERS",
+    BREAKDOWN: "BREAKDOWN",
+    NONFINITE: "NONFINITE",
+    DIVERGED: "DIVERGED",
+    STAGNATED: "STAGNATED",
+}
+
+
+def status_name(code) -> str:
+    """Human name for a status code (accepts python ints and 0-d
+    arrays)."""
+    return STATUS_NAMES.get(int(code), f"UNKNOWN({int(code)})")
+
+
+def is_failure(code) -> bool:
+    """True for any outcome the escalation driver should react to
+    (everything except CONVERGED)."""
+    return int(code) != CONVERGED

@@ -40,6 +40,8 @@ from repro.core import lowering
 from repro.core.expr import sdiv as _sdiv  # noqa: F401  (re-export)
 from repro.core.runtime import Program
 from repro.core.spec import CountRule, SpecError
+from repro.guard import chaos as _chaos
+from repro.guard import status as ST
 
 _TINY = 1e-30
 
@@ -53,17 +55,31 @@ class SolverResult:
     residual: jax.Array     # final convergence metric
     history: jax.Array      # (max_iters + 1,) f32; NaN past the stop
     converged: jax.Array    # bool
+    # int8 repro.guard.status code (CONVERGED/MAX_ITERS/BREAKDOWN/
+    # NONFINITE/DIVERGED/STAGNATED), per lane for batched solves
+    status: Optional[jax.Array] = None
     aux: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    # escalation-driver attempt log (guard.escalate.Attempt records);
+    # None for plain solves
+    attempts: Optional[list] = None
 
     def __repr__(self):
         it = jnp.asarray(self.iterations)
         if it.ndim:   # batched result
             return (f"SolverResult(batch={it.shape[0]}, "
                     f"iterations={it.tolist()}, "
-                    f"converged={jnp.asarray(self.converged).tolist()})")
+                    f"status={self.status_names()})")
         return (f"SolverResult(iterations={int(self.iterations)}, "
                 f"residual={float(self.residual):.3e}, "
-                f"converged={bool(self.converged)})")
+                f"status={self.status_names()})")
+
+    def status_names(self):
+        """Status code(s) as name strings: one string, or a per-lane
+        list for batched results."""
+        st = jnp.asarray(self.status)
+        if st.ndim:
+            return [ST.status_name(s) for s in st]
+        return ST.status_name(st)
 
     def history_trimmed(self):
         """Residual history without the NaN tail past the stopping
@@ -115,9 +131,26 @@ class SolverProgram:
         return Program.from_spec(spec, mode=self.mode,
                                  interpret=self.interpret)
 
+    def _guards(self):
+        """The GuardSpec driving the guarded while-loop, or None for
+        the classic ungated loop (class-based solvers, loop specs
+        without a guards section). With None the solve closure is
+        byte-identical to the pre-guard driver."""
+        return None
+
+    def _step_guarded(self, operands, state, threshold, k):
+        """Guarded-path step hook: like `_step` but also returns an
+        int8 in-body fault code (RUNNING when clean). `k` is the
+        traced iteration counter, published to `repro.guard.chaos` so
+        iteration-targeted fault plans can gate on it."""
+        st, res = self._step(operands, state, threshold)
+        return st, res, jnp.int8(ST.RUNNING)
+
     def _build_raw(self):
         """The solve closure, before jit — also the vmap target for
         batched solves."""
+        if self._guards() is not None:
+            return self._build_raw_guarded(self._guards())
         max_iters = self.max_iters
 
         def solve(operands, tol):
@@ -149,17 +182,111 @@ class SolverProgram:
 
         return solve
 
+    def _build_raw_guarded(self, guards):
+        """The guarded solve closure: same single `lax.while_loop`,
+        but the carry holds an int8 status and the cond is simply
+        `status == RUNNING`. Each iteration the body classifies the
+        new metric (and any in-body fault from `_step_guarded`) into a
+        `repro.guard.status` code, so a poisoned solve exits in O(1)
+        iterations after the fault instead of running all max_iters.
+        Under vmap each lane carries its own status: JAX's while-loop
+        batching freezes a lane's carry once its cond goes False, so
+        statuses are per-lane exact."""
+        max_iters = self.max_iters
+        window = guards.stagnation
+        keep = jnp.float32(1.0 - guards.min_drop)
+
+        def classify(k1, stall):
+            """Lowest-priority codes; the caller layers DIVERGED,
+            CONVERGED, NONFINITE, and the in-body fault on top (later
+            writes win)."""
+            status = jnp.int8(ST.RUNNING)
+            status = jnp.where(k1 >= max_iters,
+                               jnp.int8(ST.MAX_ITERS), status)
+            if window is not None:
+                status = jnp.where(stall >= window,
+                                   jnp.int8(ST.STAGNATED), status)
+            return status
+
+        def solve(operands, tol):
+            state, res0, scale = self._init_state(operands)
+            res0 = jnp.asarray(res0, jnp.float32)
+            threshold = tol * jnp.maximum(
+                jnp.asarray(scale, jnp.float32), _TINY)
+            hist = jnp.full((max_iters + 1,), jnp.nan, jnp.float32)
+            hist = hist.at[0].set(res0)
+            div_limit = None
+            if guards.divergence is not None:
+                div_limit = jnp.float32(guards.divergence) * \
+                    jnp.maximum(res0, jnp.float32(_TINY))
+
+            status0 = jnp.where(res0 <= threshold,
+                                jnp.int8(ST.CONVERGED),
+                                jnp.int8(ST.RUNNING))
+            status0 = jnp.where(jnp.isfinite(res0), status0,
+                                jnp.int8(ST.NONFINITE))
+            if max_iters <= 0:    # degenerate budget: never iterate
+                status0 = jnp.where(status0 == jnp.int8(ST.RUNNING),
+                                    jnp.int8(ST.MAX_ITERS), status0)
+
+            def cond(carry):
+                return carry[2] == jnp.int8(ST.RUNNING)
+
+            def body(carry):
+                self.trace_count += 1  # python side effect: trace count
+                obs.event("loop.trace", program=self.name,
+                          mode=self.mode, trace=self.trace_count)
+                k, _, _, st, h, best, stall = carry
+                st, res, fault = self._step_guarded(
+                    operands, st, threshold, k)
+                res = jnp.asarray(res, jnp.float32)
+                h = h.at[k + 1].set(res)
+                k1 = k + 1
+                improved = res < best * keep
+                stall1 = jnp.where(improved, jnp.int32(0), stall + 1)
+                best1 = jnp.minimum(best, res)
+                status = classify(k1, stall1)
+                if div_limit is not None:
+                    status = jnp.where(res > div_limit,
+                                       jnp.int8(ST.DIVERGED), status)
+                status = jnp.where(res <= threshold,
+                                   jnp.int8(ST.CONVERGED), status)
+                status = jnp.where(jnp.isfinite(res), status,
+                                   jnp.int8(ST.NONFINITE))
+                status = jnp.where(fault != jnp.int8(ST.RUNNING),
+                                   fault, status)
+                return (k1, res, status, st, h, best1, stall1)
+
+            k, res, status, state, hist, _, _ = jax.lax.while_loop(
+                cond, body,
+                (jnp.int32(0), res0, status0, state, hist, res0,
+                 jnp.int32(0)))
+            return dict(state=state, iterations=k, residual=res,
+                        history=hist,
+                        converged=status == jnp.int8(ST.CONVERGED),
+                        status=status)
+
+        return solve
+
     def _build(self):
         return jax.jit(self._build_raw())
 
     def _package(self, out) -> SolverResult:
         sol = dict(self._solution(out["state"]))
+        status = out.get("status")
+        if status is None:
+            # ungated loop: the only outcomes are converged or budget
+            # exhausted (derived host-side, the loop jaxpr unchanged)
+            status = jnp.where(out["converged"],
+                               jnp.int8(ST.CONVERGED),
+                               jnp.int8(ST.MAX_ITERS))
         return SolverResult(
             x=sol.pop("x"),
             iterations=out["iterations"],
             residual=out["residual"],
             history=out["history"],
             converged=out["converged"],
+            status=status,
             aux=sol,
         )
 
@@ -179,12 +306,14 @@ class SolverProgram:
                       mode=self.mode, batch=int(its.shape[0]),
                       iterations=[int(k) for k in its],
                       final_residual=[float(r) for r in resid],
-                      converged=[bool(c) for c in conv])
+                      converged=[bool(c) for c in conv],
+                      status=res.status_names())
         else:
             obs.event("solver.result", program=self.name,
                       mode=self.mode, iterations=int(its),
                       final_residual=float(resid),
-                      converged=bool(conv))
+                      converged=bool(conv),
+                      status=res.status_names())
 
     def _run(self, operands: Dict[str, jax.Array],
              tol: float) -> SolverResult:
@@ -245,7 +374,7 @@ class LoopProgram(SolverProgram):
     def __init__(self, spec, *, mode: Optional[str] = None,
                  max_iters: Optional[int] = None,
                  interpret: Optional[bool] = None, tiles="auto",
-                 verify: bool = True):
+                 verify: bool = True, fault=None):
         if isinstance(spec, lowering.LoopIR):
             # a pre-lowered IR fixes mode/interpret: its stage kernels
             # are already compiled for that configuration
@@ -259,12 +388,17 @@ class LoopProgram(SolverProgram):
                     f"LoopIR was lowered with "
                     f"interpret={lir.interpret!r}; cannot run it with "
                     f"interpret={interpret!r}")
+            if fault is not None:
+                raise ValueError(
+                    "fault plans must be threaded through lowering; "
+                    "pass the raw spec (not a pre-lowered LoopIR) "
+                    "together with fault=")
             mode, interpret = lir.mode, lir.interpret
         else:
             mode = "dataflow" if mode is None else mode
             lir = lowering.lower_loop(spec, mode=mode,
                                       interpret=interpret, tiles=tiles,
-                                      verify=verify)
+                                      verify=verify, fault=fault)
         self.lir = lir
         self.name = lir.lspec.name
         if "x" not in lir.lspec.solution:
@@ -468,6 +602,33 @@ class LoopProgram(SolverProgram):
         lspec = self.lir.lspec
         return (self._next_state(lspec, state, env),
                 env[lspec.stop.metric])
+
+    def _guards(self):
+        return self.lir.lspec.guards
+
+    def _step_guarded(self, operands, state, threshold, k):
+        """One guarded iteration: run the staged body with the loop
+        counter published (so iteration-targeted FaultPlans can
+        fire), then evaluate the spec's breakdown/nonfinite guard
+        predicates over the fresh body environment."""
+        env = dict(self._setup_env)
+        env.update(state)
+        env["threshold"] = threshold
+        with _chaos.loop_iteration(k):
+            env = self._run_stages(self.lir.body, env)
+        lspec = self.lir.lspec
+        g = lspec.guards
+        fault = jnp.int8(ST.RUNNING)
+        for bg in g.breakdown:
+            trip = jnp.abs(jnp.asarray(env[bg.value],
+                                       jnp.float32)) < bg.below
+            fault = jnp.where(trip, jnp.int8(ST.BREAKDOWN), fault)
+        for name in g.nonfinite:
+            ok = jnp.all(jnp.isfinite(
+                jnp.asarray(env[name], jnp.float32)))
+            fault = jnp.where(ok, fault, jnp.int8(ST.NONFINITE))
+        return (self._next_state(lspec, state, env),
+                env[lspec.stop.metric], fault)
 
     def _solution(self, state):
         return {pub: state[src]

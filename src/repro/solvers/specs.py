@@ -269,6 +269,14 @@ CG_LOOP = {
         },
         "while": {"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
                   "rtol": 1e-6, "max_iters": 200},
+        # in-loop failure detection: pq = p'Ap collapsing is the CG
+        # (Krylov) breakdown; the rest catches poisoned state fast
+        "guards": {
+            "nonfinite": ["x_next"],
+            "breakdown": [{"value": "pq", "below": 1e-30}],
+            "divergence": {"factor": 1e4},
+            "stagnation": {"window": 50},
+        },
         "solution": {"x": "x"},
     },
 }
@@ -326,6 +334,13 @@ BICGSTAB_LOOP = {
                      "rho": "rho_next"},
         "while": {"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
                   "rtol": 1e-6, "max_iters": 200},
+        # rv = r̂'v ~ 0 is the BiCGStab breakdown (alpha = rho / rv)
+        "guards": {
+            "nonfinite": ["x_next"],
+            "breakdown": [{"value": "rv", "below": 1e-30}],
+            "divergence": {"factor": 1e4},
+            "stagnation": {"window": 50},
+        },
         "solution": {"x": "x"},
     },
 }
@@ -357,6 +372,14 @@ JACOBI_LOOP = {
         "feedback": {"x": "x_next", "r": "r_next"},
         "while": {"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
                   "rtol": 1e-6, "max_iters": 1000},
+        # Jacobi on a non-diagonally-dominant system genuinely
+        # diverges — DIVERGED is the expected diagnosis, not an
+        # accident (no Krylov scalar, so no breakdown sentinel)
+        "guards": {
+            "nonfinite": ["x_next"],
+            "divergence": {"factor": 1e4},
+            "stagnation": {"window": 100},
+        },
         "solution": {"x": "x"},
     },
 }
@@ -602,6 +625,14 @@ def gmres_loop(m: int = 20, *, rtol: float = 1e-6,
             "while": {"metric": "rnorm", "init": "rnorm0",
                       "scale": "bnorm", "rtol": rtol,
                       "max_iters": max_restarts},
+            # guards run at restart granularity (the outer loop is
+            # the iteration the driver sees); a restart that stops
+            # improving the true residual is the GMRES stall mode
+            "guards": {
+                "nonfinite": ["x_next"],
+                "divergence": {"factor": 1e4},
+                "stagnation": {"window": 10},
+            },
             "solution": {"x": "x"},
         },
     }

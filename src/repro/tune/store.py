@@ -20,7 +20,10 @@ versioned schema, holding two keyed sections:
 The store is loaded once per process (`get_store()`); `generation`
 bumps on every mutation so lowering's resolution memo invalidates
 itself. A file with an unknown schema version is ignored, not
-deleted — forward-compatible readers start from an empty table.
+deleted — forward-compatible readers start from an empty table. A
+file that no longer parses (crashed writer, disk fault) is
+quarantined to `<name>.corrupt` and the table rebuilds from empty;
+transient read errors get one retry before giving up.
 """
 from __future__ import annotations
 
@@ -28,6 +31,7 @@ import json
 import os
 import pathlib
 import tempfile
+import time
 from typing import Dict, Mapping, Optional
 
 from repro import obs
@@ -126,9 +130,37 @@ class TuningTable:
 
     @staticmethod
     def _read(path: pathlib.Path) -> dict:
+        data = None
+        for attempt in (0, 1):
+            try:
+                data = path.read_bytes()
+                break
+            except FileNotFoundError:
+                return _empty_doc()
+            except OSError as e:
+                # transient I/O (NFS hiccup, EINTR): one retry, then
+                # start from an empty table rather than crash a compile
+                if attempt:
+                    obs.event("tune.store.read_failed",
+                              path=str(path), error=str(e))
+                    return _empty_doc()
+                time.sleep(0.05)
         try:
-            doc = json.loads(path.read_text())
-        except (OSError, json.JSONDecodeError):
+            doc = json.loads(data.decode("utf-8"))
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            # corrupt/truncated table (crashed writer, disk fault):
+            # quarantine the evidence and rebuild from empty — the
+            # next save() writes a fresh well-formed document
+            quarantine = path.with_name(path.name + ".corrupt")
+            try:
+                os.replace(path, quarantine)
+            except OSError:
+                quarantine = None
+            obs.event("tune.store.quarantined", path=str(path),
+                      quarantine=(str(quarantine)
+                                  if quarantine else None),
+                      error=str(e))
+            obs.counter("tune.store.corrupt")
             return _empty_doc()
         if not isinstance(doc, Mapping) or \
                 doc.get("version") != SCHEMA_VERSION:

@@ -56,6 +56,10 @@ CATALOG = {
     "RV401": "VMEM budget exceeded",
     "RV402": "window not vector-width aligned",
     "RV403": "duplicate slot store",
+    "RV500": "malformed guards section",
+    "RV501": "unknown guard target",
+    "RV502": "breakdown guard target not scalar",
+    "RV503": "guard parameter out of range",
 }
 
 

@@ -155,6 +155,11 @@ def _check_dead_bindings(lspec: LoopSpec, lir, sink) -> None:
         for ref in (f.like, f.slot0, f.source):
             if ref is not None:
                 used.add(ref)
+    if lspec.guards is not None:
+        # guard predicates read these every iteration — a value watched
+        # only by a guard is still live
+        used.update(lspec.guards.nonfinite)
+        used.update(bg.value for bg in lspec.guards.breakdown)
 
     bindings: list = []
     _collect_bindings(lir.setup, "setup", bindings)

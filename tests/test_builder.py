@@ -143,6 +143,9 @@ def test_fluent_loop_program_runs():
         feedback={"x": "x_next", "r": "r_next"},
         stop={"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
               "rtol": 1e-6, "max_iters": 1000},
+        guards={"nonfinite": ["x_next"],
+                "divergence": {"factor": 1e4},
+                "stagnation": {"window": 100}},
         solution={"x": "x"})
     # fluent loop builder == the shipped JACOBI_LOOP up to its name
     raw = b.to_spec()
@@ -261,6 +264,9 @@ def _fluent_gmres(m):
         ],
         stop={"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
               "rtol": 1e-6, "max_iters": 50},
+        guards={"nonfinite": ["x_next"],
+                "divergence": {"factor": 1e4},
+                "stagnation": {"window": 10}},
         solution={"x": x})          # a StateRef as the solution source
     return b
 
@@ -310,6 +316,10 @@ def test_fluent_bicgstab_cond_digest_matches_shipped_spec():
         ],
         stop={"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
               "rtol": 1e-6, "max_iters": 200},
+        guards={"nonfinite": ["x_next"],
+                "breakdown": [{"value": "rv", "below": 1e-30}],
+                "divergence": {"factor": 1e4},
+                "stagnation": {"window": 50}},
         solution={"x": "x"})
     assert lowering.spec_digest(b.to_spec()) == \
         lowering.spec_digest(specs.BICGSTAB_LOOP)

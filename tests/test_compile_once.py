@@ -86,6 +86,28 @@ def test_recompile_hits_lowering_cache(name):
     assert exe.trace_count == 1
 
 
+def test_guarded_and_faulted_compiles_trace_once():
+    """The in-loop guards compile into the same single body trace —
+    no retrace from the status plumbing — and a fault-armed compile
+    (which bypasses the clean cache) also traces exactly once."""
+    from repro.guard import chaos
+
+    spec, ops = _case("cg")
+    assert spec["iterate"].get("guards")      # guards ship on
+    exe = blas.compile(spec, max_iters=4)
+    res = exe.run(tol=0.0, **ops)
+    assert res.status is not None
+    assert exe.trace_count == 1
+    exe.run(tol=0.0, **ops)
+    assert exe.trace_count == 1
+
+    plan = chaos.FaultPlan(program="cg", kind="nan", iteration=1)
+    fexe = blas.compile(spec, max_iters=8, fault=plan)
+    fres = fexe.run(tol=1e-6, **ops)
+    assert fres.status_names() == "NONFINITE"
+    assert fexe.trace_count == 1
+
+
 def test_trace_once_with_tuning_table_tiles(monkeypatch, tmp_path):
     """Compile-once must survive tiles coming from the tuning table:
     seed a tuned artifact for every stage of the CG loop, recompile

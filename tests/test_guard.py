@@ -1,0 +1,399 @@
+"""repro.guard: in-loop failure detection, deterministic fault
+injection, and graceful solver degradation.
+
+The guards compile into the jitted `lax.while_loop` cond, so a
+poisoned solve must exit within DETECTION_SLACK iterations of the
+injection point with the right `SolverResult.status` code — per lane
+under `batched()`. Chaos plans are frozen values, so every test here
+is deterministic and replayable. The escalation driver turns failure
+codes into recovery (retry / solver switch / f64 direct), and the
+filesystem chaos helpers drive the tuning-store quarantine path.
+"""
+import copy
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import blas, verify
+from repro.ft.watchdog import HeartbeatMonitor
+from repro.guard import chaos, escalate
+from repro.guard import status as ST
+from repro.solvers import specs
+from repro.tune import store as tune_store
+
+N = 24
+DETECTION_SLACK = 2
+
+
+def _spd(n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((n, n)).astype(np.float32)
+    return m @ m.T + n * np.eye(n, dtype=np.float32)
+
+
+def _rhs(n=N, seed=1):
+    return np.random.default_rng(seed).standard_normal(n).astype(
+        np.float32)
+
+
+def _nonsym(n=N, seed=3):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, n)).astype(np.float32)
+            / np.sqrt(n) + 3.0 * np.eye(n, dtype=np.float32))
+
+
+def _x_ref(a, b):
+    return np.linalg.solve(np.asarray(a, np.float64),
+                           np.asarray(b, np.float64))
+
+
+# -- status codes -----------------------------------------------------------
+
+
+def test_status_names_and_failure_predicate():
+    assert ST.status_name(ST.CONVERGED) == "CONVERGED"
+    assert ST.status_name(ST.BREAKDOWN) == "BREAKDOWN"
+    assert not ST.is_failure(ST.CONVERGED)
+    # MAX_ITERS counts as a failure: the escalation driver reacts to
+    # an exhausted budget the same way it reacts to a breakdown
+    for code in (ST.MAX_ITERS, ST.BREAKDOWN, ST.NONFINITE,
+                 ST.DIVERGED, ST.STAGNATED):
+        assert ST.is_failure(code)
+
+
+def test_healthy_solves_report_converged():
+    a, b = _spd(), _rhs()
+    for fn in (blas.cg, blas.bicgstab):
+        res = fn(a, b, tol=1e-6)
+        assert res.status_names() == "CONVERGED"
+        assert bool(res.converged)
+
+
+# -- fault plans ------------------------------------------------------------
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        chaos.FaultPlan(program="cg", kind="meteor")
+    with pytest.raises(ValueError):
+        chaos.FaultPlan(program="", kind="nan")
+
+
+def test_fault_plan_matching_is_prefix_aware():
+    plan = chaos.FaultPlan(program="cg", kind="nan")
+    assert plan.matches("cg")
+    assert plan.matches("cg_matvec")
+    assert not plan.matches("cgs")           # no underscore boundary
+    assert not plan.matches("bicg_matvec")
+    assert chaos.FaultPlan(program="*", kind="nan").matches("anything")
+
+
+# -- in-loop detection ------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,expect", [
+    ("nan", {ST.NONFINITE}),
+    ("inf", {ST.NONFINITE}),
+    ("bitflip", {ST.NONFINITE, ST.DIVERGED, ST.BREAKDOWN}),
+    ("scale", {ST.DIVERGED, ST.NONFINITE}),
+])
+def test_cg_detects_every_fault_kind(kind, expect):
+    a, b = _spd(), _rhs()
+    inject_at = 3
+    plan = chaos.FaultPlan(program="cg", kind=kind,
+                           iteration=inject_at)
+    exe = blas.compile(specs.CG_LOOP, max_iters=100, fault=plan)
+    res = exe.run(A=a, b=b, x0=jnp.zeros_like(jnp.asarray(b)),
+                  tol=1e-6)
+    code = int(np.asarray(res.status))
+    assert code in expect, ST.status_name(code)
+    assert int(res.iterations) <= inject_at + DETECTION_SLACK
+
+
+def test_scale_zero_provokes_breakdown():
+    a, b = _spd(), _rhs()
+    plan = chaos.FaultPlan(program="cg_matvec", kind="scale",
+                           factor=0.0, iteration=2, output="pq")
+    exe = blas.compile(specs.CG_LOOP, max_iters=100, fault=plan)
+    res = exe.run(A=a, b=b, x0=jnp.zeros_like(jnp.asarray(b)),
+                  tol=1e-6)
+    assert res.status_names() == "BREAKDOWN"
+    assert int(res.iterations) <= 2 + DETECTION_SLACK
+
+
+def test_detection_is_deterministic():
+    a, b = _spd(), _rhs()
+    plan = chaos.FaultPlan(program="cg", kind="bitflip", iteration=3,
+                           seed=7)
+    outs = []
+    for _ in range(2):
+        exe = blas.compile(specs.CG_LOOP, max_iters=100, fault=plan)
+        res = exe.run(A=a, b=b, x0=jnp.zeros_like(jnp.asarray(b)),
+                      tol=1e-6)
+        outs.append((int(np.asarray(res.status)),
+                     int(res.iterations)))
+    assert outs[0] == outs[1]
+
+
+def test_faulted_compile_never_poisons_the_clean_cache():
+    a, b = _spd(), _rhs()
+    plan = chaos.FaultPlan(program="cg", kind="nan", iteration=1)
+    fexe = blas.compile(specs.CG_LOOP, max_iters=50, fault=plan)
+    fres = fexe.run(A=a, b=b, x0=jnp.zeros_like(jnp.asarray(b)),
+                    tol=1e-6)
+    assert ST.is_failure(int(np.asarray(fres.status)))
+    clean = blas.cg(a, b, tol=1e-6)
+    assert clean.status_names() == "CONVERGED"
+    np.testing.assert_allclose(np.asarray(clean.x), _x_ref(a, b),
+                               atol=1e-3)
+
+
+# -- guards do not perturb healthy numerics ---------------------------------
+
+
+def _stripped(raw):
+    raw = copy.deepcopy(raw)
+    raw["iterate"].pop("guards")
+    return raw
+
+
+def test_guarded_solve_bit_identical_to_unguarded():
+    """Guard predicates ride the carry, not the math: a healthy solve
+    with guards is bitwise the solve without them."""
+    a, b = _spd(), _rhs()
+    x0 = jnp.zeros_like(jnp.asarray(b))
+    guarded = blas.compile(specs.CG_LOOP, max_iters=100).run(
+        A=a, b=b, x0=x0, tol=1e-6)
+    plain = blas.compile(_stripped(specs.CG_LOOP), max_iters=100).run(
+        A=a, b=b, x0=x0, tol=1e-6)
+    assert int(guarded.iterations) == int(plain.iterations)
+    np.testing.assert_array_equal(np.asarray(guarded.x),
+                                  np.asarray(plain.x))
+    np.testing.assert_array_equal(np.asarray(guarded.residual),
+                                  np.asarray(plain.residual))
+
+
+# -- batched per-lane status ------------------------------------------------
+
+
+def test_batched_mixed_lanes_per_lane_status():
+    """One NaN-poisoned lane in a batch: that lane reports NONFINITE
+    in O(1) iterations, the healthy lanes converge bit-identically to
+    an unguarded batched run."""
+    a = _spd()
+    bs = np.stack([_rhs(seed=s) for s in (1, 2, 3)])
+    bad = 1
+    bs_poisoned = bs.copy()
+    bs_poisoned[bad, 5] = np.nan
+    x0 = np.zeros_like(bs)
+
+    exe = blas.compile(specs.CG_LOOP, max_iters=100)
+    res = exe.batched(A=a, b=bs_poisoned, x0=x0, tol=1e-6)
+    names = res.status_names()
+    assert names[bad] == "NONFINITE"
+    assert int(res.iterations[bad]) <= 1
+    for lane in (0, 2):
+        assert names[lane] == "CONVERGED"
+
+    plain = blas.compile(_stripped(specs.CG_LOOP),
+                         max_iters=100).batched(
+        A=a, b=bs_poisoned, x0=x0, tol=1e-6)
+    for lane in (0, 2):
+        np.testing.assert_array_equal(
+            np.asarray(res.x[lane]), np.asarray(plain.x[lane]))
+        assert int(res.iterations[lane]) == \
+            int(plain.iterations[lane])
+
+
+# -- escalation -------------------------------------------------------------
+
+
+def test_escalation_policy_validation():
+    with pytest.raises(ValueError):
+        escalate.EscalationPolicy(chain=())
+    with pytest.raises(ValueError):
+        escalate.EscalationPolicy(chain=("warp_drive",))
+    with pytest.raises(ValueError):
+        escalate.EscalationPolicy(max_attempts=0)
+
+
+def test_retry_recovers_from_transient_fault():
+    """A fault on the first attempt only (the chaos contract) is
+    exactly a transient: retry-with-restart must recover."""
+    a, b = _spd(), _rhs()
+    res = blas.solve(a, b, tol=1e-6,
+                     fault=chaos.FaultPlan(program="cg", kind="nan"))
+    assert res.status_names() == "CONVERGED"
+    assert [(at.solver, at.action) for at in res.attempts] == \
+        [("cg", "initial"), ("cg", "retry")]
+    assert ST.is_failure(res.attempts[0].status)
+    np.testing.assert_allclose(np.asarray(res.x), _x_ref(a, b),
+                               atol=1e-3)
+
+
+def test_escalation_switches_cg_to_bicgstab():
+    """CG on a nonsymmetric system burns its iteration budget; the
+    driver must degrade to BiCGStab and come back scipy-parity
+    correct."""
+    a, b = _nonsym(), _rhs()
+    policy = escalate.EscalationPolicy(retry_restart=False)
+    res = blas.solve(a, b, tol=1e-6, max_iters=8, policy=policy)
+    assert res.status_names() == "CONVERGED"
+    solvers = [at.solver for at in res.attempts]
+    assert solvers[0] == "cg"
+    assert res.attempts[-1].solver == "bicgstab"
+    assert ST.is_failure(res.attempts[0].status) or \
+        res.attempts[0].status == ST.MAX_ITERS
+    np.testing.assert_allclose(np.asarray(res.x), _x_ref(a, b),
+                               atol=1e-3)
+
+
+def test_escalation_f64_last_resort():
+    """Chain exhausted -> numpy float64 dense direct solve."""
+    a, b = _spd(), _rhs()
+    policy = escalate.EscalationPolicy(chain=("cg",),
+                                       retry_restart=False)
+    res = blas.solve(a, b, tol=1e-6, max_iters=1, policy=policy)
+    assert res.attempts[-1].action == "escalate_f64"
+    assert res.status_names() == "CONVERGED"
+    np.testing.assert_allclose(np.asarray(res.x), _x_ref(a, b),
+                               atol=1e-6)
+
+
+def test_recovery_error_carries_attempts():
+    a, b = _spd(), _rhs()
+    policy = escalate.EscalationPolicy(chain=("cg",),
+                                       retry_restart=False,
+                                       escalate_f64=False)
+    with pytest.raises(escalate.RecoveryError) as ei:
+        blas.solve(a, b, tol=1e-6, max_iters=1, policy=policy)
+    assert len(ei.value.attempts) == 1
+    assert ei.value.attempts[0].status == ST.MAX_ITERS
+
+
+# -- verify diagnostics (RV5xx) ---------------------------------------------
+
+
+@pytest.mark.parametrize("mutate,code", [
+    (lambda g: g.__setitem__("bogus", {}), "RV500"),
+    (lambda g: g.__setitem__("nonfinite", ["no_such_name"]), "RV501"),
+    (lambda g: g.__setitem__("breakdown",
+                             [{"value": "q", "below": 1e-30}]),
+     "RV502"),
+    (lambda g: g.__setitem__("divergence", {"factor": 0.5}), "RV503"),
+    (lambda g: g.__setitem__("stagnation", {"window": 0}), "RV503"),
+])
+def test_malformed_guards_get_rv5xx_diagnostics(mutate, code):
+    raw = copy.deepcopy(specs.CG_LOOP)
+    mutate(raw["iterate"]["guards"])
+    report = verify.analyze(raw)
+    assert any(d.code == code and d.severity == "error"
+               for d in report.diagnostics), report.diagnostics
+
+
+def test_shipped_specs_verify_clean_with_guards():
+    for raw in (specs.CG_LOOP, specs.JACOBI_LOOP,
+                specs.BICGSTAB_LOOP, specs.gmres_loop(8)):
+        assert raw["iterate"].get("guards")
+        report = verify.analyze(raw)
+        assert not report.errors, (raw["name"], report.errors)
+        assert not report.warnings, (raw["name"], report.warnings)
+
+
+def test_guards_round_trip_through_unparse():
+    from repro.core import spec as spec_mod
+    for raw in (specs.CG_LOOP, specs.BICGSTAB_LOOP):
+        lspec = spec_mod.parse_loop(raw)
+        again = spec_mod.unparse_loop(lspec)
+        assert again["iterate"]["guards"] == raw["iterate"]["guards"]
+
+
+# -- watchdog elastic join --------------------------------------------------
+
+
+def test_heartbeat_monitor_elastic_join():
+    t = [0.0]
+    mon = HeartbeatMonitor(hosts=["a"], interval_s=1.0,
+                           clock=lambda: t[0])
+    mon.beat("newcomer")            # unknown host: must not KeyError
+    assert "newcomer" in mon.hosts
+    assert mon.status("newcomer") == "alive"
+    t[0] = 10.0                     # newcomer goes silent too
+    dead = mon.poll()
+    assert set(dead) == {"a", "newcomer"}
+    mon.beat("newcomer")            # and rejoins fresh
+    assert mon.status("newcomer") == "alive"
+    assert "newcomer" in mon.alive_hosts
+
+
+# -- filesystem chaos / tuning-store hardening ------------------------------
+
+
+def _seeded_table(path):
+    table = tune_store.TuningTable(path)
+    table.doc["seq"] = 1
+    table.doc["entries"]["gemv|64|dataflow|fuse=1|anchor=1|cpu"] = {
+        "tiles": {"m": 8, "n": 8, "k": 8}, "us": 1.0,
+        "default_us": 2.0, "seq": 1}
+    table.save()
+    return table
+
+
+@pytest.mark.parametrize("damage", [
+    chaos.corrupt_json,
+    lambda p: chaos.truncate_file(p, fraction=0.4),
+])
+def test_store_quarantines_corrupt_table(tmp_path, damage):
+    path = tmp_path / "tuning_table.json"
+    _seeded_table(path)
+    damage(path)
+    reread = tune_store.TuningTable(path)       # must not raise
+    assert reread.doc["entries"] == {}
+    quarantined = path.with_name(path.name + ".corrupt")
+    assert quarantined.exists()
+    # the rebuild path: next save writes a fresh well-formed table
+    reread.doc["seq"] = 1
+    reread.doc["entries"]["probe|8|dataflow|fuse=1|anchor=1|cpu"] = {
+        "tiles": {"m": 8, "n": 8, "k": 8}, "us": 1.0,
+        "default_us": 2.0, "seq": 1}
+    reread.save()
+    assert json.loads(path.read_text())["entries"]
+
+
+def test_torn_write_leaves_partial_file_and_raises(tmp_path):
+    path = tmp_path / "ckpt.json"
+    doc = json.dumps({"step": 120, "shards": list(range(50))})
+    with pytest.raises(chaos.ChaosWriteError):
+        chaos.torn_write(path, doc, fail_after=20)
+    assert path.stat().st_size == 20
+    # a store pointed at the torn file recovers by quarantine
+    reread = tune_store.TuningTable(path)
+    assert reread.doc["entries"] == {}
+
+
+def test_chaos_smoke_cli_importable():
+    from repro.guard import __main__ as guard_main
+    cases = guard_main._case_matrix()
+    solvers = {c[0] for c in cases}
+    assert solvers == {"cg", "bicgstab", "jacobi", "gmres"}
+    kinds = {c[1] for c in cases}
+    assert kinds == set(chaos.FAULT_KINDS)
+
+
+def test_heartbeat_known_host_flow_unchanged():
+    t = [0.0]
+    fired = []
+    mon = HeartbeatMonitor(hosts=["a", "b"], interval_s=1.0,
+                           on_failure=fired.append,
+                           clock=lambda: t[0])
+    t[0] = 3.0
+    mon.beat("a")
+    assert mon.status("a") == "alive"
+    assert mon.status("b") == "suspected"
+    t[0] = 7.5       # a missed 4.5 beats (suspected), b 7.5 (dead)
+    assert mon.poll() == ["b"]
+    assert fired == ["b"]
+    assert mon.poll() == []         # fires exactly once per incident
