@@ -31,7 +31,7 @@ Three tiers, lowest friction first:
 `blas.compile(...)` returns an `Executable` whatever the input kind:
 `.run() / .one() / .batched() / .describe() / .cost_report() /
 .save()`, with `blas.load(path)` compiling a saved spec back. The
-solver convenience functions (`cg`, `bicgstab`, `jacobi`,
+solver convenience functions (`cg`, `block_cg`, `bicgstab`, `jacobi`,
 `power_iteration`) run on the same path.
 """
 from __future__ import annotations
@@ -42,15 +42,16 @@ from .builder import (BuilderError, InputRef, Port,  # noqa: F401
                       program, read, stage, store)
 from .executable import (CostReport, Executable, compile,  # noqa: F401
                          load)
-from .solvers import (bicgstab, cg, gmres, jacobi,  # noqa: F401
-                      power_iteration, solve)
+from .solvers import (bicgstab, block_cg, cg, gmres,  # noqa: F401
+                      jacobi, power_iteration, solve)
 from repro.guard.escalate import (EscalationPolicy,  # noqa: F401
                                   RecoveryError)
 
 __all__ = [
     "BuilderError", "CostReport", "EscalationPolicy", "Executable",
     "InputRef", "Port", "ProgramBuilder", "RecoveryError", "StateRef",
-    "api_table", "bicgstab", "cg", "compile", "cond", "gmres",
+    "api_table", "bicgstab", "block_cg", "cg", "compile", "cond",
+    "gmres",
     "inner_loop", "jacobi", "let", "load", "power_iteration",
     "program", "read", "routines", "solve", "stage", "store",
 ]

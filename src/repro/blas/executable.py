@@ -75,6 +75,8 @@ def _out_shape(rdef, blas: str, kind: str, sh: Mapping) -> tuple:
     if kind == R.OUT_VEC:
         if blas == "gemvt":                   # out follows Aᵀ's rows
             return (sh["A"][1],)
+        if blas == "coldot":                  # one entry per column
+            return (sh["x"][1],)
         mats = [p for p, k in rdef.inputs.items() if k == R.MAT]
         if mats:
             return (sh[mats[0]][0],)
@@ -149,6 +151,8 @@ def _program_cost(ir, shapes: Mapping, scope: str = ""):
     # Level-2 anchored groups are credited by the same rules — their
     # internal edges are always vector handoffs (the matrix never
     # crosses a group edge).
+    ext_pub = {(pi.routine, pi.port): pi.name
+               for pi in ir.io.inputs if pi.kind != "scalar"}
     savings = savings_exact = 0
     group_rows = []
     for gi, g in enumerate(ir.groups or ()):
@@ -172,6 +176,40 @@ def _program_cost(ir, shapes: Mapping, scope: str = ""):
                                 if e.dst not in members]
                     if not external and port not in r.output_aliases:
                         g_exact += port_bytes
+        # Level-3 (gemm-anchored) tile groups route matrices ACROSS
+        # group-internal edges, which the naive matrix accounting
+        # double-counts: a member MAT port fed on-chip never reads
+        # HBM, and two member MAT ports bound to the same public
+        # input are one stream, not two (the 2-D tile walk reuses the
+        # resident window). Move the on-chip panel reads out of the
+        # matrix pool (their savings are already credited above) and
+        # credit the duplicate streams. 1-D anchored groups never put
+        # a matrix on a group edge, so their accounting is unchanged.
+        if g.fused and g.anchor is not None and \
+                R.OUT_MAT in set(ir.graph.nodes[g.anchor]
+                                 .rdef.outputs.values()):
+            seen_pub = set()
+            for name in g.nodes:
+                r = ir.graph.nodes[name]
+                for port, kind in r.rdef.inputs.items():
+                    if kind != R.MAT:
+                        continue
+                    pbytes = int(np.prod(
+                        port_shape[(name, port)],
+                        dtype=np.int64)) * dtype_bytes
+                    e = ir.graph.producer_of(name, port)
+                    if e is not None and e.src in members:
+                        matrix_bytes -= pbytes
+                        continue
+                    pub = ext_pub.get((name, port))
+                    if pub is None:
+                        continue
+                    if pub in seen_pub:
+                        matrix_bytes -= pbytes
+                        g_savings += pbytes
+                        g_exact += pbytes
+                    else:
+                        seen_pub.add(pub)
         savings += g_savings
         savings_exact += g_exact
         group_rows.append({
@@ -515,9 +553,14 @@ class Executable:
                           fused_savings_exact=body_exact,
                           matrix_bytes=body_mat)
 
-    def _loop_cost(self, shapes: Mapping, group_sink=None):
+    def _loop_cost(self, shapes: Mapping, group_sink=None,
+                   env_sink=None):
         """Shape-propagating cost walk over a loop program's setup and
         body stages (the engine under the loop branch of cost_report).
+        `env_sink`, when given, receives the final name -> shape
+        environment (operands, setup outputs, state fields, body
+        outputs) — `_tune_loop_stages` uses it to resolve stage ports
+        fed by loop state at their true shapes.
         `group_sink`, when given, collects the per-fusion-group model
         rows of the TOP-LEVEL body program stages only — the stages
         whose kernels run directly in the body trace, i.e. the surface
@@ -647,6 +690,8 @@ class Executable:
         env["threshold"] = ()
         body_rows, body_savings, body_exact, body_mat = walk(
             lir.body, "body:", env, group_sink=group_sink)
+        if env_sink is not None:
+            env_sink.update(env)
         return (setup_rows, body_rows, body_savings, body_exact,
                 body_mat)
 
@@ -809,6 +854,18 @@ class Executable:
                 continue
             sh = shapes[oname]
             dim_of[oname] = sh if isinstance(sh, tuple) else (sh,)
+        # the cost walk's shape environment also covers setup outputs
+        # and state fields, so a stage port fed by loop state (e.g.
+        # block-CG's P panel, an (n, s) state matrix) tunes — and
+        # records its table key — at the shape it actually runs at
+        try:
+            env_shapes: dict = {}
+            self._loop_cost(dict(shapes), env_sink=env_shapes)
+            for name, sh in env_shapes.items():
+                if isinstance(sh, tuple) and sh and name not in dim_of:
+                    dim_of[name] = sh
+        except Exception:
+            pass   # operand-only resolution remains the fallback
         n_fallback = max(
             (sh[0] for sh in dim_of.values() if len(sh) == 1),
             default=max((sh[0] for sh in dim_of.values()), default=256))

@@ -64,6 +64,28 @@ def cg(A, b, x0=None, *, tol: float = 1e-6, max_iters: int = 500,
     return exe.run(A=A, b=b, x0=x0, tol=tol)
 
 
+def block_cg(A, B, X0=None, *, tol: float = 1e-6,
+             max_iters: int = 500, mode: str = "dataflow",
+             interpret: Optional[bool] = None) -> SolverResult:
+    """Blocked conjugate gradient for SPD systems with an (n, s)
+    right-hand-side panel — the `specs.BLOCK_CG_LOOP` JSON loop
+    program. Each iteration shares ONE gemm matvec across all s
+    right-hand sides (a level-3 gemm-anchored fused group computes
+    Q = A P and the Gram diagonal diag(PᵀQ) in a single kernel); the
+    per-column recurrences are otherwise exactly CG, so `result.x`
+    matches solving each column independently. The stop rule tracks
+    the worst column's residual."""
+    B = jnp.asarray(B)
+    if B.ndim != 2:
+        raise ValueError(
+            f"block_cg: B must be an (n, s) panel, got shape {B.shape}")
+    exe = _loop_executable("block_cg", specs.BLOCK_CG_LOOP, mode,
+                           interpret, max_iters)
+    if X0 is None:
+        X0 = jnp.zeros_like(B)
+    return exe.run(A=A, B=B, x0=X0, tol=tol)
+
+
 def jacobi(A, b, x0=None, *, tol: float = 1e-6, max_iters: int = 1000,
            omega: float = 1.0, richardson: bool = False,
            mode: str = "dataflow",
@@ -119,7 +141,9 @@ def solve(A, b, x0=None, *, tol: float = 1e-6, max_iters: int = 500,
           fault=None) -> SolverResult:
     """Robust solve with graceful degradation: runs the guarded
     iterative solvers under an `EscalationPolicy` (default
-    CG -> BiCGStab -> GMRES -> float64 dense direct), reacting to
+    CG -> BiCGStab -> GMRES -> float64 dense direct; a matrix `b`
+    with one column per system runs block-CG -> float64 dense
+    direct), reacting to
     `repro.guard.status` failure codes with retries and fallbacks.
     The attempt log rides back on `result.attempts`; a full-ladder
     failure raises `guard.RecoveryError`. A `guard.chaos.FaultPlan`

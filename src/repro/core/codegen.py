@@ -7,19 +7,29 @@ internal edges becoming VMEM/VREG values (never HBM). Standalone
 level-2/3 routines dispatch to their hand-tiled kernels in
 repro.kernels.
 
-Two generated-kernel shapes:
+Three generated-kernel shapes:
 
 * level-1 groups — one (block_rows, 128) window walk over the vectors
   (`make_group_callable`);
 * level-2 **anchored** groups (`make_anchored_callable`) — the matrix
-  is streamed through VMEM in (bm, bn) row-block windows exactly like
-  the standalone `kernels.gemv`/`symv` tilings (whose block bodies are
-  reused verbatim), the anchor's output row block accumulates in a
+  is streamed through VMEM in (bm, bn) windows exactly like the
+  standalone `kernels.gemv`/`symv`/`gemvt` tilings (whose block bodies
+  are reused verbatim), the anchor's output block accumulates in a
   VMEM scratch, and the absorbed level-1 routines run in-register on
   that block: producers of the accumulator operand in the row phase
   (j == 0), consumers in the finish phase (j == last), with
-  reductions accumulating across row blocks. The intermediate vector
-  never touches HBM.
+  reductions accumulating across output blocks. The intermediate
+  vector never touches HBM. For `gemvt` the output axis runs over A's
+  columns and the reduction over A's row blocks — the same roles,
+  transposed;
+* level-3 **tiled** groups (`make_tiled_callable`) — a `gemm` anchor
+  finishes (bm, bn) output tiles in a 2-D VMEM accumulator over a
+  (bk,) contraction walk (the standalone `kernels.gemm` schedule, same
+  `gemm_block` body), and absorbed columnwise panel routines splice
+  against the finished tile: element-wise panel epilogues rewrite it
+  in-register, columnwise reductions (`coldot`) fold it into (1, bn)
+  partials accumulated across row blocks. The panel intermediates of a
+  blocked multi-RHS step never touch HBM.
 
 Three modes mirror the paper's evaluation matrix:
   dataflow     — fused groups, on-chip intermediates   ("w/ DF")
@@ -35,11 +45,13 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
-from repro.kernels import gemv as gemv_mod, ops, symv as symv_mod
+from repro.kernels import gemm as gemm_mod, gemv as gemv_mod, ops, \
+    symv as symv_mod
 from repro.kernels.common import (LANES, as_2d, cdiv, default_interpret,
                                   pad_to, pl, pltpu, smem_scalar_spec)
 from repro.kernels.dot import iamax_block
-from repro.kernels.gemv import gemv_block
+from repro.kernels.gemm import gemm_block
+from repro.kernels.gemv import gemv_block, gemvt_block
 from repro.kernels.symv import symv_block
 from repro.tune import config as tile_config
 
@@ -128,7 +140,10 @@ def _standalone_dims(rspec, ins):
         if kind == R.MAT:
             sh = tuple(int(d) for d in ins[port].shape)
             if rspec.blas == "gemm" and len(sh) == 2:
-                sh = (sh[0], sh[1], sh[1])
+                b = ins.get("B")
+                n = (int(b.shape[1]) if getattr(b, "ndim", 0) == 2
+                     else sh[1])
+                sh = (sh[0], n, sh[1])
             return sh
     for port in rdef.inputs:
         v = ins[port]
@@ -229,15 +244,26 @@ def _red_out_specs(graph, sig, index_map):
     return red_specs, red_shapes
 
 
-def _collect_results(graph, sig, outs, length):
+def _collect_results(graph, sig, outs, length, width=None):
     """Unpack a fused kernel's pallas outputs into a {(routine, port):
-    value} map: window outputs are un-padded back to `length`,
-    reductions get their `post` hook (nrm2's sqrt) applied, and
-    index-carrying reductions return the int32 index."""
+    value} map: window outputs are un-padded back to `length` (or
+    `(length, width)` tiles for a 2-D tiled group), columnwise
+    reduction outputs un-pad to `width` columns, plain reductions get
+    their `post` hook (nrm2's sqrt) applied, and index-carrying
+    reductions return the int32 index."""
     results = {}
     for key, o in zip(sig.elt_out_keys, outs[:len(sig.elt_out_keys)]):
-        results[key] = o.reshape(-1)[:length]
+        if width is not None:
+            results[key] = o[:length, :width]
+        else:
+            results[key] = o.reshape(-1)[:length]
     cursor = len(sig.elt_out_keys)
+    for key in getattr(sig, "colred_out_keys", ()):
+        rdef = graph.nodes[key[0]].rdef
+        val = outs[cursor].reshape(-1)[:width]
+        cursor += 1
+        post = rdef.post
+        results[key] = post(val) if post is not None else val
     for key in sig.red_out_keys:
         rdef = graph.nodes[key[0]].rdef
         if rdef.index_reduction:
@@ -473,7 +499,9 @@ def _build_anchored_kernel(graph: DataflowGraph, group: FusionGroup,
         v_refs = refs[ns + nm:ns + nm + nv]
         e_refs = refs[ns + nm + nv:ns + nm + nv + ne]
         r_refs = refs[ns + nm + nv + ne:len(refs) - (0 if single else 1)]
-        acc = None if single else refs[-1]   # (bm, 1) f32 VMEM scratch
+        # (output_block, 1) f32 VMEM scratch: bm rows for gemv/symv,
+        # bn columns of A for gemvt
+        acc = None if single else refs[-1]
         if single:
             i = j = jnp.int32(0)
         else:
@@ -499,6 +527,10 @@ def _build_anchored_kernel(graph: DataflowGraph, group: FusionGroup,
             mirror = mat_refs[0] if single else mat_refs[1]
             contrib = symv_block(mat_refs[0][...], mirror[...],
                                  env[sig.cols_key], i, j)
+        elif blas == "gemvt":
+            # (bm, bn) A window transposed in-register against its
+            # (bm, 1) x window: output tiles run over A's columns
+            contrib = gemvt_block(mat_refs[0][...], env[sig.cols_key])
         else:
             contrib = gemv_block(mat_refs[0][...], env[sig.cols_key])
 
@@ -582,31 +614,41 @@ def make_anchored_callable(graph: DataflowGraph, group: FusionGroup,
         if fn is not None:
             return fn
         mp, np_ = cdiv(m, bm) * bm, cdiv(n, bn) * bn
-        grid = (cdiv(mp, bm), cdiv(np_, bn))
+        # grid axis 0 walks output blocks, axis 1 (innermost) the
+        # reduction axis: rows/cols of A for gemv+symv, transposed
+        # for gemvt (output over A's columns, reduction over rows)
+        if blas == "gemvt":
+            ob, rb = bn, bm
+            grid = (cdiv(np_, bn), cdiv(mp, bm))
+            mat_specs = [pl.BlockSpec((bm, bn), lambda i, j: (j, i))]
+        else:
+            ob, rb = bm, bn
+            grid = (cdiv(mp, bm), cdiv(np_, bn))
+            mat_specs = [pl.BlockSpec((bm, bn), lambda i, j: (i, j))]
 
         win_specs = []
         for key_ in sig.win_in_keys:
             if key_ == sig.cols_key:
                 win_specs.append(
-                    pl.BlockSpec((bn, 1), lambda i, j: (j, 0)))
+                    pl.BlockSpec((rb, 1), lambda i, j: (j, 0)))
             else:
                 win_specs.append(
-                    pl.BlockSpec((bm, 1), lambda i, j: (i, 0)))
+                    pl.BlockSpec((ob, 1), lambda i, j: (i, 0)))
 
         kernel = _build_anchored_kernel(graph, group, sig, dtype,
                                         grid[0], grid[1])
 
-        mat_specs = [pl.BlockSpec((bm, bn), lambda i, j: (i, j))]
         if kernel.nm == 2:
             # mirror window (j, i), transposed
             mat_specs.append(
                 pl.BlockSpec((bn, bm), lambda i, j: (j, i)))
 
-        elt_spec = pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+        elt_spec = pl.BlockSpec((ob, 1), lambda i, j: (i, 0))
         red_specs, red_shapes = _red_out_specs(graph, sig,
                                                lambda i, j: (0, 0))
+        out_rows = np_ if blas == "gemvt" else mp
         out_shapes = (
-            [jax.ShapeDtypeStruct((mp, 1), dtype)
+            [jax.ShapeDtypeStruct((out_rows, 1), dtype)
              for _ in sig.elt_out_keys]
             + red_shapes)
 
@@ -618,7 +660,7 @@ def make_anchored_callable(graph: DataflowGraph, group: FusionGroup,
             out_specs=[elt_spec] * len(sig.elt_out_keys) + red_specs,
             out_shape=out_shapes,
             scratch_shapes=[] if kernel.single
-            else [pltpu.VMEM((bm, 1), jnp.float32)],
+            else [pltpu.VMEM((ob, 1), jnp.float32)],
             interpret=interpret,
         ))
         calls[key] = (fn, kernel.nm)
@@ -651,16 +693,21 @@ def make_anchored_callable(graph: DataflowGraph, group: FusionGroup,
                 max(n, 1))
         ap = pad_to(pad_to(a, bm, axis=0), bn, axis=1)
 
+        # gemvt transposes the roles: its output (and every output-
+        # aligned vector) runs over A's columns, its reduction-axis
+        # operand x over A's rows
+        out_len, red_len = (n, m) if blas == "gemvt" else (m, n)
+        out_blk, red_blk = (bn, bm) if blas == "gemvt" else (bm, bn)
         win_args = []
         for key in sig.win_in_keys:
             v = vec_ins[key]
-            want = n if key == sig.cols_key else m
+            want = red_len if key == sig.cols_key else out_len
             if v.shape[0] != want:
                 raise ValueError(
                     f"anchored group vectors disagree on length: "
                     f"{key} has {v.shape[0]}, the {blas} anchor "
                     f"wants {want}")
-            bv = bn if key == sig.cols_key else bm
+            bv = red_blk if key == sig.cols_key else out_blk
             win_args.append(pad_to(v, bv, axis=0).reshape(-1, 1))
 
         fn, nm = _call_for(m, n, bm, bn)
@@ -668,7 +715,289 @@ def make_anchored_callable(graph: DataflowGraph, group: FusionGroup,
             *[jnp.reshape(scalars[k], (1,)).astype(jnp.float32)
               for k in sig.scalar_keys], *([ap] * nm), *win_args)
         outs = outs if isinstance(outs, (list, tuple)) else [outs]
-        return _collect_results(graph, sig, outs, m)
+        return _collect_results(graph, sig, outs, out_len)
+
+    run.signature = sig
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Level-3 tiled (gemm-anchored) group kernel generation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TiledSignature:
+    """Operand layout of a level-3 gemm-anchored fused kernel.
+    vec_in_keys is the driver-facing set (matrices included, so
+    emit_program's plumbing is identical to the other group shapes);
+    the rest partitions it by window shape."""
+    anchor: str
+    scalar_keys: List[tuple]
+    vec_in_keys: List[tuple]      # all external ins (driver-facing)
+    mat_in_keys: List[tuple]      # member panel ins, (bm, bn) @ (i, jo)
+    col_in_keys: List[tuple]      # member vector ins, (bn, 1) over jo
+    elt_out_keys: List[tuple]     # (bm, bn) output tiles @ (i, jo)
+    colred_out_keys: List[tuple]  # columnwise reductions, (1, bn) @ jo
+    red_out_keys: List[tuple]     # scalar reductions
+    mat_key: tuple                # (anchor, A): (bm, bk) @ (i, k)
+    cols_key: tuple               # (anchor, B): (bk, bn) @ (k, jo)
+    rows_key: tuple               # (anchor, C): (bm, bn) @ (i, jo)
+    post: Tuple[str, ...]         # members spliced at the tile flush
+
+
+def _tiled_signature(graph: DataflowGraph, group: FusionGroup
+                     ) -> TiledSignature:
+    base = _group_signature(graph, group)
+    anchor = group.anchor
+    ports = graph.nodes[anchor].rdef.anchor_ports
+    mat_key = (anchor, ports["mat"])
+    cols_key = (anchor, ports["cols"])
+    rows_key = (anchor, ports["rows"])
+    anchor_keys = {mat_key, cols_key, rows_key}
+    mat_in, col_in = [], []
+    for k in base.vec_in_keys:
+        if k in anchor_keys:
+            continue
+        kind = graph.nodes[k[0]].rdef.inputs[k[1]]
+        (mat_in if kind == R.MAT else col_in).append(k)
+    # columnwise reductions (coldot) have OUT_VEC outputs, which the
+    # base signature files under elt_out; re-split by classification
+    elt_out, colred_out = [], []
+    for k in base.elt_out_keys:
+        if graph.nodes[k[0]].rdef.reduction:
+            colred_out.append(k)
+        else:
+            elt_out.append(k)
+    post = tuple(m for m in group.nodes if m != anchor)
+    return TiledSignature(
+        anchor=anchor, scalar_keys=base.scalar_keys,
+        vec_in_keys=base.vec_in_keys, mat_in_keys=mat_in,
+        col_in_keys=col_in, elt_out_keys=elt_out,
+        colred_out_keys=colred_out, red_out_keys=base.red_out_keys,
+        mat_key=mat_key, cols_key=cols_key, rows_key=rows_key,
+        post=post)
+
+
+def _build_tiled_kernel(graph: DataflowGraph, group: FusionGroup,
+                        sig: TiledSignature, out_dtype,
+                        ni: int, njo: int, nk: int):
+    """Generate the Pallas kernel body for a gemm-anchored group.
+
+    Grid is (ni row tiles, njo col tiles, nk contraction blocks), the
+    contraction axis innermost — the standalone `kernels.gemm`
+    schedule. Per step the (bm, bn) f32 accumulator scratch picks up
+    one `gemm_block` contribution; at the last contraction block the
+    finished tile (alpha·acc + beta·C) feeds the spliced panel
+    emitters: element-wise panel outputs write (bm, bn) tiles back,
+    columnwise reductions fold the tile into (1, bn) partials
+    accumulated across row tiles (seeded at i == 0 by a select, like
+    the 1-D anchored kernel), scalar reductions seed at the first
+    output tile. Member vector operands arrive as (bn, 1) column
+    windows and are presented to the emitters transposed, (1, bn), so
+    the panel broadcast rule (`a * x + y`) matches the reference
+    layout. A single-step (1, 1, 1) grid compiles to straight-line
+    code with no scratch, exactly like the 1-D anchored kernel."""
+    members = set(group.nodes)
+    ns = len(sig.scalar_keys)
+    nmat, ncol = len(sig.mat_in_keys), len(sig.col_in_keys)
+    ne, ncr = len(sig.elt_out_keys), len(sig.colred_out_keys)
+    single = ni == 1 and njo == 1 and nk == 1
+
+    def _is_idx(key):
+        return graph.nodes[key[0]].rdef.index_reduction
+
+    def kernel(*refs):
+        s_refs = refs[:ns]
+        a_ref, b_ref, c_ref = refs[ns], refs[ns + 1], refs[ns + 2]
+        base = ns + 3
+        m_refs = refs[base:base + nmat]
+        v_refs = refs[base + nmat:base + nmat + ncol]
+        base += nmat + ncol
+        e_refs = refs[base:base + ne]
+        cr_refs = refs[base + ne:base + ne + ncr]
+        r_refs = refs[base + ne + ncr:len(refs) - (0 if single else 1)]
+        acc = None if single else refs[-1]  # (bm, bn) f32 VMEM scratch
+        if single:
+            i = jo = k = jnp.int32(0)
+        else:
+            i, jo, k = (pl.program_id(0), pl.program_id(1),
+                        pl.program_id(2))
+
+        red_refs = _red_ref_map(sig, r_refs, _is_idx)
+        scal_env = {key: s_refs[idx][0]
+                    for idx, key in enumerate(sig.scalar_keys)}
+
+        if not single:
+            @pl.when(k == 0)
+            def _init_tile():
+                acc[...] = jnp.zeros_like(acc)
+
+            acc[...] += gemm_block(a_ref[...], b_ref[...])
+
+        def _finish_body():
+            alpha = scal_env[(sig.anchor, "alpha")]
+            beta = scal_env[(sig.anchor, "beta")]
+            contrib = gemm_block(a_ref[...], b_ref[...]) if single \
+                else acc[...]
+            tile = alpha * contrib + beta * c_ref[...].astype(jnp.float32)
+
+            fenv = {}
+            for key, ref_ in zip(sig.mat_in_keys, m_refs):
+                fenv[key] = ref_[...].astype(jnp.float32)
+            for key, ref_ in zip(sig.col_in_keys, v_refs):
+                # (bn, 1) column window presented (1, bn): broadcasts
+                # along the tile's column axis like the (s,) reference
+                fenv[key] = ref_[...].astype(jnp.float32).reshape(1, -1)
+            out_port = next(iter(graph.nodes[sig.anchor].rdef.outputs))
+            for e in graph.consumers_of(sig.anchor, out_port):
+                if e.dst in members:
+                    fenv[(e.dst, e.dst_port)] = tile
+            fenv[(sig.anchor, out_port)] = tile
+            for name in sig.post:
+                _splice_routine(graph, members, name, scal_env, fenv,
+                                idx_step=i)
+
+            for key, ref_ in zip(sig.elt_out_keys, e_refs):
+                ref_[...] = fenv[key].astype(out_dtype)
+            # columnwise reductions accumulate their (1, bn) partial
+            # once per row tile; the i == 0 select seeds each jo block
+            for key, ref_ in zip(sig.colred_out_keys, cr_refs):
+                val = fenv[key].astype(jnp.float32)
+                if single:
+                    ref_[...] = val
+                    continue
+                prev = jnp.where(i == 0, jnp.zeros_like(val), ref_[...])
+                ref_[...] = prev + val
+            for key in sig.red_out_keys:
+                if _is_idx(key):
+                    raise NotImplementedError(
+                        "index reductions cannot ride a tiled group")
+                (r_ref,) = red_refs[key]
+                if single:
+                    r_ref[0, 0] = fenv[key]
+                    continue
+                first = (i == 0) & (jo == 0)
+                prev = jnp.where(first, jnp.float32(0.0), r_ref[0, 0])
+                r_ref[0, 0] = prev + fenv[key]
+
+        if single:
+            _finish_body()
+        else:
+            pl.when(k == nk - 1)(_finish_body)
+
+    kernel.single = single
+    return kernel
+
+
+def make_tiled_callable(graph: DataflowGraph, group: FusionGroup,
+                        dtype, *, interpret=None, tile_resolve=None):
+    """Returns fn(scalars: {(r,s): val}, vec_ins: {(r,p): array}) ->
+    {(r,p): value} for a level-3 gemm-anchored group. vec_ins carries
+    the three anchor matrices under (anchor, A/B/C) alongside the
+    member panels and vectors. `tile_resolve` is a `TilePlan.lookup`
+    resolver overriding the (bm, bn, bk) tile per (m, n, k) bucket."""
+    interpret = default_interpret() if interpret is None else interpret
+    sig = _tiled_signature(graph, group)
+    calls: Dict[tuple, Callable] = {}
+
+    def _call_for(m, n, k, bm, bn, bk):
+        key = (m, n, k, bm, bn, bk)
+        fn = calls.get(key)
+        if fn is not None:
+            return fn
+        mp, np_ = cdiv(m, bm) * bm, cdiv(n, bn) * bn
+        kp = cdiv(k, bk) * bk
+        grid = (cdiv(mp, bm), cdiv(np_, bn), cdiv(kp, bk))
+        kernel = _build_tiled_kernel(graph, group, sig, dtype,
+                                     grid[0], grid[1], grid[2])
+
+        tile_spec = pl.BlockSpec((bm, bn), lambda i, jo, kk: (i, jo))
+        in_specs = (
+            [smem_scalar_spec()] * len(sig.scalar_keys)
+            + [pl.BlockSpec((bm, bk), lambda i, jo, kk: (i, kk)),
+               pl.BlockSpec((bk, bn), lambda i, jo, kk: (kk, jo)),
+               tile_spec]
+            + [tile_spec] * len(sig.mat_in_keys)
+            + [pl.BlockSpec((bn, 1), lambda i, jo, kk: (jo, 0))]
+            * len(sig.col_in_keys))
+        colred_spec = pl.BlockSpec((1, bn), lambda i, jo, kk: (0, jo))
+        red_specs, red_shapes = _red_out_specs(graph, sig,
+                                               lambda i, jo, kk: (0, 0))
+        out_shapes = (
+            [jax.ShapeDtypeStruct((mp, np_), dtype)
+             for _ in sig.elt_out_keys]
+            + [jax.ShapeDtypeStruct((1, np_), jnp.float32)
+               for _ in sig.colred_out_keys]
+            + red_shapes)
+
+        fn = jax.jit(pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[tile_spec] * len(sig.elt_out_keys)
+            + [colred_spec] * len(sig.colred_out_keys) + red_specs,
+            out_shape=out_shapes,
+            scratch_shapes=[] if kernel.single
+            else [pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        ))
+        calls[key] = fn
+        return fn
+
+    def run(scalars, vec_ins):
+        a = vec_ins[sig.mat_key]
+        b = vec_ins[sig.cols_key]
+        c = vec_ins[sig.rows_key]
+        if a.ndim != 2 or b.ndim != 2 or c.ndim != 2:
+            raise ValueError(
+                f"tiled group {sig.anchor!r}: A/B/C must be 2-D, got "
+                f"{a.shape}, {b.shape}, {c.shape}")
+        m, kdim = a.shape
+        n = b.shape[1]
+        if b.shape[0] != kdim or c.shape != (m, n):
+            raise ValueError(
+                f"tiled group {sig.anchor!r}: inconsistent gemm "
+                f"operands A{a.shape} B{b.shape} C{c.shape}")
+        cfg = tile_resolve(m, n, kdim) if tile_resolve is not None \
+            else None
+        bm = min(cfg.block_m if cfg is not None and
+                 cfg.block_m is not None else gemm_mod.DEFAULT_BLOCK_M,
+                 max(m, 1))
+        bn = min(cfg.block_n if cfg is not None and
+                 cfg.block_n is not None else gemm_mod.DEFAULT_BLOCK_N,
+                 max(n, 1))
+        bk = min(cfg.block_k if cfg is not None and
+                 cfg.block_k is not None else gemm_mod.DEFAULT_BLOCK_K,
+                 max(kdim, 1))
+        ap = pad_to(pad_to(a, bm, axis=0), bk, axis=1)
+        bp = pad_to(pad_to(b, bk, axis=0), bn, axis=1)
+        cp = pad_to(pad_to(c, bm, axis=0), bn, axis=1)
+
+        panel_args = []
+        for key in sig.mat_in_keys:
+            v = vec_ins[key]
+            if v.shape != (m, n):
+                raise ValueError(
+                    f"tiled group panels disagree on shape: {key} has "
+                    f"{v.shape}, the {sig.anchor} anchor tiles (m, n)="
+                    f"({m}, {n})")
+            panel_args.append(pad_to(pad_to(v, bm, axis=0), bn, axis=1))
+        col_args = []
+        for key in sig.col_in_keys:
+            v = vec_ins[key]
+            if v.shape[0] != n:
+                raise ValueError(
+                    f"tiled group column vectors disagree on length: "
+                    f"{key} has {v.shape[0]}, want n={n}")
+            col_args.append(pad_to(v, bn, axis=0).reshape(-1, 1))
+
+        outs = _call_for(m, n, kdim, bm, bn, bk)(
+            *[jnp.reshape(scalars[key], (1,)).astype(jnp.float32)
+              for key in sig.scalar_keys],
+            ap, bp, cp, *panel_args, *col_args)
+        outs = outs if isinstance(outs, (list, tuple)) else [outs]
+        return _collect_results(graph, sig, outs, m, width=n)
 
     run.signature = sig
     return run
@@ -703,8 +1032,13 @@ def emit_program(graph: DataflowGraph, groups: List[FusionGroup],
         for gi, g in enumerate(groups):
             if not g.fused:
                 continue
-            make = (make_anchored_callable if g.anchor
-                    else make_group_callable)
+            if g.anchor is None:
+                make = make_group_callable
+            elif R.OUT_MAT in set(
+                    graph.nodes[g.anchor].rdef.outputs.values()):
+                make = make_tiled_callable
+            else:
+                make = make_anchored_callable
             fused_callables[gi] = make(
                 graph, g, dtype, interpret=interpret,
                 tile_resolve=tiles.lookup(f"g{gi}") if tiles else None)

@@ -8,18 +8,28 @@ VMEM/VREGs only. Two group shapes exist:
 * **Level-1 groups** — chains of element-wise producers ending in (or
   fanning into) reductions. These were the original planner's whole
   vocabulary.
-* **Level-2 anchored groups** — a `gemv`/`symv` *anchor* plus adjacent
-  level-1 routines. The anchor's row-blocked output is produced in
-  VMEM and consumed in-register by the spliced level-1 emitters
-  (`symv → dot`, `gemv → axpy → nrm2`), and element-wise producers of
-  the anchor's accumulator operand (`y`) are applied as the row block
-  is initialised — the FBLAS observation that streaming a level-2
-  routine straight into its level-1 neighbours is where the HBM
-  savings of dataflow composition actually live. Producers of the
-  *column-aligned* operand (`x`) are never absorbed: the anchored
-  kernel re-reads x windows once per row block, so fusing an x
-  producer would multiply its input traffic instead of removing a
-  round-trip.
+* **Level-2 anchored groups** — a `gemv`/`symv`/`gemvt` *anchor* plus
+  adjacent level-1 routines. The anchor's blocked output vector is
+  produced in VMEM and consumed in-register by the spliced level-1
+  emitters (`symv → dot`, `gemv → axpy → nrm2`), and element-wise
+  producers of the anchor's accumulator operand (`y`) are applied as
+  the output block is initialised — the FBLAS observation that
+  streaming a level-2 routine straight into its level-1 neighbours is
+  where the HBM savings of dataflow composition actually live.
+  Producers of the *reduction-axis* operand (`x`) are never absorbed:
+  the anchored kernel re-reads x windows once per output block, so
+  fusing an x producer would multiply its input traffic instead of
+  removing a round-trip.
+* **Level-3 tiled groups** — a `gemm` anchor plus columnwise panel
+  routines (`colaxpy`/`coldot`). The anchor's (bm, bn) accumulator
+  tile is finished in VMEM and the panel emitters splice against it:
+  element-wise panel epilogues rewrite the tile in-register and
+  columnwise reductions fold it into (1, bn) partials, so the panel
+  intermediates of a blocked Krylov step never round-trip through
+  HBM. Panel routines fuse ONLY under a gemm anchor — pass 1 skips
+  them, because a panel-only group would have no streamed matrix to
+  tile against — and absorption walks consumer chains transitively
+  (the panel routines start as singletons).
 
 Groups must be *convex* in the DAG (no path that leaves the group and
 re-enters), otherwise the fused kernel would deadlock its own input.
@@ -41,6 +51,20 @@ from typing import List, Optional
 from repro import obs
 
 from .graph import DataflowGraph
+from .routines import MAT, OUT_MAT, RoutineDef
+
+
+def _is_tile(rdef: RoutineDef) -> bool:
+    """Fusable columnwise panel routine (matrix-valued ports): only a
+    2-D (gemm-anchored) group can splice it."""
+    return rdef.fusable and (MAT in set(rdef.inputs.values())
+                             or OUT_MAT in set(rdef.outputs.values()))
+
+
+def _is_2d_anchor(rdef: RoutineDef) -> bool:
+    """Anchor whose output is a matrix tile (gemm) rather than a
+    blocked vector (gemv/symv/gemvt)."""
+    return bool(rdef.anchor) and OUT_MAT in set(rdef.outputs.values())
 
 
 @dataclasses.dataclass
@@ -174,28 +198,59 @@ def _decision(graph, anchor, target, direction, reason):
 
 
 def _absorb_downstream(part, graph, name, anchored):
-    """Absorb level-1 consumer groups of the anchor's output."""
+    """Absorb fusable consumer groups of the anchor's output.
+
+    1-D anchors (gemv/symv/gemvt) look one edge out: pass 1 already
+    grouped level-1 chains, so absorbing the direct consumer brings
+    its whole group. 2-D anchors (gemm) instead walk consumer chains
+    transitively — panel routines are pass-1 singletons — absorbing
+    element-wise panel epilogues and columnwise reduction sinks, which
+    both splice against the (bm, bn) accumulator tile."""
     rdef = graph.nodes[name].rdef
-    for port in rdef.outputs:
-        for e in graph.consumers_of(name, port):
-            cand = part.group(e.dst)
-            if not all(graph.nodes[m].rdef.fusable for m in cand):
-                # contains another level-2/3 routine
-                _decision(graph, name, e.dst, "down",
-                          "member-not-fusable")
-                continue
-            if part.find(e.dst) in anchored:
-                # already streamed by another anchor
-                _decision(graph, name, e.dst, "down",
-                          "already-anchored")
-                continue
-            root = part.try_union(name, e.dst)
-            if root is not None:
-                anchored[root] = name
-                _decision(graph, name, e.dst, "down", None)
-            else:
-                _decision(graph, name, e.dst, "down",
-                          part.reject_reason)
+    two_d = _is_2d_anchor(rdef)
+    frontier = [name]
+    visited = set()
+    while frontier:
+        src = frontier.pop(0)
+        if src in visited:
+            continue
+        visited.add(src)
+        src_def = graph.nodes[src].rdef
+        if src != name and not src_def.eltwise:
+            continue  # reductions are sinks: nothing fuses after them
+        for port in src_def.outputs:
+            for e in graph.consumers_of(src, port):
+                if part.find(e.dst) == part.find(name):
+                    if two_d and e.dst not in visited:
+                        frontier.append(e.dst)
+                    continue
+                cand = part.group(e.dst)
+                if not all(graph.nodes[m].rdef.fusable for m in cand):
+                    # contains another level-2/3 routine
+                    _decision(graph, name, e.dst, "down",
+                              "member-not-fusable")
+                    continue
+                if any(_is_tile(graph.nodes[m].rdef) for m in cand) \
+                        != two_d:
+                    # panel routines fuse only under a gemm anchor,
+                    # and a gemm tile only splices panel routines
+                    _decision(graph, name, e.dst, "down",
+                              "tile-dimension-mismatch")
+                    continue
+                if part.find(e.dst) in anchored:
+                    # already streamed by another anchor
+                    _decision(graph, name, e.dst, "down",
+                              "already-anchored")
+                    continue
+                root = part.try_union(name, e.dst)
+                if root is not None:
+                    anchored[root] = name
+                    _decision(graph, name, e.dst, "down", None)
+                    if two_d:
+                        frontier.append(e.dst)
+                else:
+                    _decision(graph, name, e.dst, "down",
+                              part.reject_reason)
 
 
 def _absorb_upstream(part, graph, name, anchored):
@@ -207,6 +262,10 @@ def _absorb_upstream(part, graph, name, anchored):
     feeding the column-aligned port would need (bn, 1) windows the
     row-phase emitters cannot produce)."""
     rdef = graph.nodes[name].rdef
+    if _is_2d_anchor(rdef):
+        # no row phase in the tiled emitter: the C operand initialises
+        # the (bm, bn) accumulator directly at the flush step
+        return
     rows_port = rdef.anchor_ports["rows"]
     e = graph.producer_of(name, rows_port)
     if e is None:
@@ -259,6 +318,11 @@ def plan(graph: DataflowGraph, *, enable: bool = True,
                 continue
             if not src_def.eltwise:
                 continue  # reductions are sinks: nothing fuses after them
+            if _is_tile(src_def) or _is_tile(dst_def):
+                # panel routines fuse only under a gemm anchor: a
+                # panel-only group has no streamed matrix to tile
+                # against, so the level-1 emitter cannot run it
+                continue
             part.try_union(e.src, e.dst)
 
         # pass 2: level-2 anchors absorb adjacent level-1 groups. Topo

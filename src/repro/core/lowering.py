@@ -432,6 +432,7 @@ def _stack_kind(of: str) -> str:
 
 # what a read along the leading axis of each env-value kind yields
 _READ_KINDS = {
+    "matrix-stack": "matrix",
     "vector-stack": "vector",
     "scalar-stack": "scalar",
     "matrix": "vector",
@@ -484,35 +485,54 @@ def _state_kinds(state_fields, env_kinds, where_prefix, sink=None):
     for f in state_fields:
         where = f"{where_prefix}.{f.name}"
         if f.is_stack:
+            # matrix-element mismatches fire RV504 (matrix state shape
+            # mismatch) so blocked-solver spec bugs are distinguishable
+            # from the generic vector/scalar kind errors (RV208)
             if f.slot0 is not None and _no_forward_ref(
                     f.slot0, env_kinds, f"{where}.init.slot0", sink):
                 if env_kinds[f.slot0] not in (f.of, _UNKNOWN):
+                    matrixy = f.of == "matrix" or \
+                        env_kinds[f.slot0] == "matrix"
                     spec_error(
                         sink,
                         f"{where}.init.slot0: {f.slot0!r} is a "
                         f"{env_kinds[f.slot0]}, but the stack holds "
                         f"{f.of} slots",
-                        code="RV208", path=f"{where}.init.slot0")
+                        code="RV504" if matrixy else "RV208",
+                        path=f"{where}.init.slot0")
             if f.like is not None and _no_forward_ref(
                     f.like, env_kinds, f"{where}.like", sink):
-                if env_kinds[f.like] not in ("vector", _UNKNOWN):
+                want_like = "matrix" if f.of == "matrix" else "vector"
+                if env_kinds[f.like] not in (want_like, _UNKNOWN):
+                    matrixy = f.of == "matrix" or \
+                        env_kinds[f.like] == "matrix"
                     spec_error(
                         sink,
                         f"{where}.like: {f.like!r} is a "
-                        f"{env_kinds[f.like]}; the element-length "
-                        f"prototype must be a vector",
-                        code="RV208", path=f"{where}.like")
+                        f"{env_kinds[f.like]}; the element-shape "
+                        f"prototype of a {f.of} stack must be a "
+                        f"{want_like}",
+                        code="RV504" if matrixy else "RV208",
+                        path=f"{where}.like")
             if f.source is not None and _no_forward_ref(
                     f.source, env_kinds, f"{where}.init.from", sink):
-                want = (("matrix", "vector-stack") if f.of == "vector"
-                        else ("vector", "scalar-stack"))
+                if f.of == "vector":
+                    want = ("matrix", "vector-stack")
+                elif f.of == "matrix":
+                    want = ("matrix-stack",)
+                else:
+                    want = ("vector", "scalar-stack")
                 if env_kinds[f.source] not in want + (_UNKNOWN,):
+                    matrixy = f.of == "matrix" or \
+                        env_kinds[f.source] in ("matrix",
+                                                "matrix-stack")
                     spec_error(
                         sink,
                         f"{where}.init.from: {f.source!r} is a "
                         f"{env_kinds[f.source]}; a {f.of} stack "
                         f"adopts a {' or '.join(want)} buffer",
-                        code="RV208", path=f"{where}.init.from")
+                        code="RV504" if matrixy else "RV208",
+                        path=f"{where}.init.from")
             out[f.name] = _stack_kind(f.of)
             continue
         bare = f.init.bare_name
@@ -870,11 +890,12 @@ def _lower_inner_loop(st: InnerLoopStage, kinds, produced, where, *,
             continue
         if inner_kinds[src] != skinds[fname] \
                 and _UNKNOWN not in (inner_kinds[src], skinds[fname]):
+            matrixy = "matrix" in (inner_kinds[src], skinds[fname])
             spec_error(
                 sink,
                 f"{fwhere}: cannot feed a {inner_kinds[src]} back "
                 f"into {skinds[fname]} state field {fname!r}",
-                code="RV208", path=fwhere)
+                code="RV504" if matrixy else "RV208", path=fwhere)
 
     stop = st.stop
     if isinstance(stop, CountRule):
@@ -987,11 +1008,13 @@ def lower_loop(raw, *, mode: str = "dataflow",
         if body_env[src] != state_kinds.get(fname, _UNKNOWN) \
                 and _UNKNOWN not in (body_env[src],
                                      state_kinds.get(fname, _UNKNOWN)):
+            matrixy = "matrix" in (body_env[src],
+                                   state_kinds.get(fname, _UNKNOWN))
             spec_error(
                 sink,
                 f"{where}: cannot feed a {body_env[src]} back into "
                 f"{state_kinds[fname]} state field {fname!r}",
-                code="RV208", path=where)
+                code="RV504" if matrixy else "RV208", path=where)
 
     stop = lspec.stop
     if stop.metric not in produced:
@@ -1062,10 +1085,11 @@ def _check_guards(guards, body_env, produced, sink) -> None:
                 f"scalars like p'Ap or rho)",
                 code="RV501", path=where,
                 hint="watch a scalar the body computes each iteration")
-        elif body_env[b.value] not in ("scalar", _UNKNOWN):
+        elif body_env[b.value] not in ("scalar", "vector", _UNKNOWN):
             spec_error(
                 sink,
                 f"{where}: {b.value!r} is a {body_env[b.value]}, "
-                f"not a scalar",
+                f"not a scalar or vector",
                 code="RV502", path=where,
-                hint="breakdown guards compare |scalar| < below")
+                hint="breakdown guards trip when any |entry| < below "
+                     "(a vector gives one sentinel per right-hand side)")

@@ -39,13 +39,16 @@ class RoutineDef:
     # index-carrying reduction (iamax): the generated kernel tracks a
     # (running max, flat index) pair instead of a sum accumulator
     index_reduction: bool = False
-    # level-2 streaming anchor (gemv/symv): the routine can anchor a
-    # mixed-level fusion group whose level-1 neighbours consume (or
-    # produce) its row-blocked output vector on-chip. `anchor_ports`
-    # names the roles the anchored-kernel generator tiles against:
-    #   mat  — the streamed matrix operand ((bm, bn) windows)
-    #   cols — the column-aligned vector ((bn, 1) windows, grid dim j)
-    #   rows — the row-aligned accumulator vector ((bm, 1), grid dim i)
+    # streaming anchor (gemv/symv/gemvt/gemm): the routine can anchor a
+    # mixed-level fusion group whose fusable neighbours consume (or
+    # produce) its blocked output on-chip. `anchor_ports` names the
+    # roles the anchored-kernel generator tiles against:
+    #   mat  — the streamed matrix operand ((bm, bn)/(bm, bk) windows)
+    #   cols — the reduction-axis operand: the column-aligned vector
+    #          for gemv/symv, x for gemvt (length m), B for gemm
+    #          ((bk, bn) windows walked along the contraction axis)
+    #   rows — the output-aligned accumulator operand: y for
+    #          gemv/symv/gemvt, C for gemm ((bm, bn) output tiles)
     anchor: bool = False
     anchor_ports: Optional[Mapping[str, str]] = None
     # codegen hooks
@@ -250,9 +253,11 @@ register(RoutineDef(
 register(RoutineDef(
     name="gemvt", level=2, scalars=("alpha", "beta"),
     inputs={"A": MAT, "x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
-    # no anchored tier yet: the transposed schedule tiles the OUTPUT
-    # over A's columns, which the anchored emitter's (bm, 1) row
-    # blocks do not cover — see ROADMAP
+    # anchored tier: output tiles over A's columns, reduction over A's
+    # row blocks — x is the reduction-axis ("cols") operand (length m)
+    # and y the output-aligned ("rows") accumulator (length n)
+    anchor=True,
+    anchor_ports={"mat": "A", "cols": "x", "rows": "y"},
     kernel=lambda alpha, A, x, beta, y, **kw: ops.gemvt(
         alpha, A, x, beta, y, **kw),
     reference=lambda s, A, x, y: ref.gemvt(s["alpha"], A, x,
@@ -282,9 +287,65 @@ register(RoutineDef(
 register(RoutineDef(
     name="gemm", level=3, scalars=("alpha", "beta"),
     inputs={"A": MAT, "B": MAT, "C": MAT}, outputs={"out": OUT_MAT},
+    # level-3 anchor: 2-D (bm, bn) output tiles with a (bk,) contraction
+    # walk — B is the reduction-axis ("cols") operand and C the
+    # output-tile-aligned ("rows") accumulator
+    anchor=True,
+    anchor_ports={"mat": "A", "cols": "B", "rows": "C"},
     kernel=lambda alpha, A, B, beta, C, **kw: ops.gemm(
         alpha, A, B, beta, C, **kw),
     reference=lambda s, A, B, C: ref.gemm(s["alpha"], A, B, s["beta"], C),
     cost=lambda sh: (2 * sh["A"][0] * sh["A"][1] * sh["B"][1],
                      _vbytes(sh["A"], sh["B"], sh["C"], sh["C"])),
+))
+
+# ---------------------------------------------------------------------------
+# Level 1 — columnwise (panel) routines for blocked multi-RHS algorithms.
+# These act on (n, s) panels: s independent length-n vectors sharing one
+# stream. They have no standalone Pallas kernel (the jnp reference runs
+# in every mode); their emitters exist so a gemm-anchored 2-D tile group
+# can splice them against its (bm, bn) accumulator tile.
+# ---------------------------------------------------------------------------
+
+register(RoutineDef(
+    name="coldot", level=1, scalars=(),
+    inputs={"x": MAT, "y": MAT}, outputs={"out": OUT_VEC},
+    reduction=True,
+    # tile layout: (bm, bn) windows reduce along rows into a (1, bn)
+    # partial that the tiled anchored kernel accumulates across i
+    emitter=lambda s, x, y: jnp.sum(x * y, axis=0, keepdims=True),
+    reference=lambda s, x, y: jnp.sum(x * y, axis=0),
+    cost=lambda sh: (2 * sh["x"][0] * sh["x"][1],
+                     _vbytes(sh["x"], sh["y"], (sh["x"][1],))),
+))
+
+register(RoutineDef(
+    name="colaxpy", level=1, scalars=(),
+    inputs={"a": VEC, "x": MAT, "y": MAT}, outputs={"out": OUT_MAT},
+    eltwise=True,
+    # a broadcasts along the trailing (column) axis in both layouts:
+    # (s,)·(n, s) in the reference, (1, bn)·(bm, bn) in a tile group
+    emitter=lambda s, a, x, y: a * x + y,
+    reference=lambda s, a, x, y: a * x + y,
+    cost=lambda sh: (2 * sh["x"][0] * sh["x"][1],
+                     _vbytes(sh["a"], sh["x"], sh["y"], sh["x"])),
+))
+
+register(RoutineDef(
+    name="vdiv", level=1, scalars=(),
+    inputs={"x": VEC, "y": VEC}, outputs={"out": OUT_VEC},
+    eltwise=True,
+    emitter=lambda s, x, y: x / y,
+    reference=lambda s, x, y: x / y,
+    cost=lambda sh: (sh["x"][0], _vbytes(sh["x"], sh["y"], sh["x"])),
+))
+
+register(RoutineDef(
+    name="amax", level=1, scalars=(),
+    inputs={"x": VEC}, outputs={"out": OUT_SCALAR},
+    # deliberately NOT marked `reduction`: the fused-kernel generator's
+    # cross-block accumulator is additive, which would mis-combine a
+    # max — amax always runs standalone (jnp reference in every mode)
+    reference=lambda s, x: jnp.max(jnp.abs(x)),
+    cost=lambda sh: (2 * sh["x"][0], _vbytes(sh["x"])),
 ))

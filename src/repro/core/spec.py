@@ -498,14 +498,16 @@ class StateField:
     `dynamic_slice`/`dynamic_update_slice`. Element length of a vector
     stack comes from `length` (static), `like`/`slot0` (a prototype
     vector in scope), or `source` (adopt a whole `(slots, ...)` buffer
-    from an env value). Stack fields feed back automatically — the
-    buffer as mutated by the iteration's stores is the next carry."""
+    from an env value); a matrix stack (panel history for blocked
+    solvers) fixes its element shape from `like`/`slot0`/`source`
+    only. Stack fields feed back automatically — the buffer as
+    mutated by the iteration's stores is the next carry."""
     name: str
     init: Optional[Expr] = None
     kind: Optional[str] = None   # declared kind; inferred when None
     # stack fields only
     slots: Optional[int] = None
-    of: Optional[str] = None         # element kind: vector | scalar
+    of: Optional[str] = None     # element kind: vector | matrix | scalar
     length: Optional[int] = None     # static element length (vectors)
     like: Optional[str] = None       # element-length prototype value
     slot0: Optional[str] = None      # env value stored at slot 0
@@ -855,10 +857,10 @@ def _parse_state_field(sname, sraw, where) -> StateField:
                 f"{where}.slots: a stack needs a static positive slot "
                 f"count, got {slots!r}")
         of = sraw.get("of")
-        if of not in ("vector", "scalar"):
+        if of not in ("vector", "matrix", "scalar"):
             raise SpecError(
-                f"{where}.of: stack element kind must be 'vector' or "
-                f"'scalar', got {of!r}")
+                f"{where}.of: stack element kind must be 'vector', "
+                f"'matrix' or 'scalar', got {of!r}")
         length = sraw.get("len")
         if length is not None and (not isinstance(length, int)
                                    or isinstance(length, bool)
@@ -873,6 +875,11 @@ def _parse_state_field(sname, sraw, where) -> StateField:
             raise SpecError(
                 f"{where}: 'len'/'like' only apply to vector stacks "
                 f"(scalar slots have no element length)")
+        if of == "matrix" and length is not None:
+            raise SpecError(
+                f"{where}: a matrix stack has a 2-D element shape — "
+                f"use 'like', 'init.slot0' or 'init.from' instead of "
+                f"'len'")
         slot0 = source = None
         init = sraw.get("init")
         if init is not None:
@@ -901,6 +908,11 @@ def _parse_state_field(sname, sraw, where) -> StateField:
                 f"{where}: a vector stack needs 'len', 'like', "
                 f"'init.slot0' or 'init.from' to fix its element "
                 f"length")
+        if of == "matrix" and like is None and slot0 is None \
+                and source is None:
+            raise SpecError(
+                f"{where}: a matrix stack needs 'like', 'init.slot0' "
+                f"or 'init.from' to fix its element shape")
         return StateField(name=sname, kind="stack", slots=slots,
                           of=of, length=length, like=like,
                           slot0=slot0, source=source)

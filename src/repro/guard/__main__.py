@@ -21,33 +21,40 @@ import time
 DETECTION_SLACK = 2    # guards must trip within this many iterations
 
 # fault target prefix + injection iteration per solver: the target is
-# the stage-program name prefix (BiCGStab's stages are `bicg_*`);
-# GMRES counts restarts and converges within ~2, so it gets poked
-# earlier than the linear-iteration solvers
+# the stage-program name prefix (BiCGStab's stages are `bicg_*`,
+# block-CG's body stages are `block_cg_*`); GMRES counts restarts and
+# converges within ~2, so it gets poked earlier than the
+# linear-iteration solvers
 TARGETS = {"cg": ("cg", 3), "bicgstab": ("bicg", 3),
-           "jacobi": ("jacobi", 3), "gmres": ("gmres", 1)}
+           "jacobi": ("jacobi", 3), "gmres": ("gmres", 1),
+           "block_cg": ("block_cg", 3)}
 
 
 def _case_matrix():
     from repro.guard import chaos
 
     cases = []
-    for solver in ("cg", "bicgstab", "jacobi", "gmres"):
+    for solver in ("cg", "bicgstab", "jacobi", "gmres", "block_cg"):
         for kind in chaos.FAULT_KINDS:
             cases.append((solver, kind, {}))
         # scale by 0 zeroes the guarded scalars -> breakdown sentinel
-        # (only CG/BiCGStab carry breakdown guards)
-        if solver in ("cg", "bicgstab"):
+        # (only CG/BiCGStab/block-CG carry breakdown guards; block-CG's
+        # sentinel is the per-RHS Gram diagonal, so zeroing it must
+        # trip on the whole panel)
+        if solver in ("cg", "bicgstab", "block_cg"):
             cases.append((solver, "scale", {"factor": 0.0}))
     return cases
 
 
-def _system(n: int = 24, seed: int = 0):
+def _system(n: int = 24, seed: int = 0, rhs: int = 0):
+    """SPD system; ``rhs > 0`` returns an (n, rhs) right-hand-side
+    panel (one column per system) instead of a vector."""
     import numpy as np
     rng = np.random.default_rng(seed)
     m = rng.standard_normal((n, n)).astype(np.float32)
     a = (m @ m.T + n * np.eye(n, dtype=np.float32))
-    b = rng.standard_normal(n).astype(np.float32)
+    shape = (n, rhs) if rhs else (n,)
+    b = rng.standard_normal(shape).astype(np.float32)
     return a, b
 
 
@@ -55,7 +62,8 @@ def _compile_faulted(solver, plan, interpret):
     from repro import blas
     from repro.solvers import specs
     raw = {"cg": specs.CG_LOOP, "bicgstab": specs.BICGSTAB_LOOP,
-           "jacobi": specs.JACOBI_LOOP}.get(solver)
+           "jacobi": specs.JACOBI_LOOP,
+           "block_cg": specs.BLOCK_CG_LOOP}.get(solver)
     kw = {"max_iters": 100}
     if raw is None:
         raw, kw = specs.gmres_loop(8), {}
@@ -71,7 +79,8 @@ def _run_cell(solver, kind, extra, *, interpret):
     from repro.guard import chaos
     from repro.guard import status as ST
 
-    a, b = _system()
+    # block-CG drills a 3-column RHS panel; everything else a vector
+    a, b = _system(rhs=3 if solver == "block_cg" else 0)
     target, inject_at = TARGETS[solver]
     plan = chaos.FaultPlan(program=target, kind=kind,
                            iteration=inject_at, **extra)
@@ -80,7 +89,10 @@ def _run_cell(solver, kind, extra, *, interpret):
     t0 = time.perf_counter()
     try:
         exe = _compile_faulted(solver, plan, interpret)
-        inputs = {"A": a, "b": b, "x0": jnp.zeros_like(b)}
+        if solver == "block_cg":
+            inputs = {"A": a, "B": b, "x0": jnp.zeros_like(b)}
+        else:
+            inputs = {"A": a, "b": b, "x0": jnp.zeros_like(b)}
         if solver == "jacobi":
             from repro.solvers import iterative
             inputs["dinv"] = iterative.jacobi_dinv(a, b.dtype)

@@ -7,6 +7,11 @@ fallback ladder:
     retry-with-restart  ->  switch solver (CG -> BiCGStab -> GMRES)
         ->  float64 dense direct solve (numpy, last resort)
 
+A matrix right-hand side (``b.ndim == 2``, one column per system) is
+handled by the same ladder with a panel-capable default chain
+(``block_cg`` -> float64 dense direct, which numpy solves column-wise
+natively).
+
 `solve_with_policy` runs the ladder under an `EscalationPolicy`:
 bounded attempts, optional backoff between rungs, a
 `ft.StragglerWatchdog` around each attempt's wall clock, and a
@@ -79,7 +84,7 @@ class EscalationPolicy:
                 "EscalationPolicy.chain must name at least one solver")
         if self.max_attempts < 1:
             raise ValueError("EscalationPolicy.max_attempts must be >= 1")
-        known = {"cg", "bicgstab", "gmres", "jacobi"}
+        known = {"cg", "bicgstab", "gmres", "jacobi", "block_cg"}
         bad = [s for s in self.chain if s not in known]
         if bad:
             raise ValueError(
@@ -106,7 +111,7 @@ def _run_iterative(solver, A, b, x0, *, tol, max_iters, mode,
             return bs.gmres(A, b, x0, tol=tol, mode=mode,
                             interpret=interpret)
         fn = {"cg": bs.cg, "bicgstab": bs.bicgstab,
-              "jacobi": bs.jacobi}[solver]
+              "jacobi": bs.jacobi, "block_cg": bs.block_cg}[solver]
         return fn(A, b, x0, tol=tol, max_iters=max_iters, mode=mode,
                   interpret=interpret)
 
@@ -122,14 +127,18 @@ def _run_iterative(solver, A, b, x0, *, tol, max_iters, mode,
         raw, kw = specs.CG_LOOP, {"max_iters": max_iters}
     elif solver == "bicgstab":
         raw, kw = specs.BICGSTAB_LOOP, {"max_iters": max_iters}
+    elif solver == "block_cg":
+        raw, kw = specs.BLOCK_CG_LOOP, {"max_iters": max_iters}
     else:
         raise ValueError(
-            f"fault injection supports cg/bicgstab/gmres, not "
-            f"{solver!r}")
+            f"fault injection supports cg/bicgstab/gmres/block_cg, "
+            f"not {solver!r}")
     exe = bexe.compile(raw, mode=mode, interpret=interpret,
                        fault=fault, **kw)
     if x0 is None:
         x0 = jnp.zeros_like(b)
+    if solver == "block_cg":
+        return exe.run(A=A, B=b, x0=x0, tol=tol)
     return exe.run(A=A, b=b, x0=x0, tol=tol)
 
 
@@ -179,8 +188,19 @@ def solve_with_policy(A, b, x0=None, *, tol: float = 1e-6,
 
     from repro.ft.watchdog import StragglerWatchdog
 
+    # A matrix RHS (one column per system) needs panel-capable rungs:
+    # block-CG first, then the dense f64 rung (numpy solves a 2-D b
+    # column-wise natively). The vector chain stays the default.
+    panel = getattr(np.asarray(b), "ndim", 1) == 2
     if policy is None:
-        policy = EscalationPolicy()
+        policy = (EscalationPolicy(chain=("block_cg",)) if panel
+                  else EscalationPolicy())
+    if panel:
+        bad = [s for s in policy.chain if s != "block_cg"]
+        if bad:
+            raise ValueError(
+                f"matrix right-hand sides need panel-capable solvers; "
+                f"chain has {bad} (only 'block_cg' handles a 2-D b)")
     watchdog = StragglerWatchdog(threshold=policy.straggler_threshold,
                                  min_samples=2)
     attempts: list = []

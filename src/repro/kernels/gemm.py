@@ -20,6 +20,16 @@ DEFAULT_BLOCK_N = 256
 DEFAULT_BLOCK_K = 256
 
 
+def gemm_block(a_block, b_block):
+    """f32 contribution of one (bm, bk) A window against its (bk, bn) B
+    window — one MXU pass. Factored out so the standalone kernel below
+    and the tiled anchored-kernel generator (core.codegen) splice the
+    exact same block body."""
+    return jnp.dot(a_block.astype(jnp.float32),
+                   b_block.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
 def _gemm_kernel(alpha_ref, beta_ref, a_ref, b_ref, c_ref, o_ref, acc_ref):
     k = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -28,11 +38,7 @@ def _gemm_kernel(alpha_ref, beta_ref, a_ref, b_ref, c_ref, o_ref, acc_ref):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(
-        a_ref[...].astype(jnp.float32),
-        b_ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
+    acc_ref[...] += gemm_block(a_ref[...], b_ref[...])
 
     @pl.when(k == nk - 1)
     def _flush():

@@ -75,6 +75,17 @@ def gemv(alpha, a, x, beta, y, *, block_m=DEFAULT_BLOCK_M,
     return out[:m, 0].astype(a.dtype)
 
 
+def gemvt_block(a_block, x_block):
+    """f32 contribution of one (bm, bn) A window, transposed
+    in-register, against its (bm, 1) x window — one MXU inner product
+    per A-row block, accumulating into a (bn, 1) output. Factored out
+    for the same reason as `gemv_block`: the anchored fused-kernel
+    generator splices this exact block body."""
+    return jnp.dot(a_block.astype(jnp.float32).T,
+                   x_block.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
 def _gemvt_kernel(alpha_ref, beta_ref, a_ref, x_ref, y_ref, o_ref):
     j = pl.program_id(1)
 
@@ -82,12 +93,7 @@ def _gemvt_kernel(alpha_ref, beta_ref, a_ref, x_ref, y_ref, o_ref):
     def _init():
         o_ref[...] = beta_ref[0] * y_ref[...].astype(jnp.float32)
 
-    # the (bm, bn) window is transposed in-register: one MXU inner
-    # product per A-row block, accumulating into the (bn, 1) output
-    o_ref[...] += alpha_ref[0] * jnp.dot(
-        a_ref[...].astype(jnp.float32).T,
-        x_ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32)
+    o_ref[...] += alpha_ref[0] * gemvt_block(a_ref[...], x_ref[...])
 
 
 @functools.partial(

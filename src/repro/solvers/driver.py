@@ -542,13 +542,14 @@ class LoopProgram(SolverProgram):
             return buf
         if f.of == "scalar":
             buf = jnp.zeros((f.slots,), dtype)
+        elif f.length is not None:
+            buf = jnp.zeros((f.slots, f.length), dtype)
         else:
-            if f.length is not None:
-                length = f.length
-            else:
-                proto = f.like if f.like is not None else f.slot0
-                length = env[proto].shape[0]
-            buf = jnp.zeros((f.slots, length), dtype)
+            # element shape adopted from the prototype: (n,) for a
+            # vector stack, (n, s) for a matrix stack
+            proto = f.like if f.like is not None else f.slot0
+            buf = jnp.zeros((f.slots,) + tuple(env[proto].shape),
+                            dtype)
         if f.slot0 is not None:
             buf = buf.at[0].set(jnp.asarray(env[f.slot0], dtype))
         return buf
@@ -619,14 +620,19 @@ class LoopProgram(SolverProgram):
         lspec = self.lir.lspec
         g = lspec.guards
         fault = jnp.int8(ST.RUNNING)
-        for bg in g.breakdown:
-            trip = jnp.abs(jnp.asarray(env[bg.value],
-                                       jnp.float32)) < bg.below
-            fault = jnp.where(trip, jnp.int8(ST.BREAKDOWN), fault)
         for name in g.nonfinite:
             ok = jnp.all(jnp.isfinite(
                 jnp.asarray(env[name], jnp.float32)))
             fault = jnp.where(ok, fault, jnp.int8(ST.NONFINITE))
+        for bg in g.breakdown:
+            # vector sentinels (one entry per right-hand side, as in
+            # block-CG's Gram diagonal) trip if ANY entry collapses.
+            # Checked last so BREAKDOWN (the root cause) outranks
+            # NONFINITE (its downstream symptom) when a collapsed
+            # denominator has already poisoned the iterate.
+            trip = jnp.any(jnp.abs(jnp.asarray(env[bg.value],
+                                               jnp.float32)) < bg.below)
+            fault = jnp.where(trip, jnp.int8(ST.BREAKDOWN), fault)
         return (self._next_state(lspec, state, env),
                 env[lspec.stop.metric], fault)
 

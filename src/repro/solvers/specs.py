@@ -1,6 +1,6 @@
 """ProgramSpec JSON for every solver iteration body — plus whole
 solvers as JSON loop specs (CG_LOOP / JACOBI_LOOP / BICGSTAB_LOOP /
-GMRES_LOOP at the bottom).
+GMRES_LOOP / BLOCK_CG_LOOP at the bottom).
 
 Each spec below is a plain AIEBLAS-style JSON dict assembled from
 registry routines (gemv/gemvt/dot/axpy/vsub/vmul/scal/waxpby/nrm2/rot/
@@ -639,3 +639,136 @@ def gmres_loop(m: int = 20, *, rtol: float = 1e-6,
 
 
 GMRES_LOOP = gmres_loop()
+
+
+# --------------------------------------------------------------------
+# Block conjugate gradient: s independent CG recurrences over an
+# (n, s) right-hand-side panel sharing one gemm matvec per iteration.
+# The per-RHS dot products travel as length-s vectors (coldot), the
+# per-RHS step lengths as vdiv quotients, and the stop metric
+# collapses to a scalar with amax (the worst column governs). The
+# iterates are column-for-column identical to running CG_LOOP on each
+# right-hand side, so parity against per-column solves is exact up to
+# kernel arithmetic order.
+# --------------------------------------------------------------------
+
+# bb = diag(BᵀB) ; bbmax = max_j bb_j      (scale for the stop rule)
+BLOCK_NRM2 = {
+    "name": "block_nrm2",
+    "routines": [
+        {"blas": "coldot", "name": "bb",
+         "inputs": {"x": "X", "y": "X"},
+         "connections": {"out": "mx.x"}, "outputs": {"out": "bb"}},
+        {"blas": "amax", "name": "mx", "outputs": {"out": "bbmax"}},
+    ],
+}
+
+# R0 = B - A X ; rz0 = diag(R0ᵀR0) ; rz0max     (gemm → coldot fuse:
+# the residual panel feeds its Gram diagonal on-chip, tile by tile)
+BLOCK_RESIDUAL = {
+    "name": "block_residual",
+    "routines": [
+        {"blas": "gemm", "name": "resid",
+         "scalars": {"alpha": -1.0, "beta": 1.0},
+         "inputs": {"A": "A", "B": "X", "C": "B"},
+         "connections": {"out": ["rz.x", "rz.y"]},
+         "outputs": {"out": "r0"}},
+        {"blas": "coldot", "name": "rz",
+         "connections": {"out": "mx.x"}, "outputs": {"out": "rz0"}},
+        {"blas": "amax", "name": "mx", "outputs": {"out": "rz0max"}},
+    ],
+}
+
+# Q = A P ; pq = diag(PᵀQ)      (the gemm-anchored fused group: coldot
+# folds each (bm, bn) product tile into its (1, bn) partial on-chip,
+# so Q never round-trips through HBM before the Gram diagonal)
+BLOCK_CG_MATVEC = {
+    "name": "block_cg_matvec",
+    "routines": [
+        {"blas": "gemm", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "B": "P", "C": "P"},
+         "connections": {"out": "pq.y"}, "outputs": {"out": "q"}},
+        {"blas": "coldot", "name": "pq", "inputs": {"x": "P"},
+         "outputs": {"out": "pq"}},
+    ],
+}
+
+# alpha = rz / pq (per column) ; X' = X + P diag(alpha) ;
+# R' = R - Q diag(alpha) ; rz' = diag(R'ᵀR') ; rzmax = max_j rz'_j
+BLOCK_CG_UPDATE = {
+    "name": "block_cg_update",
+    "routines": [
+        {"blas": "vdiv", "name": "al",
+         "inputs": {"x": "rz", "y": "pq"},
+         "connections": {"out": ["xup.a", "nal.x"]}},
+        {"blas": "scal", "name": "nal", "scalars": {"alpha": -1.0},
+         "connections": {"out": "rup.a"}},
+        {"blas": "colaxpy", "name": "xup",
+         "inputs": {"x": "P", "y": "X"}, "outputs": {"out": "x_next"}},
+        {"blas": "colaxpy", "name": "rup",
+         "inputs": {"x": "Q", "y": "R"},
+         "connections": {"out": ["rz2.x", "rz2.y"]},
+         "outputs": {"out": "r_next"}},
+        {"blas": "coldot", "name": "rz2",
+         "connections": {"out": "mx.x"}, "outputs": {"out": "rz_next"}},
+        {"blas": "amax", "name": "mx", "outputs": {"out": "rzmax"}},
+    ],
+}
+
+# beta = rz' / rz (per column) ; P' = R' + P diag(beta)
+BLOCK_CG_PUPDATE = {
+    "name": "block_cg_pupdate",
+    "routines": [
+        {"blas": "vdiv", "name": "bt",
+         "inputs": {"x": "rz_next", "y": "rz"},
+         "connections": {"out": "pup.a"}},
+        {"blas": "colaxpy", "name": "pup",
+         "inputs": {"x": "P", "y": "R"}, "outputs": {"out": "p_next"}},
+    ],
+}
+
+BLOCK_CG_LOOP = {
+    "name": "block_cg",
+    "dtype": "float32",
+    "operands": {"A": "matrix", "B": "matrix", "x0": "matrix"},
+    "setup": [
+        {"program": BLOCK_NRM2, "inputs": {"X": "B"},
+         "outputs": {"bbmax": "bbmax"}},
+        {"let": {"bnorm": "sqrt(bbmax)"}},
+        {"program": BLOCK_RESIDUAL, "inputs": {"X": "x0"},
+         "outputs": {"r0": "r0", "rz0": "rz0", "rz0max": "rz0max"}},
+        {"let": {"rnorm0": "sqrt(rz0max)"}},
+    ],
+    "iterate": {
+        "state": {
+            "x": {"init": "x0"},
+            "r": {"init": "r0"},
+            "p": {"init": "r0"},
+            "rz": {"init": "rz0"},   # length-s vector: diag(RᵀR)
+        },
+        "body": [
+            {"program": BLOCK_CG_MATVEC, "inputs": {"P": "p"}},
+            {"program": BLOCK_CG_UPDATE,
+             "inputs": {"P": "p", "X": "x", "Q": "q", "R": "r"}},
+            {"let": {"rnorm": "sqrt(rzmax)"}},
+            {"program": BLOCK_CG_PUPDATE,
+             "inputs": {"P": "p", "R": "r_next"}},
+        ],
+        "feedback": {
+            "x": "x_next", "r": "r_next", "p": "p_next",
+            "rz": "rz_next",           # vector feedback edge
+        },
+        "while": {"metric": "rnorm", "init": "rnorm0", "scale": "bnorm",
+                  "rtol": 1e-6, "max_iters": 200},
+        # pq is a per-right-hand-side sentinel: any column's p'Ap
+        # collapsing is a (block-)Krylov breakdown for that column
+        "guards": {
+            "nonfinite": ["x_next"],
+            "breakdown": [{"value": "pq", "below": 1e-30}],
+            "divergence": {"factor": 1e4},
+            "stagnation": {"window": 50},
+        },
+        "solution": {"x": "x"},
+    },
+}

@@ -155,13 +155,29 @@ def _discover_sites(ir, shapes: Mapping) -> List[SiteInfo]:
                 continue
         return total
 
+    def gemm_dims(name):
+        """(m, n, k) for a gemm site — A.m, B.n, A.k — matching the
+        `tile_resolve(m, n, k)` lookup `make_tiled_callable.run` and
+        the standalone gemm dispatch perform at call time."""
+        ports = ir.graph.nodes[name].rdef.anchor_ports or {}
+        a = port_shapes.get((name, ports.get("mat", "A")))
+        b = port_shapes.get((name, ports.get("cols", "B")))
+        m = a[0] if a else fallback_n
+        k = a[1] if a is not None and len(a) > 1 else m
+        n = b[1] if b is not None and len(b) > 1 else k
+        return (m, n, k)
+
     sites = []
     for gi, g in enumerate(ir.groups or ()):
         if g.fused and len(g.nodes) >= 2:
             pattern = "+".join(ir.graph.nodes[n].blas for n in g.nodes)
             if g.anchor:
-                dims = matrix_dims(g.anchor) or (fallback_n, fallback_n)
                 family = _site_family(ir.graph.nodes[g.anchor])
+                if family == "gemm":
+                    dims = gemm_dims(g.anchor)
+                else:
+                    dims = matrix_dims(g.anchor) or (fallback_n,
+                                                     fallback_n)
             else:
                 dims, family = (fallback_n,), "l1"
             sites.append(SiteInfo(
@@ -176,12 +192,10 @@ def _discover_sites(ir, shapes: Mapping) -> List[SiteInfo]:
             family = _site_family(rspec)
             if family == "l1":
                 dims = (fallback_n,)
+            elif rspec.blas == "gemm":
+                dims = gemm_dims(name)
             else:
                 dims = matrix_dims(name) or (fallback_n, fallback_n)
-                if rspec.blas == "gemm":
-                    b = matrix_dims(name)
-                    dims = (dims[0], dims[1],
-                            dims[1] if b is None else b[1])
             sites.append(SiteInfo(
                 site=f"g{gi}:{name}", pattern=rspec.blas,
                 family=family, dims=dims,

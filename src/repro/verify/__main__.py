@@ -15,7 +15,7 @@ from repro import verify
 
 
 def _shipped():
-    """All shipped specs: the four solver loop programs plus the
+    """All shipped specs: the five solver loop programs plus the
     canonical single-routine spec for every registered routine."""
     from repro.blas import functional
     from repro.core import routines as R
@@ -24,7 +24,8 @@ def _shipped():
     out = [("CG_LOOP", solver_specs.CG_LOOP),
            ("JACOBI_LOOP", solver_specs.JACOBI_LOOP),
            ("BICGSTAB_LOOP", solver_specs.BICGSTAB_LOOP),
-           ("GMRES_LOOP", solver_specs.GMRES_LOOP)]
+           ("GMRES_LOOP", solver_specs.GMRES_LOOP),
+           ("BLOCK_CG_LOOP", solver_specs.BLOCK_CG_LOOP)]
     out += [(f"routine:{name}", functional.routine_spec(name))
             for name in R.names()]
     return out

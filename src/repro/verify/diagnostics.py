@@ -58,8 +58,9 @@ CATALOG = {
     "RV403": "duplicate slot store",
     "RV500": "malformed guards section",
     "RV501": "unknown guard target",
-    "RV502": "breakdown guard target not scalar",
+    "RV502": "breakdown guard target not scalar or vector",
     "RV503": "guard parameter out of range",
+    "RV504": "matrix state shape mismatch",
 }
 
 

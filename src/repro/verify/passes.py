@@ -342,11 +342,49 @@ def _expr_safety(expr, path, nonneg, sink) -> None:
     rec(expr.ast)
 
 
+# routines whose outputs are nonnegative by construction (|.| sums,
+# maxima, norms) — their published names seed the sqrt-safety proof
+_NONNEG_ROUTINES = frozenset({"nrm2", "asum", "amax"})
+
+
+def _nonneg_program_outputs(cs) -> frozenset:
+    """Outer env names a program stage provably publishes as
+    nonnegative: outputs of absolute-value reductions, plus coldot
+    Gram diagonals whose two panel ports bind the same value (a sum
+    of squares, e.g. block-CG's diag(RᵀR))."""
+    ir = cs.ir
+    if ir is None or ir.graph is None:
+        return frozenset()
+    graph = ir.graph
+    out = set()
+    for po in graph.outputs:
+        rspec = graph.nodes.get(po.routine)
+        if rspec is None:
+            continue
+        ok = rspec.blas in _NONNEG_ROUTINES
+        if not ok and rspec.blas == "coldot":
+            srcs = []
+            for port in ("x", "y"):
+                e = graph.producer_of(po.routine, port)
+                if e is not None:
+                    srcs.append(("edge", e.src, e.src_port))
+                else:
+                    pub = rspec.input_aliases.get(
+                        port, f"{po.routine}.{port}")
+                    srcs.append(("input", cs.inputs.get(pub, pub)))
+            ok = srcs[0] == srcs[1]
+        if ok:
+            out.add(cs.outputs.get(po.name, po.name))
+    return frozenset(out)
+
+
 def _safety_walk(cstages, nonneg: frozenset, prefix, sink) -> frozenset:
     for i, cs in enumerate(cstages):
         where = f"{prefix}[{i}]"
         st = cs.stage
-        if cs.tag == "let":
+        if cs.tag == "program":
+            nonneg = nonneg | _nonneg_program_outputs(cs)
+        elif cs.tag == "let":
             for name, expr in st.bindings:
                 _expr_safety(expr, f"{where}.{name}", nonneg, sink)
                 if is_nonneg(expr.ast, nonneg):
@@ -482,6 +520,22 @@ def _window_bytes(rspec, itemsize: int) -> int:
     return total
 
 
+def _group_scratch_bytes(graph, g) -> int:
+    """f32 accumulator scratch the anchored-group kernel allocates on
+    top of its operand windows: a (w, 1) column for the 1-D anchors
+    (gemv/gemvt/symv), a full (w, w) output tile for a 2-D (gemm)
+    anchor — the level-3 tile is the dominant VMEM term and must be
+    priced or an oversized (bm, bn) choice passes verification and
+    fails at launch."""
+    if g.anchor is None:
+        return 0
+    rspec = graph.nodes[g.anchor]
+    w = rspec.window_size
+    if fusion._is_2d_anchor(rspec.rdef):
+        return w * w * 4
+    return w * 4
+
+
 def _check_vmem_budget(spec: ProgramSpec, graph, sink, *,
                        mode: str) -> None:
     if graph.order is None:
@@ -497,6 +551,7 @@ def _check_vmem_budget(spec: ProgramSpec, graph, sink, *,
     for g in graph_groups_sorted(groups):
         total = sum(_window_bytes(graph.nodes[n], itemsize)
                     for n in g.nodes)
+        total += _group_scratch_bytes(graph, g)
         if total <= budget // 2:
             continue
         ri = min(index.get(n, 0) for n in g.nodes)

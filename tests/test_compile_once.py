@@ -86,6 +86,23 @@ def test_recompile_hits_lowering_cache(name):
     assert exe.trace_count == 1
 
 
+def test_block_cg_loop_body_traces_once():
+    """The matrix-state loop spec rides the same single-trace driver:
+    a whole block solve (s right-hand sides) traces its gemm-anchored
+    body exactly once."""
+    s = 3
+    B = jax.random.normal(jax.random.PRNGKey(2), (N, s), jnp.float32)
+    ops = {"A": _spd(N), "B": B,
+           "x0": jnp.zeros((N, s), jnp.float32)}
+    exe = blas.compile(specs.BLOCK_CG_LOOP, max_iters=4)
+    res = exe.run(tol=0.0, **ops)
+    assert res.x.shape == (N, s)
+    assert int(res.iterations) == 4
+    assert exe.trace_count == 1
+    exe.run(tol=0.0, **ops)
+    assert exe.trace_count == 1
+
+
 def test_guarded_and_faulted_compiles_trace_once():
     """The in-loop guards compile into the same single body trace —
     no retrace from the status plumbing — and a fault-armed compile

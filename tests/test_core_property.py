@@ -201,3 +201,56 @@ def test_v2_loop_builder_roundtrip_is_digest_lossless(spec):
     canon = spec_mod.unparse_loop(spec_mod.parse_loop(spec))
     recanon = spec_mod.unparse_loop(spec_mod.parse_loop(canon))
     assert recanon == canon
+
+
+@st.composite
+def random_gemm_anchored_spec(draw):
+    """A gemm anchor with a random tile epilogue: optionally a
+    per-column axpy (colaxpy) consuming the accumulator panel,
+    optionally a column-dot reduction at the end. The 2-D anchored
+    shape the level-3 tile generator must keep semantics-preserving
+    for any scalars and (unaligned) panel shapes."""
+    alpha = draw(st.floats(-2.0, 2.0, allow_nan=False, width=32))
+    beta = draw(st.floats(-2.0, 2.0, allow_nan=False, width=32))
+    routines = [{"blas": "gemm", "name": "mm",
+                 "scalars": {"alpha": alpha, "beta": beta},
+                 "inputs": {"A": "A", "B": "B", "C": "C0"},
+                 "outputs": {"out": "Q"}}]
+    if draw(st.booleans()):
+        routines[-1]["connections"] = {"out": "up.x"}
+        routines.append({"blas": "colaxpy", "name": "up",
+                         "inputs": {"a": "al", "y": "Y0"},
+                         "outputs": {"out": "R"}})
+    if draw(st.booleans()):
+        routines[-1]["connections"] = {"out": ["cd.x", "cd.y"]}
+        routines.append({"blas": "coldot", "name": "cd",
+                         "outputs": {"out": "rz"}})
+    return {"dtype": "float32", "routines": routines}
+
+
+@given(spec=random_gemm_anchored_spec(),
+       m=st.sampled_from([64, 257, 513]),
+       k=st.sampled_from([64, 300]),
+       s=st.sampled_from([1, 3, 8]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_gemm_anchored_fusion_is_semantics_preserving(spec, m, k, s,
+                                                      seed):
+    progs = {md: Program.from_spec(spec, mode=md)
+             for md in ("dataflow", "nodataflow", "reference")}
+    key = jax.random.PRNGKey(seed)
+    shapes = {"A": (m, k), "B": (k, s), "C0": (m, s), "Y0": (m, s),
+              "al": (s,)}
+    inputs = {}
+    for i, name in enumerate(sorted(progs["dataflow"].input_names)):
+        inputs[name] = jax.random.uniform(
+            jax.random.fold_in(key, i), shapes[name],
+            minval=-1.0, maxval=1.0)
+    outs = {md: p(**inputs) for md, p in progs.items()}
+    for out_name in progs["dataflow"].output_names:
+        b = np.asarray(outs["reference"][out_name], np.float64)
+        scale = max(1.0, float(np.abs(b).max()) if b.size else 1.0)
+        for md in ("dataflow", "nodataflow"):
+            a = np.asarray(outs[md][out_name], np.float64)
+            np.testing.assert_allclose(a, b, rtol=1e-3,
+                                       atol=1e-3 * scale)

@@ -1,0 +1,337 @@
+"""Level-3 anchored fusion: gemm anchors with 2-D (bm, bn) output
+tiles, the gemvt anchored tier, and block-CG riding the machinery.
+
+Covers the tentpole invariants:
+  * gemm is a legal anchor: a gemm -> tile-eltwise -> column-reduction
+    chain plans as ONE anchored group and launches a SINGLE
+    pallas_call in dataflow mode (counted, not inferred);
+  * fused (dataflow) == unfused (nodataflow) == reference numerically
+    for gemm-anchored groups, including epilogues with their own
+    public matrix operands;
+  * gemvt gets its own anchored tier;
+  * lowering the block-CG stage programs emits `codegen.group` events
+    whose anchored group carries the gemm anchor (the acceptance
+    criterion for BLOCK_CG_LOOP's fused body);
+  * the cost model does not double-count matrix streams for anchored
+    gemm groups (hand-computed byte regression);
+  * `blas.block_cg` matches per-column `np.linalg.solve`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.blas as blas
+from repro import obs
+from repro.core import Program, lowering
+from repro.core.lowering import lower
+from repro.kernels.common import pl
+from repro.solvers import specs
+
+MODES = ("dataflow", "nodataflow", "reference")
+
+
+def _mat(m, n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, n),
+                             jnp.float32)
+
+
+def _vec(n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+
+
+def _spd(n, seed=0):
+    rng = np.random.default_rng(seed)
+    m = rng.standard_normal((n, n)).astype(np.float32)
+    return jnp.asarray(m @ m.T + n * np.eye(n, dtype=np.float32))
+
+
+# gemm anchor -> per-column axpy epilogue (with its OWN public matrix
+# operand) -> column-dot reduction: the canonical level-3 shape
+GEMM_COLAXPY_COLDOT = {
+    "name": "gemm_colaxpy_coldot",
+    "routines": [
+        {"blas": "gemm", "name": "mm",
+         "scalars": {"alpha": 1.0, "beta": 0.0},
+         "inputs": {"A": "A", "B": "B", "C": "C0"},
+         "connections": {"out": "up.x"}, "outputs": {"out": "Q"}},
+        {"blas": "colaxpy", "name": "up",
+         "inputs": {"a": "alphas", "y": "Y0"},
+         "connections": {"out": ["cd.x", "cd.y"]},
+         "outputs": {"out": "R"}},
+        {"blas": "coldot", "name": "cd", "outputs": {"out": "rz"}},
+    ],
+}
+
+# gemvt (x rides the ROWS: out = alpha A^T x + beta y) -> scal -> nrm2
+GEMVT_SCAL_NRM2 = {
+    "name": "gemvt_scal_nrm2",
+    "routines": [
+        {"blas": "gemvt", "name": "mv",
+         "scalars": {"alpha": 1.0, "beta": 1.0},
+         "inputs": {"A": "A", "x": "x", "y": "y0"},
+         "connections": {"out": "sc.x"}, "outputs": {"out": "q"}},
+        {"blas": "scal", "name": "sc", "scalars": {"alpha": -0.5},
+         "connections": {"out": "nn.x"}, "outputs": {"out": "w"}},
+        {"blas": "nrm2", "name": "nn", "outputs": {"out": "wnorm"}},
+    ],
+}
+
+
+class _PallasCallCounter:
+    """Counts pl.pallas_call invocations (generated kernels actually
+    launched/traced) during a block."""
+
+    def __init__(self, monkeypatch):
+        self.count = 0
+        real = pl.pallas_call
+
+        def counting(*args, **kwargs):
+            self.count += 1
+            return real(*args, **kwargs)
+
+        monkeypatch.setattr(pl, "pallas_call", counting)
+
+
+def _gemm_chain_inputs(m, k, s, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {
+        "A": jax.random.normal(key, (m, k), jnp.float32),
+        "B": jax.random.normal(jax.random.fold_in(key, 1), (k, s),
+                               jnp.float32),
+        "C0": jnp.zeros((m, s), jnp.float32),
+        "Y0": jax.random.normal(jax.random.fold_in(key, 2), (m, s),
+                                jnp.float32),
+        "alphas": jax.random.normal(jax.random.fold_in(key, 3), (s,),
+                                    jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Planner structure
+# ---------------------------------------------------------------------------
+
+
+def test_gemm_chain_plans_one_anchored_group():
+    ir = lower(GEMM_COLAXPY_COLDOT, upto="fuse")
+    assert len(ir.groups) == 1
+    g = ir.groups[0]
+    assert g.fused and g.anchor == "mm"
+    assert g.nodes == ["mm", "up", "cd"]
+    assert ir.graph.nodes["mm"].rdef.name == "gemm"
+
+
+def test_gemvt_chain_plans_one_anchored_group():
+    ir = lower(GEMVT_SCAL_NRM2, upto="fuse")
+    assert len(ir.groups) == 1
+    assert ir.groups[0].nodes == ["mv", "sc", "nn"]
+    assert ir.groups[0].anchor == "mv"
+
+
+def test_block_cg_stage_programs_plan_gemm_anchors():
+    """The block-CG body's matvec and the residual both fuse around
+    their gemm; the column-dot epilogue rides inside the tile group."""
+    for spec, anchor, members in (
+            (specs.BLOCK_CG_MATVEC, "mv", ["mv", "pq"]),
+            (specs.BLOCK_RESIDUAL, "resid", ["resid", "rz"])):
+        ir = lower(spec, upto="fuse")
+        by_nodes = {tuple(g.nodes): g for g in ir.groups}
+        assert tuple(members) in by_nodes, ir.groups
+        g = by_nodes[tuple(members)]
+        assert g.fused and g.anchor == anchor
+        assert ir.graph.nodes[anchor].rdef.name == "gemm"
+
+
+def test_nodataflow_mode_never_anchors_gemm():
+    ir = lower(GEMM_COLAXPY_COLDOT, mode="nodataflow", upto="fuse")
+    assert len(ir.groups) == 3
+    assert all(g.anchor is None and not g.fused for g in ir.groups)
+
+
+# ---------------------------------------------------------------------------
+# Kernel count: the gemm-anchored chain launches exactly ONE pallas_call
+# ---------------------------------------------------------------------------
+
+
+def test_gemm_chain_single_pallas_call(monkeypatch):
+    prog = Program.from_spec(GEMM_COLAXPY_COLDOT)
+    m, k, s = 300, 190, 6
+    inputs = _gemm_chain_inputs(m, k, s, seed=4)
+    counter = _PallasCallCounter(monkeypatch)
+    out = prog(**inputs)
+    assert counter.count == 1
+    q = np.asarray(inputs["A"], np.float64) @ \
+        np.asarray(inputs["B"], np.float64)
+    r = np.asarray(inputs["Y0"], np.float64) \
+        + q * np.asarray(inputs["alphas"], np.float64)
+    np.testing.assert_allclose(out["Q"], q, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(out["R"], r, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(out["rz"], np.sum(r * r, axis=0),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_block_cg_matvec_single_kernel(monkeypatch):
+    """q = A P ; pq = diag(P^T Q): one anchored tile kernel in
+    dataflow mode, even though P feeds both the gemm and the
+    column-dot (the duplicate stream reads once)."""
+    prog = Program.from_spec(specs.BLOCK_CG_MATVEC)
+    n, s = 170, 5
+    a, p = _spd(n, 6), _mat(n, s, 7)
+    counter = _PallasCallCounter(monkeypatch)
+    out = prog(A=a, P=p)
+    assert counter.count == 1
+    q = np.asarray(a, np.float64) @ np.asarray(p, np.float64)
+    np.testing.assert_allclose(out["q"], q, rtol=1e-4,
+                               atol=1e-2 * max(1.0, np.abs(q).max()))
+    np.testing.assert_allclose(
+        out["pq"], np.sum(np.asarray(p, np.float64) * q, axis=0),
+        rtol=1e-3, atol=1e-2 * max(1.0, np.abs(q).max()))
+
+
+# ---------------------------------------------------------------------------
+# Numerical equivalence across all three modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,s", [(64, 64, 4), (257, 96, 3),
+                                   (513, 300, 8)])
+def test_gemm_chain_mode_equivalence(m, k, s):
+    inputs = _gemm_chain_inputs(m, k, s, seed=8)
+    outs = {md: Program.from_spec(GEMM_COLAXPY_COLDOT, mode=md)(**inputs)
+            for md in MODES}
+    for name in ("Q", "R", "rz"):
+        ref = np.asarray(outs["reference"][name], np.float64)
+        scale = max(1.0, float(np.abs(ref).max()))
+        for md in ("dataflow", "nodataflow"):
+            np.testing.assert_allclose(
+                np.asarray(outs[md][name], np.float64), ref,
+                rtol=1e-4, atol=1e-3 * scale)
+
+
+@pytest.mark.parametrize("m,n", [(128, 128), (391, 133)])
+def test_gemvt_chain_mode_equivalence(m, n):
+    inputs = dict(A=_mat(m, n, 9), x=_vec(m, 10), y0=_vec(n, 11))
+    outs = {md: Program.from_spec(GEMVT_SCAL_NRM2, mode=md)(**inputs)
+            for md in MODES}
+    for name in ("q", "w", "wnorm"):
+        ref = np.asarray(outs["reference"][name], np.float64)
+        scale = max(1.0, float(np.abs(ref).max()))
+        for md in ("dataflow", "nodataflow"):
+            np.testing.assert_allclose(
+                np.asarray(outs[md][name], np.float64), ref,
+                rtol=1e-4, atol=1e-3 * scale)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: block-CG lowers with a gemm-anchored fused body
+# ---------------------------------------------------------------------------
+
+
+def test_block_cg_loop_emits_gemm_anchored_group_event():
+    """Compiling BLOCK_CG_LOOP must produce at least one
+    codegen.group event whose anchored group is anchored on a gemm
+    routine — the level-3 acceptance criterion."""
+    lowering.clear_cache()   # events fire on lowering-cache misses
+    with obs.capture() as reg:
+        blas.compile(specs.BLOCK_CG_LOOP, max_iters=4)
+        events = [r for r in reg.records
+                  if r["kind"] == "event"
+                  and r["name"] == "codegen.group"]
+    anchored = [e for e in events if e["attrs"]["kind"] == "anchored"]
+    assert anchored, events
+    gemm_anchored = [
+        e for e in anchored
+        if e["attrs"]["program"] in ("block_cg_matvec",
+                                     "block_residual")
+        and e["attrs"]["anchor"] in ("mv", "resid")]
+    assert gemm_anchored, anchored
+
+
+# ---------------------------------------------------------------------------
+# Cost model: no double-counted matrix streams in 2-D anchored groups
+# ---------------------------------------------------------------------------
+
+
+def test_block_cg_matvec_cost_model_hand_computed():
+    """Byte regression for the anchored gemm group, hand-computed.
+
+    Naive (per call, f32):
+      gemm  A(n,n) + B(n,s) + C(n,s) + out(n,s)  = (n^2 + 3ns) * 4
+      coldot x(n,s) + y(n,s) + out(s)            = (2ns + s) * 4
+    Fused group {mv, pq}: the internal q edge keeps its write+read
+    on-chip (2ns*4) and pq's two panel reads collapse onto streams
+    already in the tile (x=P duplicates the gemm's B stream, y=q is
+    internal), so
+      fused_savings       = 4ns * 4   (round-trip convention)
+      fused_savings_exact = 3ns * 4   (q is public: its write still
+                                       issues once)
+      matrix_bytes        = (n^2 + 2ns) * 4   (A + B/C shared panel
+                            streams; no double count of P)
+    """
+    n, s = 256, 8
+    rep = blas.compile(specs.BLOCK_CG_MATVEC).cost_report(
+        {"A": (n, n), "P": (n, s)})
+    f = 4
+    assert rep.bytes_naive == (n * n + 3 * n * s) * f \
+        + (2 * n * s + s) * f
+    assert rep.fused_savings == 4 * n * s * f
+    assert rep.fused_savings_exact == 3 * n * s * f
+    assert rep.matrix_bytes == (n * n + 2 * n * s) * f
+    assert rep.bytes == rep.bytes_naive - rep.fused_savings
+    # the unfused schedule has no savings and the same matrix pool
+    # EXCEPT the duplicate-panel credit (it really streams P twice)
+    unf = blas.compile(specs.BLOCK_CG_MATVEC,
+                       mode="nodataflow").cost_report(
+        {"A": (n, n), "P": (n, s)})
+    assert unf.fused_savings == 0
+    assert unf.bytes == rep.bytes_naive
+    assert unf.matrix_bytes == (n * n + 2 * n * s) * f \
+        + rep.fused_savings_exact
+
+
+def test_block_cg_body_bytes_beat_vmapped_cg():
+    """The level-3 story in one assertion: per iteration, block-CG
+    streams the matrix once; s vmapped CG lanes stream it s times."""
+    n, s = 512, 8
+    block = blas.compile(specs.BLOCK_CG_LOOP).cost_report(
+        {"A": (n, n), "B": (n, s), "x0": (n, s)})
+    cg = blas.compile(specs.CG_LOOP).cost_report(
+        {"A": (n, n), "b": n, "x0": n})
+    assert block.bytes < cg.bytes * s
+    assert block.matrix_bytes < cg.matrix_bytes * s
+
+
+# ---------------------------------------------------------------------------
+# block-CG end to end
+# ---------------------------------------------------------------------------
+
+
+def test_block_cg_matches_dense_solve_per_column():
+    n, s = 48, 3
+    a = _spd(n, 12)
+    B = _mat(n, s, 13)
+    res = blas.block_cg(a, B, tol=1e-8)
+    assert res.x.shape == (n, s)
+    assert bool(res.converged)
+    want = np.linalg.solve(np.asarray(a, np.float64),
+                           np.asarray(B, np.float64))
+    np.testing.assert_allclose(np.asarray(res.x), want,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_block_cg_iterates_match_vmapped_cg():
+    """Block-CG is s independent CG recurrences sharing one matvec:
+    after a FIXED iteration budget the panel columns must equal the
+    per-column vmapped CG iterates, not just the converged limits."""
+    n, s, iters = 40, 4, 6
+    a = _spd(n, 14)
+    B = _mat(n, s, 15)
+    eb = blas.compile(specs.BLOCK_CG_LOOP, max_iters=iters)
+    ec = blas.compile(specs.CG_LOOP, max_iters=iters)
+    rb = eb.run(A=a, B=B, x0=jnp.zeros_like(B), tol=0.0)
+    rc = ec.batched(A=a, b=jnp.transpose(B),
+                    x0=jnp.zeros((s, n), jnp.float32), tol=0.0)
+    assert int(rb.iterations) == iters
+    np.testing.assert_allclose(np.asarray(rb.x),
+                               np.asarray(rc.x).T,
+                               rtol=1e-4, atol=1e-5)

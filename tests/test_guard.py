@@ -277,17 +277,23 @@ def test_recovery_error_carries_attempts():
 # -- verify diagnostics (RV5xx) ---------------------------------------------
 
 
-@pytest.mark.parametrize("mutate,code", [
-    (lambda g: g.__setitem__("bogus", {}), "RV500"),
-    (lambda g: g.__setitem__("nonfinite", ["no_such_name"]), "RV501"),
-    (lambda g: g.__setitem__("breakdown",
-                             [{"value": "q", "below": 1e-30}]),
-     "RV502"),
-    (lambda g: g.__setitem__("divergence", {"factor": 0.5}), "RV503"),
-    (lambda g: g.__setitem__("stagnation", {"window": 0}), "RV503"),
+# breakdown values may be scalars or vectors (per-right-hand-side
+# sentinels like block-CG's Gram diagonal) but never matrices — the
+# RV502 row watches block-CG's (n, s) matvec panel
+@pytest.mark.parametrize("base,mutate,code", [
+    ("cg", lambda g: g.__setitem__("bogus", {}), "RV500"),
+    ("cg", lambda g: g.__setitem__("nonfinite", ["no_such_name"]),
+     "RV501"),
+    ("block_cg", lambda g: g.__setitem__(
+        "breakdown", [{"value": "q", "below": 1e-30}]), "RV502"),
+    ("cg", lambda g: g.__setitem__("divergence", {"factor": 0.5}),
+     "RV503"),
+    ("cg", lambda g: g.__setitem__("stagnation", {"window": 0}),
+     "RV503"),
 ])
-def test_malformed_guards_get_rv5xx_diagnostics(mutate, code):
-    raw = copy.deepcopy(specs.CG_LOOP)
+def test_malformed_guards_get_rv5xx_diagnostics(base, mutate, code):
+    raw = copy.deepcopy(specs.CG_LOOP if base == "cg"
+                        else specs.BLOCK_CG_LOOP)
     mutate(raw["iterate"]["guards"])
     report = verify.analyze(raw)
     assert any(d.code == code and d.severity == "error"
@@ -296,7 +302,8 @@ def test_malformed_guards_get_rv5xx_diagnostics(mutate, code):
 
 def test_shipped_specs_verify_clean_with_guards():
     for raw in (specs.CG_LOOP, specs.JACOBI_LOOP,
-                specs.BICGSTAB_LOOP, specs.gmres_loop(8)):
+                specs.BICGSTAB_LOOP, specs.gmres_loop(8),
+                specs.BLOCK_CG_LOOP):
         assert raw["iterate"].get("guards")
         report = verify.analyze(raw)
         assert not report.errors, (raw["name"], report.errors)
@@ -378,7 +385,8 @@ def test_chaos_smoke_cli_importable():
     from repro.guard import __main__ as guard_main
     cases = guard_main._case_matrix()
     solvers = {c[0] for c in cases}
-    assert solvers == {"cg", "bicgstab", "jacobi", "gmres"}
+    assert solvers == {"cg", "bicgstab", "jacobi", "gmres",
+                       "block_cg"}
     kinds = {c[1] for c in cases}
     assert kinds == set(chaos.FAULT_KINDS)
 

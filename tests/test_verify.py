@@ -338,13 +338,23 @@ def test_rv403_duplicate_slot_store():
                   severity="warning")
 
 
+def test_rv504_matrix_state_feedback_mismatch():
+    """Feeding a scalar back into block-CG's (n, s) iterate panel is
+    the matrix-specific RV504, not the generic RV208 kind error."""
+    import copy
+
+    bad = copy.deepcopy(specs.BLOCK_CG_LOOP)
+    bad["iterate"]["feedback"]["x"] = bad["iterate"]["while"]["metric"]
+    _assert_fires(bad, "RV504", "iterate.feedback.x")
+
+
 def test_catalog_covers_every_emitted_code():
     assert set(verify.CATALOG) >= {
         "RV100", "RV101", "RV102", "RV103", "RV104", "RV105", "RV106",
         "RV107", "RV108", "RV109", "RV110", "RV111", "RV112", "RV201",
         "RV202", "RV203", "RV204", "RV205", "RV206", "RV207", "RV208",
         "RV209", "RV210", "RV211", "RV301", "RV302", "RV303", "RV401",
-        "RV402", "RV403"}
+        "RV402", "RV403", "RV504"}
 
 
 # ---------------------------------------------------------------------------
@@ -357,6 +367,7 @@ def test_catalog_covers_every_emitted_code():
     ("JACOBI_LOOP", specs.JACOBI_LOOP),
     ("BICGSTAB_LOOP", specs.BICGSTAB_LOOP),
     ("GMRES_LOOP", specs.GMRES_LOOP),
+    ("BLOCK_CG_LOOP", specs.BLOCK_CG_LOOP),
 ])
 def test_shipped_loop_specs_verify_clean(name, raw):
     report = verify.analyze(raw)
